@@ -1,0 +1,80 @@
+"""Shared benchmark machinery.
+
+Every figure module exposes run(scale) -> iterable of (name, us_per_call,
+derived) rows.  REPRO_BENCH_SCALE (default 0.12) sizes the synthetic
+datasets; the paper's 1-5M-triple runs correspond to scale 10-50 and are
+reproduced in EXPERIMENTS.md with the scales noted.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import make_engine, build_ni_index, Thresholds
+from repro.data import DATASETS, random_query
+
+BENCH_SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.12"))
+N_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "12"))
+
+VARIANTS = ["stwig+", "spath_ni2", "h2", "h3", "hvc"]
+
+_GRAPH_CACHE: dict = {}
+_NI_CACHE: dict = {}
+
+
+def get_graph(name: str, scale: float | None = None, seed: int = 1):
+    scale = BENCH_SCALE if scale is None else scale
+    key = (name, round(scale, 4), seed)
+    if key not in _GRAPH_CACHE:
+        _GRAPH_CACHE[key] = DATASETS[name](scale=scale, seed=seed)
+    return _GRAPH_CACHE[key]
+
+
+def get_ni(graph, d_max: int, variant: str = "full"):
+    key = (id(graph), d_max, variant)
+    if key not in _NI_CACHE:
+        _NI_CACHE[key] = build_ni_index(graph, d_max=d_max, variant=variant)
+    return _NI_CACHE[key]
+
+
+def engine_for(graph, variant: str, thresholds=None):
+    spec = {"stwig+": (1, "full"), "spath_ni2": (2, "full"),
+            "h2": (2, "full"), "h3": (3, "full"), "hvc": (2, "vc")}
+    d, var = spec[variant]
+    ni = get_ni(graph, d, var)
+    return make_engine(graph, variant, ni=ni,
+                       thresholds=thresholds or Thresholds(
+                           tau_iter=500, tau_join=1e5, tau_sel=6.0),
+                       impl="auto")
+
+
+def time_query(engine, query, warm: bool = True):
+    """Seconds for a warm run (2nd execution reuses jit caches)."""
+    if warm:
+        engine.execute(query)
+    t0 = time.perf_counter()
+    res = engine.execute(query)
+    return time.perf_counter() - t0, res
+
+
+def bench_queries(graph, queries, variants=VARIANTS, thresholds=None):
+    """Returns {variant: (mean_s, total_matches, mean_join_work)}."""
+    out = {}
+    for v in variants:
+        eng = engine_for(graph, v, thresholds)
+        times, matches, work = [], 0, 0
+        for q in queries:
+            t, res = time_query(eng, q)
+            times.append(t)
+            matches += res.count
+            work += res.stats.join_work + res.stats.dtree_work
+        out[v] = (float(np.mean(times)), matches, work / max(len(queries), 1))
+    return out
+
+
+def make_queries(graph, n=None, size=6, seed0=100, **kw):
+    n = N_QUERIES if n is None else n
+    return [random_query(graph, size=size, seed=seed0 + i, **kw)
+            for i in range(n)]

@@ -1,0 +1,37 @@
+"""Paper Fig. 4: query performance per technique per dataset
+(40 random size-6 queries in the paper; N_QUERIES here).
+
+Validates C1 (pruning not beneficial on LUBM-like, beneficial elsewhere)
+and C2 (the selective hybrid beats both always- and never-prune)."""
+from __future__ import annotations
+
+from .common import get_graph, make_queries, bench_queries, VARIANTS
+
+
+def run(scale=None):
+    from .common import engine_for, time_query
+    for name in ("lubm", "sp2b", "dblp", "imdb"):
+        g = get_graph(name, scale)
+        queries = make_queries(g, size=6)
+        res = bench_queries(g, queries)
+        base = res["stwig+"][0]
+        for v in VARIANTS:
+            mean_s, matches, work = res[v]
+            yield (f"fig4.{name}.{v}", mean_s * 1e6,
+                   round(mean_s / base, 3))
+        yield (f"fig4.{name}.matches", 0.0, res["h2"][1])
+        yield (f"fig4.{name}.work_stwig+", 0.0, int(res["stwig+"][2]))
+        yield (f"fig4.{name}.work_h2", 0.0, int(res["h2"][2]))
+        # check-phase overhead + pruning power of the always-check engine
+        eng = engine_for(g, "spath_ni2")
+        check_t, tot_t, before, after = 0.0, 0.0, 0, 0
+        for q in queries:
+            t, r = time_query(eng, q)
+            tot_t += t
+            check_t += r.stats.check_time
+            before += r.stats.candidates_before
+            after += r.stats.candidates_after
+        yield (f"fig4.{name}.check_share_pct", 0.0,
+               round(100 * check_t / max(tot_t, 1e-9), 2))
+        yield (f"fig4.{name}.prune_rate_pct", 0.0,
+               round(100 * (1 - after / max(before, 1)), 2))

@@ -1,0 +1,18 @@
+"""Paper Fig. 5: dataset scalability (DBLP at growing sizes, same query
+workload).  Validates C5a: the no-pruning baseline degrades fastest."""
+from __future__ import annotations
+
+from .common import get_graph, make_queries, bench_queries, BENCH_SCALE
+
+
+def run(scale=None):
+    base_scale = BENCH_SCALE if scale is None else scale
+    for mult in (0.5, 1.0, 2.0):
+        s = base_scale * mult
+        g = get_graph("dblp", s)
+        queries = make_queries(g, size=6)
+        res = bench_queries(g, queries,
+                            variants=["stwig+", "spath_ni2", "h2", "h3"])
+        for v, (mean_s, matches, work) in res.items():
+            yield (f"fig5.dblp_x{mult}.{v}", mean_s * 1e6,
+                   f"triples={g.num_edges}")

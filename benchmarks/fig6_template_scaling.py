@@ -1,0 +1,18 @@
+"""Paper Fig. 6: query-template scalability (sizes 4/6/8 on DBLP).
+Validates C5b: pruning benefit grows with template size."""
+from __future__ import annotations
+
+from .common import get_graph, make_queries, bench_queries
+
+
+def run(scale=None):
+    g = get_graph("dblp", scale)
+    for size in (4, 6, 8):
+        queries = make_queries(g, size=size, seed0=300 + size)
+        res = bench_queries(g, queries,
+                            variants=["stwig+", "spath_ni2", "h2", "h3",
+                                      "hvc"])
+        base = res["stwig+"][0]
+        for v, (mean_s, matches, work) in res.items():
+            yield (f"fig6.size{size}.{v}", mean_s * 1e6,
+                   round(mean_s / base, 3))

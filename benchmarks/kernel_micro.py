@@ -1,0 +1,41 @@
+"""Kernel micro-benchmarks: ref (jnp) implementations on CPU; the Pallas
+paths are validated in interpret mode by tests (timing them on CPU is
+meaningless)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warm/jit
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    np.asarray(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(scale=None):
+    rng = np.random.default_rng(0)
+    for c, b, j in ((1024, 64, 4), (8192, 128, 8), (32768, 256, 8)):
+        ids = np.sort(rng.integers(0, 1 << 20, (c, b)), 1).astype(np.int32)
+        lo = rng.integers(0, 1 << 19, j).astype(np.int32)
+        hi = lo + (1 << 18)
+        us = _time(lambda *a: ops.interval_count(*a, impl="ref"),
+                   ids, lo, hi)
+        yield (f"kernel.interval_count.c{c}b{b}j{j}", round(us, 1),
+               round(c * b * j / max(us, 1e-9), 1))
+    for c, w in ((4096, 8), (65536, 16)):
+        cand = rng.integers(0, 1 << 32, (c, w), dtype=np.uint32)
+        q = rng.integers(0, 1 << 32, w, dtype=np.uint32)
+        us = _time(lambda *a: ops.bitmask_contains(*a, impl="ref"), cand, q)
+        yield (f"kernel.bitmask.c{c}w{w}", round(us, 1), c)
+    for p, a, b in ((2048, 64, 64), (8192, 128, 128)):
+        x = rng.integers(-1, 1 << 20, (p, a)).astype(np.int32)
+        y = rng.integers(-1, 1 << 20, (p, b)).astype(np.int32)
+        us = _time(lambda *z: ops.intersect_any(*z, impl="ref"), x, y)
+        yield (f"kernel.intersect.p{p}", round(us, 1), p * a * b)

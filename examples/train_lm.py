@@ -1,0 +1,70 @@
+"""End-to-end training driver: train a reduced-config model for a few
+hundred steps on the deterministic synthetic pipeline, with checkpointing
+and restart.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-0.5b --steps 200
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-0.5b --resume
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced_config
+from repro.configs.base import TrainConfig
+from repro.data.lm_data import TokenPipeline
+from repro.checkpoint import Checkpointer
+from repro.models import api
+from repro.optim import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced_config(ARCHS[args.arch], num_layers=4)
+    tcfg = TrainConfig(lr=1e-3, warmup=20, total_steps=args.steps,
+                       microbatch=1)
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=0)
+    step_fn = jax.jit(api.make_train_step(cfg, tcfg))
+    ck = Checkpointer(args.ckpt_dir)
+
+    params = api.init_model(cfg, seed=0)
+    opt = adamw_init(params)
+    start = 0
+    if args.resume and ck.latest_step() is not None:
+        state, meta = ck.restore(template={"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        start = meta["step"] + 1
+        print(f"resumed from step {meta['step']} "
+              f"(config hash {meta.get('config')})")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        b = pipe.global_batch_at(i)
+        params, opt, m = step_fn(params, opt,
+                                 {"tokens": b["tokens"],
+                                  "labels": b["labels"]}, i)
+        if i % 20 == 0 or i == args.steps - 1:
+            toks = args.batch * args.seq * (i - start + 1)
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"tok/s={toks/(time.time()-t0):,.0f}")
+        if i and i % args.ckpt_every == 0:
+            ck.save(i, {"params": params, "opt": opt},
+                    meta={"step": i, "config": cfg.config_hash()})
+    ck.wait()
+    print("done; checkpoints:", ck.all_steps())
+
+
+if __name__ == "__main__":
+    main()

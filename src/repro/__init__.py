@@ -1,0 +1,3 @@
+"""repro: RDF-ℏ (selective signature-based pruning for RDF template
+matching) embedded in a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

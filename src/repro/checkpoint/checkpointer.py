@@ -1,0 +1,142 @@
+"""Async, atomic, resharding-tolerant checkpointing.
+
+Design for 1000+ nodes (adapted to this container's single host):
+  * save is ASYNC: arrays are device_get'd, then written on a background
+    thread so the train loop keeps stepping;
+  * atomic commit: write to `step_<n>.tmp/`, fsync, rename to `step_<n>/`
+    — a crash mid-write never corrupts the latest checkpoint;
+  * integrity: every leaf gets a crc32 recorded in the manifest, verified
+    on restore;
+  * resharding: checkpoints store GLOBAL arrays keyed by pytree path, so a
+    restart may use a different mesh shape (elastic) — restore just
+    device_puts with the new shardings;
+  * retention: keep the last `keep` checkpoints.
+
+On a real multi-host pod each host would write only the shards it owns
+(process-local addressable shards) under the same manifest scheme; the
+single-host writer here is the degenerate case of that layout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree, meta: dict | None = None,
+             async_: bool = True):
+        flat, _ = _flatten(tree)
+        # device_get NOW (so training may mutate buffers afterwards)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+
+        def write():
+            tmp = self.dir / f"step_{step:010d}.tmp"
+            final = self.dir / f"step_{step:010d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+            for k, arr in host.items():
+                fname = k.replace("/", "__") + ".npy"
+                np.save(tmp / fname, arr)
+                manifest["leaves"][k] = {
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+                }
+            with open(tmp / "manifest.json", "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        self.wait()
+        if async_:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") \
+                    and not p.name.endswith(".tmp"):
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, *, template=None,
+                shardings=None, verify: bool = True):
+        """Returns (tree, meta).  With `template` (a pytree of anything with
+        the target structure), leaves are re-assembled into that structure;
+        otherwise a flat {path: array} dict is returned.  `shardings` (same
+        structure) device_puts each leaf — this is where elastic restarts
+        reshard."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {}
+        for k, info in manifest["leaves"].items():
+            arr = np.load(d / info["file"])
+            if verify:
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != info["crc32"]:
+                    raise IOError(f"checksum mismatch for {k} at step {step}")
+            flat[k] = arr
+        if template is None:
+            return flat, manifest["meta"]
+        tflat, treedef = _flatten(template)
+        missing = set(tflat) - set(flat)
+        if missing:
+            raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
+        leaves = [flat[k] for k in tflat]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, manifest["meta"]

@@ -1,0 +1,17 @@
+"""RDF-ℏ core: the paper's contribution as a composable JAX library."""
+from .graph import RDFGraph, IDMap, RESOURCE, LITERAL, REL, ATTR
+from .ni_index import NIIndex, NIEntry, build_ni_index, vertex_cover_2approx
+from .query import QueryTemplate, QueryEdge, ConnectionEdge, brute_force_match
+from .signature import build_requirements, check_interval_candidates
+from .decompose import DTree, decompose, join_order
+from .matching import Table, join_tables, cross_join, edge_pairs, \
+    dtree_candidates, CapacityOverflow
+from .connectivity import (connectivity_mask, reach_sets,
+    connectivity_mask_vectorized, enumerate_shortest_paths,
+    instantiate_connections)
+from .stats import DatasetStats, compute_stats, predicate_selectivity, \
+    literal_selectivity, coherence, relationship_specialty, literal_diversity
+from .planner import Thresholds, PlanDecision, decide, \
+    neighborhood_selectivity, tune_thresholds
+from .engine import Engine, EngineConfig, MatchResult, make_engine
+from .distributed import shard_check, gather_candidates

@@ -1,0 +1,260 @@
+"""Connection-edge evaluation (paper Algorithm 3).
+
+For a pair (n_i, n_j) with distance constraint d_c: n_i's forward reach set
+within ceil(d_c/2) hops must intersect n_j's backward reach set within
+d_c - ceil(d_c/2) hops (both include the node itself at distance 0, which
+the paper leaves implicit but is required for odd splits and direct edges).
+
+Reach sets come from the NI index.  When the required hop count exceeds the
+index's d_max, reach sets are expanded one hop at a time through distance-1
+entries — this is exactly the expensive path the paper measures in §6.3
+(1-hop index: 92% of query time; 3-hop: 3.6%).
+
+Exactness: unlike the neighborhood *check*, connectivity decides final
+results, so truncation cannot be tolerated — any overflowed row falls back
+to an exact host-side BFS.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .graph import RDFGraph
+from .ni_index import NIIndex
+from ..kernels import ops
+
+
+def _gather_reach(ni: NIIndex, nodes: np.ndarray, hops: int, sign: int):
+    """Reach ids within <= min(hops, d_max) via direct NI gathers.
+
+    Returns (ids [P, R], overflow [P], frontier_ids [P, F] at exactly d_max
+    or None if hops <= d_max)."""
+    parts = [nodes[:, None].astype(np.int32)]          # distance 0: self
+    overflow = np.zeros(len(nodes), dtype=bool)
+    d_use = min(hops, ni.d_max)
+    for d in range(1, d_use + 1):
+        e = ni.entries[sign * d]
+        parts.append(e.ids[nodes])
+        overflow |= e.overflow[nodes]
+    ids = np.concatenate(parts, axis=1)
+    frontier = None
+    if hops > ni.d_max:
+        frontier = ni.entries[sign * ni.d_max].ids[nodes]
+    return ids, overflow, frontier
+
+
+def _dedup_rows(ids: np.ndarray, cap: int):
+    """Sort rows descending, null out duplicates, truncate to cap.
+
+    Returns (ids [P, <=cap], overflow [P]) — overflow true when valid
+    uniques exceeded cap (row then unusable for exact decisions)."""
+    s = np.sort(ids, axis=1)[:, ::-1]                  # desc: valid first
+    dup = np.zeros_like(s, dtype=bool)
+    dup[:, 1:] = s[:, 1:] == s[:, :-1]
+    s = np.where(dup, -1, s)
+    s = np.sort(s, axis=1)[:, ::-1]
+    counts = (s >= 0).sum(axis=1)
+    overflow = counts > cap
+    return s[:, :cap], overflow
+
+
+def reach_sets(ni: NIIndex, nodes: np.ndarray, hops: int, sign: int,
+               cap: int = 4096):
+    """All node ids within <= hops (sign=+1 forward, -1 backward), deduped.
+
+    Returns (ids [P, <=cap] int32 -1-padded, overflow [P] bool)."""
+    ids, overflow, frontier = _gather_reach(ni, nodes, hops, sign)
+    ids, of2 = _dedup_rows(ids, cap)
+    overflow |= of2
+    rem = hops - ni.d_max
+    e1 = ni.entries[sign * 1]
+    # bound the [p, slice, c1] expansion buffer to ~64M int32 (256MB)
+    while rem > 0 and frontier is not None:
+        p, f = frontier.shape
+        slice_w = max(1, (1 << 26) // max(e1.cap * p, 1))
+        new_frontier = np.full((p, 1), -1, np.int32)
+        for fs in range(0, f, slice_w):
+            blk = frontier[:, fs:fs + slice_w]                 # [p, w]
+            safe = np.maximum(blk, 0)
+            nxt = e1.ids[safe]                                 # [p, w, c1]
+            nxt = np.where(blk[:, :, None] >= 0, nxt, -1).reshape(p, -1)
+            overflow |= (e1.overflow[safe] & (blk >= 0)).any(axis=1)
+            new_frontier, off = _dedup_rows(
+                np.concatenate([new_frontier, nxt], axis=1), cap)
+            overflow |= off
+        frontier = new_frontier
+        ids, of3 = _dedup_rows(np.concatenate([ids, frontier], axis=1), cap)
+        overflow |= of3
+        rem -= 1
+    return ids, overflow
+
+
+def _bfs_within(graph: RDFGraph, start: int, hops: int, forward: bool) -> set:
+    indptr, nbr, _ = graph.out_csr if forward else graph.in_csr
+    seen = {int(start)}
+    frontier = [int(start)]
+    for _ in range(hops):
+        nxt = []
+        for u in frontier:
+            for v in nbr[indptr[u]:indptr[u + 1]]:
+                v = int(v)
+                if v not in seen:
+                    seen.add(v)
+                    nxt.append(v)
+        frontier = nxt
+    return seen
+
+
+def connectivity_mask(graph: RDFGraph, ni: NIIndex,
+                      a_nodes: np.ndarray, b_nodes: np.ndarray,
+                      d_c: int, bidirectional: bool = False,
+                      *, impl: str = "auto", chunk: int = 1024) -> np.ndarray:
+    """Exact mask[i] = exists directed path a->b (or b->a if bidirectional)
+    of length <= d_c."""
+    p = len(a_nodes)
+    out = np.zeros(p, dtype=bool)
+    h_fwd = -(-d_c // 2)            # ceil
+    h_bwd = d_c - h_fwd
+    if max(h_fwd, h_bwd) > ni.d_max:
+        # Index does not cover the needed hops (the paper's expensive
+        # case, §6.3).  On CPU the exact per-node BFS (memoized across
+        # pairs) beats the dense frontier expansion, which exists for the
+        # TPU-target path; cost is still dominated by traversal — exactly
+        # the effect the paper measures.
+        fwd_memo: dict[int, set] = {}
+        bwd_memo: dict[int, set] = {}
+        for i in range(p):
+            ai, bi = int(a_nodes[i]), int(b_nodes[i])
+            if ai not in fwd_memo:
+                fwd_memo[ai] = _bfs_within(graph, ai, h_fwd, True)
+            if bi not in bwd_memo:
+                bwd_memo[bi] = _bfs_within(graph, bi, h_bwd, False)
+            out[i] = bool(fwd_memo[ai] & bwd_memo[bi])
+        if bidirectional:
+            out |= connectivity_mask(graph, ni, b_nodes, a_nodes, d_c,
+                                     False, impl=impl, chunk=chunk)
+        return out
+
+    # Index covers the hops: reach sets are pure INDEX READS (no graph
+    # traversal) — the paper's fast case.  Memoized per node across pairs.
+    def reach_from_index(n: int, hops: int, sign: int) -> set:
+        s = {n}
+        for d in range(1, hops + 1):
+            e = ni.entries[sign * d]
+            if e.overflow[n]:
+                return _bfs_within(graph, n, hops, sign > 0)
+            row = e.ids[n]
+            s.update(int(x) for x in row[row >= 0])
+        return s
+
+    fwd_memo: dict[int, set] = {}
+    bwd_memo: dict[int, set] = {}
+    for i in range(p):
+        ai, bi = int(a_nodes[i]), int(b_nodes[i])
+        if ai not in fwd_memo:
+            fwd_memo[ai] = reach_from_index(ai, h_fwd, +1)
+        if bi not in bwd_memo:
+            bwd_memo[bi] = reach_from_index(bi, h_bwd, -1)
+        out[i] = bool(fwd_memo[ai] & bwd_memo[bi])
+    if bidirectional:
+        rev = connectivity_mask(graph, ni, b_nodes, a_nodes, d_c,
+                                False, impl=impl, chunk=chunk)
+        out |= rev
+    return out
+
+
+def connectivity_mask_vectorized(graph: RDFGraph, ni: NIIndex,
+                                 a_nodes: np.ndarray, b_nodes: np.ndarray,
+                                 d_c: int, *, impl: str = "auto",
+                                 chunk: int = 1024) -> np.ndarray:
+    """TPU-target form: batched reach-set gathers + intersect kernel.
+    Exactness guaranteed by BFS fallback on overflow rows."""
+    p = len(a_nodes)
+    out = np.zeros(p, dtype=bool)
+    h_fwd = -(-d_c // 2)
+    h_bwd = d_c - h_fwd
+    for s in range(0, p, chunk):
+        e = min(s + chunk, p)
+        a, b = a_nodes[s:e], b_nodes[s:e]
+        fa, ofa = reach_sets(ni, a, h_fwd, +1)
+        bb, ofb = reach_sets(ni, b, h_bwd, -1)
+        hit = np.asarray(ops.intersect_any(fa, bb, impl=impl), dtype=bool)
+        of = ofa | ofb
+        for i in np.nonzero(of)[0]:
+            fs = _bfs_within(graph, a[i], h_fwd, True)
+            bs = _bfs_within(graph, b[i], h_bwd, False)
+            hit[i] = bool(fs & bs)
+        out[s:e] = hit
+    return out
+
+
+def enumerate_shortest_paths(graph: RDFGraph, a: int, b: int, d_c: int,
+                             max_paths: int = 1000) -> list[list[int]]:
+    """Instantiate a connection edge: all SHORTEST directed paths a -> b of
+    length <= d_c (paper Fig. 2, final stage: "connection edges are
+    instantiated by enumerating all shortest paths").
+
+    BFS layers record every shortest-predecessor, then paths are rebuilt
+    by backtracking.  Returns [] if b is unreachable within d_c.
+    """
+    if a == b:
+        return [[a]]
+    indptr, nbr, _ = graph.out_csr
+    parents: dict[int, list[int]] = {}
+    dist = {a: 0}
+    frontier = [a]
+    found_at = None
+    for d in range(1, d_c + 1):
+        nxt = []
+        for u in frontier:
+            for v in nbr[indptr[u]:indptr[u + 1]]:
+                v = int(v)
+                if v not in dist:
+                    dist[v] = d
+                    parents[v] = [u]
+                    nxt.append(v)
+                elif dist[v] == d:
+                    parents[v].append(u)
+        if b in dist:
+            found_at = d
+            break
+        frontier = nxt
+    if found_at is None:
+        return []
+
+    paths: list[list[int]] = []
+
+    def back(node, suffix):
+        if len(paths) >= max_paths:
+            return
+        if node == a:
+            paths.append([a] + suffix)
+            return
+        for p in parents.get(node, ()):
+            back(p, [node] + suffix)
+
+    back(b, [])
+    return paths
+
+
+def instantiate_connections(graph: RDFGraph, result, query,
+                            max_paths: int = 16) -> list[dict]:
+    """For each match row, enumerate the shortest paths realizing every
+    connection edge.  Returns one dict per row:
+    {(src_q, dst_q): [path, ...], ...}."""
+    out = []
+    col_of = {c: i for i, c in enumerate(result.cols)}
+    for row in result.rows:
+        inst = {}
+        for c in query.connections:
+            pa = enumerate_shortest_paths(
+                graph, int(row[col_of[c.src]]), int(row[col_of[c.dst]]),
+                c.max_dist, max_paths)
+            if not pa and c.bidirectional:
+                pa = enumerate_shortest_paths(
+                    graph, int(row[col_of[c.dst]]),
+                    int(row[col_of[c.src]]), c.max_dist, max_paths)
+            inst[(c.src, c.dst)] = pa
+        out.append(inst)
+    return out

@@ -1,0 +1,301 @@
+"""RDF-ℏ query engine (paper Fig. 2 pipeline).
+
+Pipeline per query: separate connection edges → IDMap candidate intervals →
+(policy-dependent) neighborhood check → per-component D-tree decomposition →
+edge-parallel D-tree candidate generation → size-ordered joins →
+connection-edge evaluation (intra-table filters first, then cross-component
+connectivity joins, smallest candidate product first) → final match table.
+
+Engine variants (paper §6):
+  STWIG+      check_policy='never',     any index (1-hop suffices)
+  SPath(NI2)  check_policy='always',    d_check=2
+  ℏ-2Hops     check_policy='selective', d_check=2
+  ℏ-3Hops     check_policy='selective', d_check=3
+  ℏ-VC        check_policy='selective', d_check=2, NI variant='vc'
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from .graph import RDFGraph, IDMap
+from .ni_index import NIIndex, build_ni_index
+from .query import QueryTemplate, ConnectionEdge
+from .signature import (build_requirements, check_interval_candidates,
+                        build_bloom, bloom_prefilter)
+from .decompose import decompose, join_order, DTree
+from .matching import (Table, CapacityOverflow, dtree_candidates,
+                       join_tables, cross_join, single_node_table,
+                       filter_rows, injective_filter)
+from .connectivity import connectivity_mask
+from .planner import Thresholds, PlanDecision, decide
+from .stats import DatasetStats, compute_stats
+
+
+@dataclass
+class EngineConfig:
+    check_policy: str = "selective"     # never | always | selective
+    d_check: int = 2                    # hops used by the neighborhood check
+    impl: str = "auto"                  # kernel impl (auto|pallas|interpret|ref)
+    thresholds: Thresholds = field(default_factory=Thresholds)
+    chunk: int = 8192
+    max_rows: int | None = 1 << 20   # LIMIT guard for explosive joins
+    use_bloom: bool = False          # gStore-style 1-hop bitstring prefilter
+
+
+@dataclass
+class QueryStats:
+    used_check: bool = False
+    truncated: bool = False
+    plan: PlanDecision | None = None
+    candidates_before: int = 0
+    candidates_after: int = 0
+    check_time: float = 0.0
+    match_time: float = 0.0
+    conn_time: float = 0.0
+    total_time: float = 0.0
+    join_work: int = 0                  # Σ |A|*|B| over joins (work proxy)
+    dtree_work: int = 0                 # Σ D-tree candidate rows generated
+
+
+@dataclass
+class MatchResult:
+    cols: tuple[int, ...]
+    rows: np.ndarray                    # [count, num query nodes]
+    stats: QueryStats
+
+    @property
+    def count(self) -> int:
+        return int(self.rows.shape[0])
+
+    def result_set(self) -> set[tuple[int, ...]]:
+        order = np.argsort(self.cols)
+        return {tuple(int(r[i]) for i in order) for r in self.rows}
+
+
+class Engine:
+    def __init__(self, graph: RDFGraph, ni: NIIndex,
+                 cfg: EngineConfig | None = None,
+                 stats: DatasetStats | None = None):
+        self.graph = graph
+        self.ni = ni
+        self.cfg = cfg or EngineConfig()
+        self.idmap = IDMap(graph)
+        self.stats = stats if stats is not None else compute_stats(graph)
+        self._dev_cache: dict = {}      # device-resident NI tensors
+        self._bloom = None              # lazy 1-hop bloom signatures
+
+    # -------------------------------------------------------------- #
+    def execute(self, query: QueryTemplate) -> MatchResult:
+        t0 = time.perf_counter()
+        qs = QueryStats()
+        cfg = self.cfg
+        n = self.graph.num_nodes
+        iv = query.intervals(self.idmap)
+        cand_sizes = {q: int(iv[q, 1] - iv[q, 0]) for q in range(query.num_nodes)}
+        qs.candidates_before = sum(cand_sizes.values())
+
+        comps = query.components()
+        trees_per_comp = [decompose(query, comp, cand_sizes) for comp in comps]
+
+        # ---- planner -------------------------------------------------
+        if cfg.check_policy == "always":
+            use_check = True
+        elif cfg.check_policy == "never":
+            use_check = False
+        else:
+            plan = decide(query, trees_per_comp, cand_sizes, self.stats,
+                          cfg.thresholds, k=cfg.d_check)
+            qs.plan = plan
+            use_check = plan.use_check
+        qs.used_check = use_check
+
+        # ---- candidate masks ------------------------------------------
+        t1 = time.perf_counter()
+        pass_masks: dict[int, jnp.ndarray] = {}
+        pass_np: dict[int, np.ndarray] = {}
+        after = 0
+        for comp in comps:
+            for q in comp:
+                lo, hi = int(iv[q, 0]), int(iv[q, 1])
+                mask = np.zeros(n, dtype=bool)
+                if use_check:
+                    reqs = build_requirements(query, comp, q,
+                                              min(cfg.d_check, self.ni.d_max), iv)
+                    ok = np.ones(hi - lo, dtype=bool)
+                    if cfg.use_bloom and hi > lo:
+                        if self._bloom is None:
+                            self._bloom = build_bloom(self.ni.entries[1])
+                        ok &= bloom_prefilter(self._bloom,
+                                              self.ni.entries[1], reqs,
+                                              lo, hi, impl=cfg.impl)
+                    if ok.any():
+                        ok &= check_interval_candidates(
+                            self.ni, reqs, lo, hi,
+                            min(cfg.d_check, self.ni.d_max),
+                            impl=cfg.impl, chunk=cfg.chunk,
+                            device_cache=self._dev_cache)
+                    mask[lo:hi] = ok
+                else:
+                    mask[lo:hi] = True
+                pass_np[q] = mask
+                pass_masks[q] = jnp.asarray(mask)
+                after += int(mask.sum())
+        qs.candidates_after = after
+        qs.check_time = time.perf_counter() - t1
+
+        # ---- per-component matching -----------------------------------
+        t2 = time.perf_counter()
+        comp_tables: list[Table] = []
+        for comp, trees in zip(comps, trees_per_comp):
+            if not query.component_edges(comp):
+                # isolated node(s)
+                tab = None
+                for q in comp:
+                    t = single_node_table(q, int(iv[q, 0]), int(iv[q, 1]),
+                                          pass_np[q])
+                    tab = t if tab is None else injective_filter(
+                        self._retry(cross_join, tab, t))
+                comp_tables.append(tab)
+                continue
+            cand_tables = []
+            for tr in trees:
+                tab = self._retry(dtree_candidates, self.graph, tr,
+                                  pass_masks, row_limit=self.cfg.max_rows)
+                qs.truncated |= tab.truncated
+                qs.dtree_work += tab.count
+                cand_tables.append(injective_filter(tab))
+            order = join_order(trees, [t.count for t in cand_tables])
+            tab = cand_tables[order[0]]
+            for i in order[1:]:
+                qs.join_work += max(tab.count, 1) * max(cand_tables[i].count, 1)
+                tab = injective_filter(self._retry(
+                    join_tables, tab, cand_tables[i],
+                    row_limit=self.cfg.max_rows))
+                qs.truncated |= tab.truncated
+            comp_tables.append(tab)
+        qs.match_time = time.perf_counter() - t2
+
+        # ---- connection edges ------------------------------------------
+        t3 = time.perf_counter()
+        final = self._process_connections(query, comps, comp_tables, qs)
+        qs.conn_time = time.perf_counter() - t3
+
+        qs.total_time = time.perf_counter() - t0
+        rows = np.asarray(final.rows[: final.count])
+        return MatchResult(cols=final.cols, rows=rows, stats=qs)
+
+    # -------------------------------------------------------------- #
+    def _retry(self, fn, *args, **kw):
+        cap = None
+        for _ in range(8):
+            try:
+                return fn(*args, **kw) if cap is None else fn(*args, cap=cap, **kw)
+            except CapacityOverflow as e:
+                cap = 1 << (e.needed - 1).bit_length()
+        raise RuntimeError("capacity retry loop failed")
+
+    def _process_connections(self, query: QueryTemplate, comps,
+                             comp_tables: list[Table],
+                             qs: QueryStats) -> Table:
+        tables = list(comp_tables)
+        owner = {}
+        for i, comp in enumerate(comps):
+            for q in comp:
+                owner[q] = i
+        group = list(range(len(tables)))       # table index per original comp
+
+        def find(i):
+            while group[i] != i:
+                group[i] = group[group[i]]
+                i = group[i]
+            return i
+
+        # intra-component connection filters first (linear in table size)
+        intra = [c for c in query.connections
+                 if find(owner[c.src]) == find(owner[c.dst])]
+        inter = [c for c in query.connections
+                 if find(owner[c.src]) != find(owner[c.dst])]
+        for c in intra:
+            gi = find(owner[c.src])
+            tab = tables[gi]
+            if tab.count == 0:
+                continue
+            rows = np.asarray(tab.rows[: tab.count])
+            a = rows[:, tab.cols.index(c.src)]
+            b = rows[:, tab.cols.index(c.dst)]
+            keep = connectivity_mask(self.graph, self.ni, a, b, c.max_dist,
+                                     c.bidirectional, impl=self.cfg.impl)
+            tables[gi] = filter_rows(tab, keep)
+
+        # inter-component: smallest candidate product first
+        while inter:
+            inter.sort(key=lambda c: tables[find(owner[c.src])].count
+                       * tables[find(owner[c.dst])].count)
+            c = inter.pop(0)
+            gi, gj = find(owner[c.src]), find(owner[c.dst])
+            if gi == gj:
+                # merged by an earlier join: now an intra filter
+                tab = tables[gi]
+                rows = np.asarray(tab.rows[: tab.count])
+                a = rows[:, tab.cols.index(c.src)]
+                b = rows[:, tab.cols.index(c.dst)]
+                keep = connectivity_mask(self.graph, self.ni, a, b,
+                                         c.max_dist, c.bidirectional,
+                                         impl=self.cfg.impl)
+                tables[gi] = filter_rows(tab, keep)
+                continue
+            ta, tb = tables[gi], tables[gj]
+            qs.join_work += max(ta.count, 1) * max(tb.count, 1)
+            joined = injective_filter(self._retry(
+                cross_join, ta, tb, row_limit=self.cfg.max_rows))
+            qs.truncated |= joined.truncated
+            rows = np.asarray(joined.rows[: joined.count])
+            if joined.count:
+                a = rows[:, joined.cols.index(c.src)]
+                b = rows[:, joined.cols.index(c.dst)]
+                keep = connectivity_mask(self.graph, self.ni, a, b,
+                                         c.max_dist, c.bidirectional,
+                                         impl=self.cfg.impl)
+                joined = filter_rows(joined, keep)
+            group[gj] = gi
+            tables[gi] = joined
+
+        # cross-join any remaining disconnected groups
+        roots = sorted({find(i) for i in range(len(tables))})
+        tab = tables[roots[0]]
+        for r in roots[1:]:
+            tab = injective_filter(self._retry(
+                cross_join, tab, tables[r], row_limit=self.cfg.max_rows))
+            qs.truncated |= tab.truncated
+        return tab
+
+
+# ---------------------------------------------------------------------- #
+# Named engine variants (paper §6).
+# ---------------------------------------------------------------------- #
+def make_engine(graph: RDFGraph, variant: str = "rdf_h",
+                ni: NIIndex | None = None,
+                stats: DatasetStats | None = None,
+                thresholds: Thresholds | None = None,
+                impl: str = "auto") -> Engine:
+    th = thresholds or Thresholds()
+    builders = {
+        "stwig+":     dict(d=1, policy="never",     var="full", d_check=1),
+        "spath_ni2":  dict(d=2, policy="always",    var="full", d_check=2),
+        "h2":         dict(d=2, policy="selective", var="full", d_check=2),
+        "h3":         dict(d=3, policy="selective", var="full", d_check=3),
+        "hvc":        dict(d=2, policy="selective", var="vc",   d_check=2),
+        "rdf_h":      dict(d=2, policy="selective", var="full", d_check=2),
+    }
+    if variant not in builders:
+        raise ValueError(f"unknown variant {variant!r}")
+    b = builders[variant]
+    if ni is None:
+        ni = build_ni_index(graph, d_max=b["d"], variant=b["var"])
+    cfg = EngineConfig(check_policy=b["policy"], d_check=b["d_check"],
+                       impl=impl, thresholds=th)
+    return Engine(graph, ni, cfg, stats=stats)

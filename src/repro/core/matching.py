@@ -1,0 +1,277 @@
+"""D-tree candidate generation and joins (paper Algorithm 2, steps 2-3).
+
+TPU-native formulation: candidate generation is *edge-parallel* — one pass
+over the full edge array produces all (root, child) pairs matching a query
+edge (predicate + endpoint pass masks), with no per-node degree padding.
+Joins are vectorized nested-loop equi-joins over padded candidate tables
+(exactly the paper's join predicate: shared query nodes must map equal).
+
+All tables are capacity-padded for jit shape stability; true counts are
+tracked, and capacity overflow triggers a host-side retry with doubled
+capacity (the re-plan path a real engine would take).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .graph import RDFGraph
+from .decompose import DTree
+import functools
+
+
+class CapacityOverflow(Exception):
+    def __init__(self, needed: int):
+        self.needed = int(needed)
+        super().__init__(f"capacity overflow, need {needed}")
+
+
+@dataclass
+class Table:
+    """Padded match table: rows[i] maps cols[j] -> graph node id."""
+    cols: tuple[int, ...]
+    rows: jax.Array            # [cap, len(cols)] int32, invalid rows = -1
+    count: int                 # true number of valid rows
+    truncated: bool = False    # row_limit hit (LIMIT semantics)
+
+    @property
+    def cap(self) -> int:
+        return int(self.rows.shape[0])
+
+    def numpy(self) -> np.ndarray:
+        return np.asarray(self.rows[: self.count])
+
+    def result_set(self) -> set[tuple[int, ...]]:
+        return {tuple(int(x) for x in r) for r in self.numpy()}
+
+
+def _pow2(x: int, lo: int = 64) -> int:
+    return max(lo, 1 << (max(int(x), 1) - 1).bit_length())
+
+
+# ---------------------------------------------------------------------- #
+@jax.jit
+def _edge_pairs_mask(src, dst, pred, pred_id, pass_src, pass_dst):
+    mask = pass_src[src] & pass_dst[dst]
+    mask = mask & jnp.where(pred_id < 0, True, pred == pred_id)
+    return mask
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _edge_pairs_gather(mask, src, dst, cap):
+    e = src.shape[0]
+    idx = jnp.nonzero(mask, size=cap, fill_value=e)[0]
+    safe = jnp.minimum(idx, e - 1)
+    s = jnp.where(idx < e, src[safe], -1)
+    d = jnp.where(idx < e, dst[safe], -1)
+    return jnp.stack([s, d], axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("size", "has_new"))
+def _join_gather(eq, a_rows, b_rows, new_sel, size, has_new):
+    ii, jj = jnp.nonzero(eq, size=size, fill_value=-1)
+    left = jnp.where(ii[:, None] >= 0, a_rows[jnp.maximum(ii, 0)], -1)
+    if has_new:
+        right = jnp.where(jj[:, None] >= 0,
+                          b_rows[jnp.maximum(jj, 0)][:, new_sel], -1)
+        return jnp.concatenate([left, right], axis=1)
+    return left
+
+
+def edge_pairs(graph: RDFGraph, pred_id: int | None,
+               pass_src: jax.Array, pass_dst: jax.Array,
+               cols: tuple[int, int], cap: int | None = None) -> Table:
+    """All edges (s, d) with pred==pred_id (None = any) and both endpoint
+    masks true.  Returns a 2-column table."""
+    src = jnp.asarray(graph.src)
+    dst = jnp.asarray(graph.dst)
+    pred = jnp.asarray(graph.pred)
+    p = jnp.int32(-1 if pred_id is None else pred_id)
+    mask = _edge_pairs_mask(src, dst, pred, p, pass_src, pass_dst)
+    if cols[0] == cols[1]:      # query self-loop: s == d, single column
+        mask = mask & (src == dst)
+        count = int(mask.sum())
+        cap2 = cap or _pow2(count)
+        if count > cap2:
+            raise CapacityOverflow(count)
+        idx = jnp.nonzero(mask, size=cap2, fill_value=graph.num_edges)[0]
+        s = jnp.where(idx < graph.num_edges,
+                      src[jnp.minimum(idx, graph.num_edges - 1)], -1)
+        return Table(cols=(cols[0],), rows=s[:, None].astype(jnp.int32),
+                     count=count)
+    count = int(mask.sum())
+    if cap is None:
+        cap = _pow2(count)
+    if count > cap:
+        raise CapacityOverflow(count)
+    rows = _edge_pairs_gather(mask, src, dst, cap)
+    return Table(cols=cols, rows=rows, count=count)
+
+
+# ---------------------------------------------------------------------- #
+def _shared_and_new(a_cols, b_cols):
+    shared = [(a_cols.index(c), b_cols.index(c)) for c in a_cols if c in b_cols]
+    new = [j for j, c in enumerate(b_cols) if c not in a_cols]
+    return shared, new
+
+
+@jax.jit
+def _join_chunk_mask(a_rows, b_rows, a_sel, b_sel):
+    """eq[i, j] = rows valid & all shared cols equal.
+
+    a_sel: [S] indices into a cols; b_sel: [S] indices into b cols."""
+    a_k = a_rows[:, a_sel]                          # [A, S]
+    b_k = b_rows[:, b_sel]                          # [B, S]
+    eq = (a_k[:, None, :] == b_k[None, :, :]).all(-1)
+    valid = (a_rows[:, :1] >= 0) & (b_rows[None, :, 0] >= 0)
+    return eq & valid
+
+
+def join_tables(a: Table, b: Table, cap: int | None = None,
+                chunk: int = 4096, b_chunk: int = 1 << 16,
+                row_limit: int | None = None) -> Table:
+    """Vectorized nested-loop equi-join on shared query-node columns.
+
+    Both sides are chunked so the compare matrix stays bounded; with
+    row_limit the join stops once the limit is reached (LIMIT semantics —
+    the returned table has .truncated=True)."""
+    shared, new = _shared_and_new(a.cols, b.cols)
+    if not shared:
+        return cross_join(a, b, cap=cap, chunk=chunk, row_limit=row_limit)
+    a_sel = jnp.asarray([s[0] for s in shared], jnp.int32)
+    b_sel = jnp.asarray([s[1] for s in shared], jnp.int32)
+    new_sel = jnp.asarray(new, jnp.int32)
+    out_cols = a.cols + tuple(b.cols[j] for j in new)
+
+    pieces, total = [], 0
+    truncated = False
+    for bs in range(0, max(b.count, 1), b_chunk):
+        b_rows_t = b.rows[bs: min(bs + b_chunk,
+                                  min(b.cap, _pow2(b.count)))]
+        if b_rows_t.shape[0] == 0:
+            break
+        for start in range(0, max(a.count, 1), chunk):
+            a_rows = a.rows[start:start + chunk]
+            eq = _join_chunk_mask(a_rows, b_rows_t, a_sel, b_sel)
+            cnt = int(eq.sum())
+            if cnt == 0:
+                continue
+            if row_limit is not None and total >= row_limit:
+                truncated = True
+                break
+            total += cnt
+            rows = _join_gather(eq, a_rows, b_rows_t,
+                                new_sel if new else jnp.zeros(0, jnp.int32),
+                                _pow2(cnt), bool(new))
+            pieces.append(np.asarray(rows[:cnt]))
+        if truncated:
+            break
+    if cap is None:
+        cap = _pow2(total)
+    if total > cap:
+        raise CapacityOverflow(total)
+    out = np.full((cap, len(out_cols)), -1, np.int32)
+    if pieces:
+        cat = np.concatenate(pieces, axis=0)
+        out[: cat.shape[0]] = cat
+    t = Table(cols=out_cols, rows=jnp.asarray(out), count=total)
+    t.truncated = truncated
+    return t
+
+
+def cross_join(a: Table, b: Table, cap: int | None = None,
+               chunk: int = 4096, row_limit: int | None = None) -> Table:
+    """Cartesian product (used before connectivity-check joins)."""
+    out_cols = a.cols + b.cols
+    total = a.count * b.count
+    truncated = False
+    a_count, b_count = a.count, b.count
+    if row_limit is not None and total > row_limit:
+        truncated = True
+        a_count = max(1, min(a_count, row_limit))
+        b_count = max(1, row_limit // a_count)
+        total = a_count * b_count
+    if cap is None:
+        cap = _pow2(total)
+    if total > cap:
+        raise CapacityOverflow(total)
+    an = np.asarray(a.rows[: a_count])
+    bn = np.asarray(b.rows[: b_count])
+    left = np.repeat(an, bn.shape[0], axis=0)
+    right = np.tile(bn, (an.shape[0], 1))
+    out = np.full((cap, len(out_cols)), -1, np.int32)
+    if total:
+        out[:total] = np.concatenate([left, right], axis=1)
+    t = Table(cols=out_cols, rows=jnp.asarray(out), count=total)
+    t.truncated = truncated
+    return t
+
+
+# ---------------------------------------------------------------------- #
+def single_node_table(node: int, lo: int, hi: int,
+                      passed: np.ndarray | None) -> Table:
+    """Candidates of an isolated query node as a 1-column table.
+
+    passed: full-[N] bool mask (or None)."""
+    ids = np.arange(lo, hi, dtype=np.int32)
+    if passed is not None:
+        ids = ids[np.asarray(passed, dtype=bool)[lo:hi]]
+    cap = _pow2(len(ids))
+    rows = np.full((cap, 1), -1, np.int32)
+    rows[: len(ids), 0] = ids
+    return Table(cols=(node,), rows=jnp.asarray(rows), count=len(ids))
+
+
+def dtree_candidates(graph: RDFGraph, tree: DTree,
+                     pass_masks: dict[int, jax.Array],
+                     row_limit: int | None = None,
+                     cap: int | None = None) -> Table:
+    """Generate all candidate matches of one D-tree by sequential
+    edge-parallel pair generation + joins on the root column."""
+    table: Table | None = None
+    truncated = False
+    for pred, child, outgoing in tree.edges:
+        if outgoing:
+            pairs = edge_pairs(graph, pred, pass_masks[tree.root],
+                               pass_masks[child], cols=(tree.root, child))
+        else:
+            pairs = edge_pairs(graph, pred, pass_masks[child],
+                               pass_masks[tree.root], cols=(child, tree.root))
+        table = pairs if table is None else join_tables(
+            table, pairs, row_limit=row_limit)
+        truncated |= table.truncated
+        if table.count == 0:
+            break
+    assert table is not None
+    table.truncated = truncated
+    return table
+
+
+def injective_filter(table: Table) -> Table:
+    """Keep rows whose values are pairwise distinct across distinct query
+    nodes (subgraph-isomorphism semantics)."""
+    k = len(table.cols)
+    if k < 2 or table.count == 0:
+        return table
+    rows = np.asarray(table.rows[: table.count])
+    keep = np.ones(table.count, dtype=bool)
+    for i in range(k):
+        for j in range(i + 1, k):
+            if table.cols[i] != table.cols[j]:
+                keep &= rows[:, i] != rows[:, j]
+    if keep.all():
+        return table
+    return filter_rows(table, keep)
+
+
+def filter_rows(table: Table, keep: np.ndarray) -> Table:
+    """Keep rows where keep[i] (bool over first `count` rows)."""
+    rows = np.asarray(table.rows[: table.count])[np.asarray(keep, bool)]
+    cap = _pow2(rows.shape[0])
+    out = np.full((cap, len(table.cols)), -1, np.int32)
+    out[: rows.shape[0]] = rows
+    return Table(cols=table.cols, rows=jnp.asarray(out),
+                 count=rows.shape[0], truncated=table.truncated)

@@ -1,0 +1,134 @@
+"""RDF-ℏ selective pruning decision (§4.2, §4.3) and threshold tuning.
+
+The planner decides, per query template, whether to run the neighborhood
+check.  Signature pruning is used iff:
+
+  (complexity)  any D-tree root's candidate-generation iteration count
+                exceeds τ1, OR the estimated intermediate-join product
+                exceeds τ2,
+  AND
+  (power)       some query node's Neighborhood Selectivity N_q >= τ3.
+
+N_q = | Σ_{p_r in k-hop} ln s(p_r) + Σ_{p_a in k-hop} ln(s(p_a)·f_{n,p_a}) |
+estimates -ln P(random node exhibits q's neighborhood), i.e. the expected
+pruning power of checking q's neighborhood structure.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import RDFGraph, IDMap, ATTR
+from .query import QueryTemplate
+from .stats import DatasetStats
+from .decompose import DTree
+
+
+@dataclass
+class Thresholds:
+    tau_iter: float = 1000.0       # τ1: D-tree candidate iterations
+    tau_join: float = 1.0e6        # τ2: estimated intermediate joins
+    tau_sel: float = 8.0           # τ3: min neighborhood selectivity
+
+
+@dataclass
+class PlanDecision:
+    use_check: bool
+    complex_query: bool
+    max_selectivity: float
+    est_iterations: float
+    est_join_product: float
+    per_node_selectivity: dict[int, float] = field(default_factory=dict)
+
+
+def neighborhood_selectivity(query: QueryTemplate, q: int,
+                             stats: DatasetStats, k: int) -> float:
+    """Def. 4.3 over the predicates within k query-hops of q (both
+    directions, following template edges)."""
+    comp = None
+    for c in query.components():
+        if q in c:
+            comp = set(c)
+            break
+    assert comp is not None
+    # undirected BFS distances within the template, then take every edge
+    # with an endpoint at distance <= k-1 from q (its predicate is visible
+    # to a k-hop neighborhood check).
+    dist = {q: 0}
+    comp_edges = [e for e in query.edges if e.src in comp and e.dst in comp]
+    for step in range(1, k + 1):
+        for e in comp_edges:
+            for a, b in ((e.src, e.dst), (e.dst, e.src)):
+                if a in dist and dist[a] == step - 1 and b not in dist:
+                    dist[b] = step
+    inf = k + 1
+    seen_edges = [e for e in comp_edges
+                  if min(dist.get(e.src, inf), dist.get(e.dst, inf)) <= k - 1]
+    total = 0.0
+    for e in seen_edges:
+        if e.pred is None:
+            continue  # wildcard predicate: selectivity 1, ln 1 = 0
+        s = float(stats.pred_selectivity[e.pred])
+        if s <= 0:
+            s = 1.0 / 1e9
+        if len(stats.literal_selectivity.get(e.pred, {})):
+            n = len(query.keywords[e.dst])
+            f = stats.lit_sel(e.pred, max(n, 1))
+            total += math.log(max(s * f, 1e-300))
+        else:
+            total += math.log(s)
+    return abs(total)
+
+
+def estimate_complexity(trees: list[DTree], cand_sizes: dict[int, int]):
+    """(max iterations over D-trees, product of root candidate sizes)."""
+    iters = [cand_sizes.get(t.root, 0) for t in trees]
+    max_iter = max(iters) if iters else 0
+    prod = 1.0
+    for i in iters:
+        prod *= max(i, 1)
+    return float(max_iter), float(prod)
+
+
+def decide(query: QueryTemplate, trees_per_comp: list[list[DTree]],
+           cand_sizes: dict[int, int], stats: DatasetStats,
+           th: Thresholds, k: int) -> PlanDecision:
+    max_iter, prod = 0.0, 1.0
+    for trees in trees_per_comp:
+        mi, pr = estimate_complexity(trees, cand_sizes)
+        max_iter = max(max_iter, mi)
+        prod *= pr
+    complex_query = (max_iter > th.tau_iter) or (prod > th.tau_join)
+    per_node = {q: neighborhood_selectivity(query, q, stats, k)
+                for q in range(query.num_nodes)}
+    max_sel = max(per_node.values()) if per_node else 0.0
+    return PlanDecision(
+        use_check=bool(complex_query and max_sel >= th.tau_sel),
+        complex_query=bool(complex_query),
+        max_selectivity=float(max_sel),
+        est_iterations=max_iter,
+        est_join_product=prod,
+        per_node_selectivity=per_node,
+    )
+
+
+def tune_thresholds(run_query, queries: list[QueryTemplate],
+                    grid_iter=(100.0, 1000.0, 10000.0),
+                    grid_join=(1e4, 1e6, 1e8),
+                    grid_sel=(4.0, 8.0, 16.0)) -> Thresholds:
+    """Grid-search thresholds minimizing total runtime proxy over a sampled
+    workload.  `run_query(query, thresholds) -> cost` is engine-supplied
+    (wall time or work counter).  Mirrors the paper's offline tuning [28]."""
+    best, best_cost = None, float("inf")
+    for ti in grid_iter:
+        for tj in grid_join:
+            for ts in grid_sel:
+                th = Thresholds(ti, tj, ts)
+                cost = 0.0
+                for q in queries:
+                    cost += run_query(q, th)
+                if cost < best_cost:
+                    best, best_cost = th, cost
+    return best or Thresholds()

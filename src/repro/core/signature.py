@@ -1,0 +1,258 @@
+"""Neighborhood containment check (paper Algorithm 1) — vectorized.
+
+Host side derives, for one query node q, the *requirements*: for each
+direction (forward/backward) and each distance d <= d_check, the set of
+keyword id-intervals that must appear among a candidate's <=d-hop neighbors,
+each with a minimum count.  Counts aggregate nested intervals (the paper's
+"uniquely contains" rule): if interval I' is contained in I, matches of I'
+also satisfy I, so required counts accumulate over contained intervals.
+
+Device side gathers the candidates' NI rows per exact distance, counts ids
+per interval with the interval_count kernel, cumulative-sums over distance,
+and compares against the requirements.  Overflowed NI entries auto-pass
+(prune only on certain information).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from .graph import RDFGraph
+from .ni_index import NIIndex
+from .query import QueryTemplate
+from ..kernels import ops
+
+
+@dataclass
+class DirectionReqs:
+    """Requirements in one direction for one query node."""
+    # union of intervals referenced at any distance
+    lo: np.ndarray          # [J] int64
+    hi: np.ndarray          # [J] int64
+    # per distance d (1-indexed -> row d-1): required count per interval
+    # (0 = no requirement at that distance)
+    need: np.ndarray        # [d_check, J] int32
+
+
+@dataclass
+class NodeReqs:
+    fwd: DirectionReqs | None
+    bwd: DirectionReqs | None
+
+    @property
+    def empty(self) -> bool:
+        def e(r):
+            return r is None or r.need.sum() == 0
+        return e(self.fwd) and e(self.bwd)
+
+
+def _query_distances(query: QueryTemplate, comp: set[int], q: int,
+                     forward: bool) -> dict[int, int]:
+    """Directed BFS distances from q inside one component."""
+    adj: dict[int, list[int]] = {}
+    for e in query.edges:
+        if e.src in comp and e.dst in comp:
+            if forward:
+                adj.setdefault(e.src, []).append(e.dst)
+            else:
+                adj.setdefault(e.dst, []).append(e.src)
+    dist = {q: 0}
+    frontier = [q]
+    d = 0
+    while frontier:
+        d += 1
+        nxt = []
+        for u in frontier:
+            for v in adj.get(u, ()):
+                if v not in dist:
+                    dist[v] = d
+                    nxt.append(v)
+        frontier = nxt
+    dist.pop(q)
+    return dist
+
+
+def build_requirements(query: QueryTemplate, comp: list[int], q: int,
+                       d_check: int, intervals: np.ndarray) -> NodeReqs:
+    """intervals: [Q, 2] keyword intervals from IDMap."""
+    comp_set = set(comp)
+
+    def one_direction(forward: bool) -> DirectionReqs | None:
+        dist = _query_distances(query, comp_set, q, forward)
+        within = [(u, d) for u, d in dist.items() if d <= d_check]
+        if not within:
+            return None
+        ivs = sorted({(int(intervals[u][0]), int(intervals[u][1]))
+                      for u, _ in within})
+        lo = np.asarray([i[0] for i in ivs], dtype=np.int64)
+        hi = np.asarray([i[1] for i in ivs], dtype=np.int64)
+        need = np.zeros((d_check, len(ivs)), dtype=np.int32)
+        # appearance count per (interval, distance)
+        appear = np.zeros((d_check, len(ivs)), dtype=np.int32)
+        idx = {iv: j for j, iv in enumerate(ivs)}
+        for u, d in within:
+            appear[d - 1, idx[(int(intervals[u][0]), int(intervals[u][1]))]] += 1
+        cum = np.cumsum(appear, axis=0)          # within distance <= d
+        # nested aggregation: need(I, d) = sum over I' contained in I
+        for j, (l, h) in enumerate(ivs):
+            contained = [j2 for j2, (l2, h2) in enumerate(ivs)
+                         if l <= l2 and h2 <= h]
+            need[:, j] = cum[:, contained].sum(axis=1)
+        return DirectionReqs(lo=lo, hi=hi, need=need)
+
+    return NodeReqs(fwd=one_direction(True), bwd=one_direction(False))
+
+
+# ---------------------------------------------------------------------- #
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("use_sorted",))
+def _gather_count(ids_dev, cands, lo_b, hi_b, use_sorted=True):
+    """Device-fused gather + interval count: rows never leave the device.
+
+    ids_dev [N, cap] (sorted rows, -1 pad); cands [C]; lo_b/hi_b [J]."""
+    rows = ids_dev[cands]
+    if use_sorted:
+        big = jnp.iinfo(jnp.int32).max
+        r = jnp.where(rows < 0, big, rows)
+        bounds = jnp.concatenate([lo_b, hi_b])
+        idx = jax.vmap(lambda row: jnp.searchsorted(row, bounds))(r)
+        j = lo_b.shape[0]
+        return idx[:, j:] - idx[:, :j]
+    def one(bounds):
+        l, h = bounds
+        return jnp.sum((rows >= l) & (rows < h), axis=1, dtype=jnp.int32)
+    return jax.lax.map(one, (lo_b, hi_b)).T
+
+
+def _pow2(x, lo=256):
+    return max(lo, 1 << (max(int(x), 1) - 1).bit_length())
+
+
+def check_interval_candidates(ni: NIIndex, reqs: NodeReqs,
+                              lo: int, hi: int, d_check: int,
+                              *, impl: str = "auto",
+                              chunk: int = 8192,
+                              device_cache: dict | None = None) -> np.ndarray:
+    """Pass mask (bool [hi-lo]) for candidates lo..hi-1 of one query node.
+
+    device_cache: persistent {(sign, d): jnp ids} so the NI tensors are
+    uploaded once per engine, not per query."""
+    n_cand = hi - lo
+    out = np.ones(n_cand, dtype=bool)
+    if reqs.empty or n_cand == 0:
+        return out
+    d_check = min(d_check, ni.d_max)
+    cache = device_cache if device_cache is not None else {}
+
+    def dev_ids(sign, d):
+        key = (sign, d)
+        if key not in cache:
+            cache[key] = jnp.asarray(ni.entries[sign * d].ids)
+        return cache[key]
+
+    # pad candidate ids to a pow2 bucket for jit shape stability
+    c_pad = min(_pow2(n_cand), max(chunk, 256))
+    for start in range(0, n_cand, c_pad):
+        stop = min(start + c_pad, n_cand)
+        cands = np.full(c_pad, lo, dtype=np.int32)
+        cands[: stop - start] = np.arange(lo + start, lo + stop)
+        cands_dev = jnp.asarray(cands)
+        ok = np.ones(stop - start, dtype=bool)
+        for sign, dreq in ((+1, reqs.fwd), (-1, reqs.bwd)):
+            if dreq is None or not dreq.need.any():
+                continue
+            j = dreq.lo.shape[0]
+            j_pad = max(4, 1 << (j - 1).bit_length())
+            lo_b = np.zeros(j_pad, np.int32)
+            hi_b = np.zeros(j_pad, np.int32)
+            lo_b[:j] = dreq.lo
+            hi_b[:j] = dreq.hi
+            lo_dev, hi_dev = jnp.asarray(lo_b), jnp.asarray(hi_b)
+            cum = np.zeros((stop - start, j), dtype=np.int64)
+            over = np.zeros(stop - start, dtype=bool)
+            max_d = int(np.max(np.nonzero(dreq.need.any(axis=1))[0]) + 1)
+            for d in range(1, min(d_check, max_d) + 1):
+                entry = ni.entries[sign * d]
+                cnt = np.asarray(_gather_count(
+                    dev_ids(sign, d), cands_dev, lo_dev, hi_dev))
+                cum += cnt[: stop - start, :j]
+                over |= entry.overflow[cands[: stop - start]]
+                if dreq.need[d - 1].sum() > 0:
+                    sat = (cum >= dreq.need[d - 1][None, :]).all(axis=1)
+                    ok &= sat | over
+        out[start:stop] = ok
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Bloom/bitstring signature prefilter (gStore-style; uses the
+# bitmask_contains kernel).  Sound one-sided filter for EXACT-keyword
+# neighborhoods: if a required neighbor id's bits are not contained in a
+# candidate's signature, the candidate cannot have that neighbor.
+# ---------------------------------------------------------------------- #
+BLOOM_WORDS = 8      # 256-bit signatures
+_BLOOM_K = 2
+
+
+def _bloom_bits(ids: np.ndarray, words: int = BLOOM_WORDS):
+    """Bit positions (k hashes) for each id; ids int64 array."""
+    n_bits = 32 * words
+    h1 = (ids.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)) \
+        >> np.uint64(40)
+    h2 = (ids.astype(np.uint64) * np.uint64(0xBF58476D1CE4E5B9)) \
+        >> np.uint64(40)
+    return (h1 % n_bits).astype(np.int64), (h2 % n_bits).astype(np.int64)
+
+
+def build_bloom(entry, words: int = BLOOM_WORDS) -> np.ndarray:
+    """[N, words] uint32 signatures of each node's neighbor-id set."""
+    n, cap = entry.ids.shape
+    sig = np.zeros((n, words), np.uint32)
+    ids = entry.ids
+    valid = ids >= 0
+    rows = np.repeat(np.arange(n), cap).reshape(n, cap)[valid]
+    flat = ids[valid].astype(np.int64)
+    for bits in _bloom_bits(flat, words):
+        word, bit = bits // 32, bits % 32
+        np.bitwise_or.at(sig, (rows, word.astype(np.int64)),
+                         (np.uint32(1) << bit.astype(np.uint32)))
+    return sig
+
+
+def bloom_query_sig(required_ids: np.ndarray,
+                    words: int = BLOOM_WORDS) -> np.ndarray:
+    sig = np.zeros(words, np.uint32)
+    for bits in _bloom_bits(required_ids.astype(np.int64), words):
+        word, bit = bits // 32, bits % 32
+        np.bitwise_or.at(sig, word.astype(np.int64),
+                         np.uint32(1) << bit.astype(np.uint32))
+    return sig
+
+
+def bloom_prefilter(sigs: np.ndarray, entry, reqs: NodeReqs,
+                    lo: int, hi: int, *, impl: str = "auto") -> np.ndarray:
+    """Pass mask over candidates lo..hi using 1-hop bloom signatures.
+
+    Only exact keywords (interval width 1) participate; wider intervals
+    cannot be expressed as bits (the reason the paper's NI generalizes
+    gStore-style signatures).  Overflowed entries auto-pass."""
+    n_cand = hi - lo
+    dreq = reqs.fwd
+    if dreq is None or not dreq.need.any():
+        return np.ones(n_cand, dtype=bool)
+    exact = [(int(l),) for l, h, need in
+             zip(dreq.lo, dreq.hi, dreq.need[0])
+             if h - l == 1 and need > 0] if dreq.need.shape[0] else []
+    if not exact:
+        return np.ones(n_cand, dtype=bool)
+    required = np.asarray([e[0] for e in exact], np.int64)
+    qsig = bloom_query_sig(required)
+    ok = np.asarray(ops.bitmask_contains(sigs[lo:hi], qsig, impl=impl),
+                    dtype=bool)
+    return ok | entry.overflow[lo:hi]

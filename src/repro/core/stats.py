@@ -1,0 +1,178 @@
+"""Dataset features (§4.1) and dataset evaluation metrics (§5).
+
+  * predicate selectivity s(p) = |p| / |E|
+  * literal selectivity  f_{n,p_a} = m_{n,p_a} / |l(p_a)|
+  * dataset coherence (Duan et al. structuredness, coverage-weighted)
+  * relationship specialty (occurrence-kurtosis, weighted by |r|)
+  * literal diversity (unique words in an M-sample of attribute literals)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import RDFGraph, ATTR, REL, RESOURCE
+
+
+@dataclass
+class DatasetStats:
+    pred_selectivity: np.ndarray              # [P] float64
+    literal_selectivity: dict[int, dict[int, float]]  # pa -> n -> f
+    coherence: float
+    specialty: float
+    diversity: int
+    type_pred: int | None = None
+
+    def lit_sel(self, pa: int, n: int) -> float:
+        table = self.literal_selectivity.get(pa)
+        if not table:
+            return 1.0
+        if n in table:
+            return table[n]
+        ks = sorted(table)
+        if n < ks[0]:
+            return table[ks[0]]
+        return table[ks[-1]]
+
+
+def predicate_selectivity(graph: RDFGraph) -> np.ndarray:
+    counts = np.bincount(graph.pred, minlength=graph.num_predicates)
+    return counts / max(graph.num_edges, 1)
+
+
+def literal_selectivity(graph: RDFGraph, ns=(1, 2, 3, 4, 5, 6, 8),
+                        sample: int = 20000,
+                        seed: int = 0) -> dict[int, dict[int, float]]:
+    """f_{n,pa}: avg #literals of pa matching a prefix n-gram, over the set
+    of prefix n-grams of pa's literals, normalized by #unique literals."""
+    rng = np.random.default_rng(seed)
+    out: dict[int, dict[int, float]] = {}
+    for pa in range(graph.num_predicates):
+        if graph.pred_kind[pa] != ATTR:
+            continue
+        mask = graph.pred == pa
+        lits = np.unique(graph.dst[mask])
+        labels = graph.labels[lits]
+        if len(labels) > sample:
+            labels = rng.choice(labels, size=sample, replace=False)
+        if len(labels) == 0:
+            continue
+        table = {}
+        for n in ns:
+            prefixes = np.asarray([s[:n] for s in labels])
+            uniq, counts = np.unique(prefixes, return_counts=True)
+            # avg #literals matching a prefix n-gram
+            m = counts.mean()
+            table[n] = float(m / len(labels))
+        out[pa] = table
+    return out
+
+
+def _find_type_predicate(graph: RDFGraph) -> int | None:
+    for name in ("type", "rdf:type", "a", "isA"):
+        hits = np.nonzero(graph.predicates == name)[0]
+        if len(hits):
+            return int(hits[0])
+    return None
+
+
+def coherence(graph: RDFGraph, type_pred: int | None = None) -> float:
+    """Duan et al. SIGMOD'11 structuredness: coverage CV(T) = fraction of
+    (instance, predicate) slots filled, weighted by (|P(T)| + |I(T)|)."""
+    if type_pred is None:
+        type_pred = _find_type_predicate(graph)
+    if type_pred is None:
+        return 0.0
+    tmask = graph.pred == type_pred
+    inst, typ = graph.src[tmask], graph.dst[tmask]
+    # predicates set per instance (excluding type edges)
+    emask = ~tmask
+    esrc, epred = graph.src[emask], graph.pred[emask]
+
+    cov_num: dict[int, float] = {}
+    weights_n: dict[int, float] = {}
+    total_w = 0.0
+    score = 0.0
+    types = np.unique(typ)
+    # instance -> row index
+    for t in types:
+        members = inst[typ == t]
+        if len(members) == 0:
+            continue
+        sel = np.isin(esrc, members)
+        if not sel.any():
+            continue
+        ps, pinv = np.unique(epred[sel], return_inverse=True)
+        ss = esrc[sel]
+        # OC(p, T): #instances of T with >=1 edge of p
+        pairs = np.unique(np.stack([pinv, ss]), axis=1)
+        oc = np.bincount(pairs[0], minlength=len(ps))
+        cv = oc.sum() / (len(ps) * len(members))
+        w = len(ps) + len(members)
+        score += w * cv
+        total_w += w
+    return float(score / total_w) if total_w else 0.0
+
+
+def _pearson_kurtosis(x: np.ndarray) -> float:
+    x = np.asarray(x, dtype=np.float64)
+    if len(x) < 2:
+        return 1.0
+    m = x.mean()
+    v = ((x - m) ** 2).mean()
+    if v <= 1e-12:
+        return 1.0
+    m4 = ((x - m) ** 4).mean()
+    return float(m4 / (v * v))
+
+
+def relationship_specialty(graph: RDFGraph) -> float:
+    """Weighted Pearson-kurtosis of per-node occurrence counts of each
+    relationship predicate.  Hubs can sit on either end (e.g. a prolific
+    author is the *object* of many `author` edges), so we take the max of
+    subject-side and object-side kurtosis per predicate."""
+    total = 0.0
+    wsum = 0.0
+    for p in range(graph.num_predicates):
+        if graph.pred_kind[p] != REL:
+            continue
+        mask = graph.pred == p
+        cnt = int(mask.sum())
+        if cnt == 0:
+            continue
+        ks = _pearson_kurtosis(np.bincount(graph.src[mask]).astype(float)[
+            np.bincount(graph.src[mask]) > 0])
+        ko = _pearson_kurtosis(np.bincount(graph.dst[mask]).astype(float)[
+            np.bincount(graph.dst[mask]) > 0])
+        total += cnt * max(ks, ko)
+        wsum += cnt
+    return float(total / wsum) if wsum else 0.0
+
+
+def literal_diversity(graph: RDFGraph, m_sample: int = 100_000,
+                      seed: int = 0) -> int:
+    """#unique whitespace words among literals of M sampled attribute edges."""
+    attr_mask = graph.pred_kind[graph.pred] == ATTR
+    idx = np.nonzero(attr_mask)[0]
+    if len(idx) == 0:
+        return 0
+    rng = np.random.default_rng(seed)
+    if len(idx) > m_sample:
+        idx = rng.choice(idx, size=m_sample, replace=False)
+    words = set()
+    for lab in graph.labels[graph.dst[idx]]:
+        words.update(lab.split())
+    return len(words)
+
+
+def compute_stats(graph: RDFGraph, m_sample: int = 100_000) -> DatasetStats:
+    tp = _find_type_predicate(graph)
+    return DatasetStats(
+        pred_selectivity=predicate_selectivity(graph),
+        literal_selectivity=literal_selectivity(graph),
+        coherence=coherence(graph, tp),
+        specialty=relationship_specialty(graph),
+        diversity=literal_diversity(graph, m_sample),
+        type_pred=tp,
+    )

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (Alg. 1 & 3).
+
+Each kernel ships with a pure-jnp oracle in ref.py; ops.py dispatches by
+backend (pallas on TPU, ref on CPU, interpret for kernel-body validation).
+"""
+from . import ops, ref
+from .ops import interval_count, bitmask_contains, intersect_any

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: bloom/bitstring signature containment (gStore-style).
+
+ok[c] = 1 iff (query & ~cand[c]) == 0 across all signature words — i.e. the
+query signature's bits are a subset of the candidate's.  Used as the compact
+signature variant for exact-keyword neighborhoods (intervals of width 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_C = 256
+
+
+def _kernel(cand_ref, query_ref, out_ref):
+    cand = cand_ref[...]                       # [TILE_C, W] uint32
+    q = query_ref[...]                         # [1, W] uint32
+    miss = jnp.bitwise_and(q, jnp.bitwise_not(cand))
+    ok = ~jnp.any(miss != jnp.uint32(0), axis=1, keepdims=True)
+    out_ref[...] = jnp.broadcast_to(ok.astype(jnp.int32), out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def bitmask_contains_pallas(cand: jax.Array, query: jax.Array,
+                            *, tile_c: int = DEFAULT_TILE_C,
+                            interpret: bool = False) -> jax.Array:
+    """cand [C, W] uint32; query [W] uint32 -> ok [C] int32."""
+    c, w = cand.shape
+    w_pad = max(128, -(-w // 128) * 128)
+    tile_c = min(tile_c, max(8, -(-c // 8) * 8))
+    c_pad = -(-c // tile_c) * tile_c
+
+    cand_p = jnp.zeros((c_pad, w_pad), jnp.uint32).at[:c, :w].set(cand)
+    query_p = jnp.zeros((1, w_pad), jnp.uint32).at[0, :w].set(query)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(c_pad // tile_c,),
+        in_specs=[
+            pl.BlockSpec((tile_c, w_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, w_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_c, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_pad, 128), jnp.int32),
+        interpret=interpret,
+    )(cand_p, query_p)
+    return out[:c, 0]

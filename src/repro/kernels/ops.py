@@ -1,0 +1,66 @@
+"""Jitted public wrappers with implementation dispatch.
+
+impl:
+  'auto'    -> pallas on TPU, pure-jnp reference elsewhere (CPU container);
+  'pallas'  -> compiled Pallas (TPU only);
+  'interpret' -> Pallas interpret mode (CPU-executable kernel body; slow,
+                 used by tests to validate kernels);
+  'ref'     -> pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import functools
+
+from . import ref as _ref
+from .interval_count import interval_count_pallas
+from .bitmask_contains import bitmask_contains_pallas
+from .sorted_intersect import intersect_any_pallas
+
+
+def _resolve(impl: str, cpu_default: str = "ref") -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else cpu_default
+    return impl
+
+
+_interval_count_sorted_jit = jax.jit(_ref.interval_count_sorted)
+_interval_count_ref_jit = jax.jit(_ref.interval_count_ref)
+
+
+def interval_count(ids, lo, hi, *, impl: str = "auto"):
+    impl = _resolve(impl, cpu_default="sorted")
+    ids = jnp.asarray(ids, jnp.int32)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    if impl == "sorted":
+        return _interval_count_sorted_jit(ids, lo, hi)
+    if impl == "ref":
+        return _interval_count_ref_jit(ids, lo, hi)
+    return interval_count_pallas(ids, lo, hi, interpret=(impl == "interpret"))
+
+
+def bitmask_contains(cand, query, *, impl: str = "auto"):
+    impl = _resolve(impl)
+    cand = jnp.asarray(cand, jnp.uint32)
+    query = jnp.asarray(query, jnp.uint32)
+    if impl == "ref":
+        return _ref.bitmask_contains_ref(cand, query)
+    return bitmask_contains_pallas(cand, query, interpret=(impl == "interpret"))
+
+
+_intersect_sorted_jit = jax.jit(_ref.intersect_any_sorted)
+_intersect_ref_jit = jax.jit(_ref.intersect_any_ref)
+
+
+def intersect_any(a, b, *, impl: str = "auto"):
+    impl = _resolve(impl, cpu_default="sorted")
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    if impl == "sorted":
+        return _intersect_sorted_jit(a, b)
+    if impl == "ref":
+        return _intersect_ref_jit(a, b)
+    return intersect_any_pallas(a, b, interpret=(impl == "interpret"))

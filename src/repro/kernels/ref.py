@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These define the semantics; the Pallas kernels must match them exactly
+(integer ops, so exact equality is asserted in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interval_count_ref(ids: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """counts[c, j] = #{b : lo[j] <= ids[c, b] < hi[j]}.
+
+    ids: [C, B] int32, padded with -1 (all real ids >= 0, all lo >= 0 so
+    padding never counts).  lo, hi: [J] int32.  Returns [C, J] int32.
+    """
+    def one(bounds):
+        l, h = bounds
+        return jnp.sum((ids >= l) & (ids < h), axis=1, dtype=jnp.int32)
+    # sequential over J keeps peak memory at C*B instead of C*B*J
+    counts = jax.lax.map(one, (lo, hi))           # [J, C]
+    return counts.T
+
+
+def bitmask_contains_ref(cand: jax.Array, query: jax.Array) -> jax.Array:
+    """ok[c] = 1 iff every bit set in query is set in cand[c].
+
+    cand: [C, W] uint32, query: [W] uint32.  Returns [C] int32.
+    """
+    miss = jnp.bitwise_and(query[None, :], jnp.bitwise_not(cand))
+    return (~jnp.any(miss != 0, axis=1)).astype(jnp.int32)
+
+
+def intersect_any_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """hit[p] = 1 iff the valid (>=0) entries of a[p] and b[p] intersect.
+
+    a: [P, A] int32, b: [P, B] int32, both -1 padded.  Returns [P] int32.
+    """
+    eq = a[:, :, None] == b[:, None, :]
+    valid = (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
+    return jnp.any(eq & valid, axis=(1, 2)).astype(jnp.int32)
+
+
+def interval_count_sorted(ids: jax.Array, lo: jax.Array,
+                          hi: jax.Array) -> jax.Array:
+    """Binary-search formulation: rows of `ids` are sorted ascending with
+    -1 padding; counts via two searchsorted per interval — O(J log B)
+    per row instead of O(J*B).  Semantics identical to interval_count_ref
+    (validated in tests); this is the CPU fast path, while the Pallas
+    kernel keeps the compare-reduce form (VPU-friendly on TPU)."""
+    big = jnp.iinfo(jnp.int32).max
+    rows = jnp.where(ids < 0, big, ids)
+    rows = jnp.sort(rows, axis=1)   # pads move to the tail; already sorted
+    bounds = jnp.concatenate([lo, hi]).astype(jnp.int32)
+
+    def one(row):
+        return jnp.searchsorted(row, bounds, side="left")
+    idx = jax.vmap(one)(rows)                       # [C, 2J]
+    j = lo.shape[0]
+    return (idx[:, j:] - idx[:, :j]).astype(jnp.int32)
+
+
+def intersect_any_sorted(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Membership-test formulation of intersect_any_ref: sort each a-row,
+    binary-search every b element — O(P*B log A) time and O(P*B) memory
+    instead of the oracle's O(P*A*B) compare cube.  CPU fast path; exact
+    same semantics (validated in tests)."""
+    big = jnp.iinfo(jnp.int32).max
+    a_s = jnp.sort(jnp.where(a < 0, big, a), axis=1)
+
+    def row(ar, br):
+        idx = jnp.clip(jnp.searchsorted(ar, br), 0, ar.shape[0] - 1)
+        return jnp.any((ar[idx] == br) & (br >= 0))
+    return jax.vmap(row)(a_s, b).astype(jnp.int32)

@@ -1,0 +1,339 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, record memory / cost / collective statistics.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every supported cell, both meshes
+  python -m repro.launch.dryrun --all --mesh single
+Results are appended incrementally to --out (JSON), keyed by cell id.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import (the docstring is not
+# code): jax locks the device count at first init.
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from ..configs import ARCHS, SHAPES, get_config, supported_shapes
+from ..configs.base import TrainConfig, InputShape
+from ..models import api
+from .mesh import make_production_mesh
+from . import hlo_analysis
+
+
+# Per-arch training settings chosen for single-pod memory feasibility
+# (§Dry-run in EXPERIMENTS.md justifies each).
+TRAIN_SETTINGS: dict[str, dict] = {
+    "llama4-maverick-400b-a17b": dict(zero3=True, microbatch=8,
+                                      opt_state_dtype="bfloat16",
+                                      grad_dtype="bfloat16",
+                                      param_dtype="bfloat16"),
+    "starcoder2-15b": dict(zero3=True, microbatch=8),
+    "granite-moe-1b-a400m": dict(grad_dtype="bfloat16"),
+    "minitron-8b": dict(zero3=True, microbatch=4),
+    "rwkv6-7b": dict(zero3=True, microbatch=4,
+                     cfg_overrides={"rwkv_chunk": 64}),
+    "paligemma-3b": dict(microbatch=2),
+    "hubert-xlarge": dict(microbatch=2),
+    "hymba-1.5b": dict(microbatch=2),
+    "stablelm-1.6b": dict(microbatch=2),
+}
+
+
+def cell_settings(arch: str) -> dict:
+    s = dict(zero3=False, microbatch=1, opt_state_dtype="float32",
+             grad_dtype="float32", param_dtype=None)
+    s.update(TRAIN_SETTINGS.get(arch, {}))
+    return s
+
+
+# ---------------------------------------------------------------------- #
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in post-SPMD HLO."""
+    stats: dict[str, dict] = {c: {"count": 0, "bytes": 0}
+                              for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for c in _COLLECTIVES:
+            idx = stripped.find(f" {c}(")
+            if idx < 0 or "start" in stripped[:idx].split("=")[0]:
+                # count -start ops once (skip -done)
+                idx2 = stripped.find(f" {c}-start(")
+                if idx2 < 0:
+                    continue
+                idx = idx2
+                c_open = stripped.index("(", idx)
+            else:
+                c_open = stripped.index("(", idx)
+            operands = stripped[c_open:]
+            shapes = _SHAPE_RE.findall(operands)
+            if not shapes:  # fall back to result shape
+                shapes = _SHAPE_RE.findall(stripped[:idx])
+            b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            stats[c]["count"] += 1
+            stats[c]["bytes"] += b
+            break
+    stats["total_bytes"] = sum(v["bytes"] for v in stats.values()
+                               if isinstance(v, dict))
+    return stats
+
+
+def memory_stats(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+        if out:
+            out["peak_estimate_bytes"] = (
+                out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+    except Exception as e:                                   # noqa: BLE001
+        out["error"] = str(e)
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:                                   # noqa: BLE001
+        return {"error": str(e)}
+
+
+# ---------------------------------------------------------------------- #
+def ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+def lower_cell(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    st = cell_settings(arch)
+    if st.get("param_dtype"):
+        cfg = dataclasses.replace(cfg, param_dtype=st["param_dtype"])
+    if st.get("cfg_overrides"):
+        cfg = dataclasses.replace(cfg, **st["cfg_overrides"])
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatch=st["microbatch"], zero3=st["zero3"],
+                           opt_state_dtype=st["opt_state_dtype"],
+                           grad_dtype=st["grad_dtype"])
+        fn = api.make_train_step(cfg, tcfg, mesh)
+        p_specs = api.model_pspecs(cfg, mesh, zero3=st["zero3"])
+        o_specs = api.opt_pspecs(cfg, mesh, zero3=st["zero3"])
+        b_specs = api.batch_pspecs(cfg, shape, mesh)
+        args = (api.abstract_model(cfg), api.opt_abstract(cfg, tcfg),
+                api.batch_abstract(cfg, shape),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (ns(mesh, p_specs), ns(mesh, o_specs), ns(mesh, b_specs),
+                 NamedSharding(mesh, PS()))
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1))
+    elif shape.kind == "prefill":
+        cache_len = shape.seq_len + api.DECODE_PAD \
+            if cfg.attn_type != "sliding" else api.decode_cache_len(cfg, shape)
+        fn = api.make_prefill_fn(cfg, mesh, cache_len=cache_len)
+        p_specs = api.model_pspecs(cfg, mesh, zero3=st["zero3"])
+        b_specs = api.batch_pspecs(cfg, shape, mesh)
+        args = (api.abstract_model(cfg), api.batch_abstract(cfg, shape))
+        in_sh = (ns(mesh, p_specs), ns(mesh, b_specs))
+        jitted = jax.jit(fn, in_shardings=in_sh)
+    else:  # decode
+        fn = api.make_decode_fn(cfg, mesh)
+        p_specs = api.model_pspecs(cfg, mesh, zero3=st["zero3"])
+        c_specs = api.cache_pspecs(cfg, mesh, shape.global_batch,
+                                   api.decode_cache_len(cfg, shape))
+        b_specs = api.batch_pspecs(cfg, shape, mesh)
+        args = (api.abstract_model(cfg), api.cache_abstract(cfg, shape),
+                api.batch_abstract(cfg, shape)["tokens"])
+        in_sh = (ns(mesh, p_specs), ns(mesh, c_specs),
+                 NamedSharding(mesh, b_specs["tokens"]))
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(1,))
+    return jitted, args
+
+
+def model_flops(arch: str, shape: InputShape) -> float:
+    """Analytic 'useful' FLOPs for the MODEL_FLOPS/HLO_FLOPs ratio."""
+    cfg = get_config(arch)
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": list(mesh.devices.shape),
+           "settings": cell_settings(arch)}
+    t0 = time.time()
+    with mesh:
+        jitted, args = lower_cell(arch, shape_name, mesh)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+    rec["memory"] = memory_stats(compiled)
+    rec["cost"] = cost_stats(compiled)
+    txt = compiled.as_text()
+    rec["collectives"] = collective_stats(txt)          # static text counts
+    rec["analysis"] = hlo_analysis.analyze(txt)         # trip-count-aware
+    rec["hlo_bytes"] = len(txt)
+    rec["model_flops"] = model_flops(arch, SHAPES[shape_name])
+    rec["status"] = "ok"
+    return rec
+
+
+# ---------------------------------------------------------------------- #
+def all_cells(mesh_kinds=("single", "multi")):
+    for arch, cfg in ARCHS.items():
+        for shape in supported_shapes(cfg):
+            for mk in mesh_kinds:
+                yield arch, shape.name, mk
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    out_path = Path(args.out)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    if args.all:
+        cells = list(all_cells(("single", "multi") if args.both_meshes
+                               or args.mesh is None else (args.mesh,)))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shape, mk in cells:
+        key = f"{arch}|{shape}|{mk}"
+        if args.skip_done and results.get(key, {}).get("status") == "ok":
+            print(f"[skip] {key}")
+            continue
+        print(f"[cell] {key} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, mk)
+            mem = rec["memory"].get("peak_estimate_bytes")
+            print(f"  ok: lower {rec['lower_s']}s compile {rec['compile_s']}s"
+                  f" flops={rec['cost'].get('flops', 0):.3g}"
+                  f" peak/dev={mem/2**30 if mem else -1:.2f}GiB"
+                  f" coll={rec['collectives']['total_bytes']/2**20:.1f}MiB",
+                  flush=True)
+        except Exception as e:                               # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "mesh": mk,
+                   "status": "error", "error": str(e),
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"  ERROR: {e}", flush=True)
+        results[key] = rec
+        out_path.write_text(json.dumps(results, indent=1))
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    print(f"done: {n_ok}/{len(results)} cells ok -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()
+
+
+# ---------------------------------------------------------------------- #
+# Extra (beyond the mandated arch cells): the paper's own check phase on
+# the production mesh — node rows of the NI tensor sharded over 'data',
+# intervals replicated, per-shard interval counting, global candidate
+# count via psum.  Proves the RDF-h engine's heavy phase distributes.
+# ---------------------------------------------------------------------- #
+def lower_rdfh_check(mesh, n_nodes: int = 1 << 22, cap: int = 256,
+                     j: int = 8):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    from ..kernels import ref as kref
+
+    def check_step(ids, lo, hi, need):
+        cnt = kref.interval_count_ref(ids, lo, hi)
+        ok = (cnt >= need[None, :]).all(axis=1)
+        return ok, ok.sum()
+
+    args = (jax.ShapeDtypeStruct((n_nodes, cap), jnp.int32),
+            jax.ShapeDtypeStruct((j,), jnp.int32),
+            jax.ShapeDtypeStruct((j,), jnp.int32),
+            jax.ShapeDtypeStruct((j,), jnp.int32))
+    in_sh = (NamedSharding(mesh, PS(("pod", "data")
+                                    if "pod" in mesh.axis_names
+                                    else "data")),
+             NamedSharding(mesh, PS()), NamedSharding(mesh, PS()),
+             NamedSharding(mesh, PS()))
+    return jax.jit(check_step, in_shardings=in_sh), args
+
+
+def run_rdfh_cell(mesh_kind: str) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": "rdfh-check-phase", "shape": "n4M_cap256",
+           "mesh": mesh_kind, "settings": {}}
+    t0 = time.time()
+    with mesh:
+        jitted, args = lower_rdfh_check(mesh)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+    rec["memory"] = memory_stats(compiled)
+    rec["cost"] = cost_stats(compiled)
+    rec["analysis"] = hlo_analysis.analyze(compiled.as_text())
+    rec["model_flops"] = 0.0
+    rec["status"] = "ok"
+    return rec

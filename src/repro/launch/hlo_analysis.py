@@ -1,0 +1,293 @@
+"""Trip-count-aware analysis of post-SPMD optimized HLO.
+
+XLA's HloCostAnalysis (what compiled.cost_analysis() reports) counts a
+while-loop body ONCE — scan-over-layers, microbatch accumulation and
+flash-attention KV scans therefore under-report FLOPs by orders of
+magnitude, and collectives inside loop bodies likewise appear once in the
+HLO text.  This module parses `compiled.as_text()` and:
+
+  * reads each while loop's trip count from its backend_config
+    ("known_trip_count"), falling back to the condition's constant,
+  * builds a per-computation symbol table (operands are bare %refs in
+    scheduled HLO) to recover operand shapes,
+  * sums dot FLOPs (2 * prod(out) * prod(contracting)) through calls,
+    fusions and while bodies with loop multipliers,
+  * sums HBM traffic as operand+output bytes of *top-level* ops per
+    executed computation (ops inside a fusion don't round-trip HBM, so
+    fusions are counted at their boundary — a faithful traffic model),
+  * sums collective bytes (operand sizes) per collective kind, with loop
+    multipliers.
+
+All quantities are PER DEVICE: the text is the SPMD-partitioned module.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_OPLINE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z]\d*[a-z0-9]*\[[\d,]*\]"
+    r"(?:\{[\d,]*\})?)\s+([\w\-]+)\((.*)$")
+_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\((.*?)\)\s*->")
+_TRIP = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_REF = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of all tensor shapes appearing in text."""
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    result: str                 # result type text
+    kind: str
+    args: str                   # operand region (inside parens)
+    attrs: str                  # everything after operands
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    symtable: dict = field(default_factory=dict)   # %name -> type text
+    ops: list = field(default_factory=list)
+
+
+def _split_args(rest: str) -> tuple[str, str]:
+    """Split 'operands), attrs...' at the matching close paren."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def parse_computations(text: str) -> tuple[dict, str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line[0] != " ":
+            m = _HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+                # parameter shapes from the header
+                for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                      m.group(3)):
+                    cur.symtable[pm.group(1)] = pm.group(2)
+                # tuple params: record the whole header text too
+                cur.symtable["__header__"] = m.group(3)
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OPLINE.match(line)
+        if not m:
+            continue
+        name, result, kind, rest = m.groups()
+        args, attrs = _split_args(rest)
+        cur.symtable[name] = result
+        cur.ops.append(Op(name=name, result=result, kind=kind,
+                          args=args, attrs=attrs))
+    return comps, entry
+
+
+def _operand_bytes(comp: Computation, op: Op) -> int:
+    total = 0
+    for ref in _REF.findall(op.args):
+        total += _shape_bytes(comp.symtable.get(ref, ""))
+    # inline literals with shapes (rare in scheduled HLO)
+    if not _REF.search(op.args):
+        total += _shape_bytes(op.args)
+    return total
+
+
+def _traffic_bytes(comp: Computation, op: Op) -> float:
+    """HBM traffic model for one top-level op.
+
+    dynamic-slice reads only the slice; dynamic-update-slice writes only
+    the update region (in-place) — counting their full operands would
+    charge a scan body the whole stacked parameter array per iteration."""
+    name_l = op.name
+    if op.kind == "dynamic-slice" or (
+            op.kind == "fusion" and "dynamic-slice" in name_l
+            and "update" not in name_l):
+        return 2.0 * _shape_bytes(op.result)
+    if op.kind == "dynamic-update-slice" or (
+            op.kind == "fusion" and "dynamic-update-slice" in name_l):
+        sizes = sorted(_shape_bytes(comp.symtable.get(r, ""))
+                       for r in _REF.findall(op.args))
+        if sizes:
+            return 2.0 * sum(sizes[:-1])      # all but the in-place buffer
+        return 2.0 * _shape_bytes(op.result)
+    return _operand_bytes(comp, op) + _shape_bytes(op.result)
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_shapes = _SHAPE.findall(op.result)
+    if not out_shapes:
+        return 0.0
+    out_elems = _shape_elems(out_shapes[0][1])
+    refs = _REF.findall(op.args)
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if m and refs:
+        lhs_shape = _SHAPE.findall(comp.symtable.get(refs[0], ""))
+        if lhs_shape:
+            dims = [int(x) for x in lhs_shape[0][1].split(",") if x]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "partition-id", "replica-id", "iota", "domain", "opt-barrier",
+               "get-dimension-size", "add-dependency"}
+
+
+@dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_bytes_min: float = 0.0   # perfect-elementwise-fusion lower bound
+    collectives: dict = field(default_factory=lambda: {
+        c: {"count": 0.0, "bytes": 0.0} for c in _COLLECTIVES})
+    while_loops: list = field(default_factory=list)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "hbm_bytes_min": self.hbm_bytes_min,
+                "collective_bytes": self.collective_bytes,
+                "collectives": self.collectives,
+                "while_loops": self.while_loops}
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_computations(text)
+    flops_memo: dict[str, "Analysis"] = {}
+
+    def called(op: Op, key: str) -> str | None:
+        m = re.search(key + r"=%([\w\.\-]+)", op.attrs)
+        return m.group(1) if m else None
+
+    def visit(name: str, mult: float, acc: Analysis, bytes_mode: bool):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            kind = op.kind
+            base = kind.replace("-start", "")
+            if base in _COLLECTIVES and not kind.endswith("-done"):
+                b = _operand_bytes(comp, op)
+                acc.collectives[base]["count"] += mult
+                acc.collectives[base]["bytes"] += mult * b
+                if bytes_mode:
+                    t = mult * (b + _shape_bytes(op.result))
+                    acc.hbm_bytes += t
+                    acc.hbm_bytes_min += t
+                continue
+            if kind == "dot":
+                acc.flops += mult * _dot_flops(comp, op)
+                if bytes_mode:
+                    t = mult * _traffic_bytes(comp, op)
+                    acc.hbm_bytes += t
+                    acc.hbm_bytes_min += t
+                continue
+            if kind == "while":
+                body = called(op, "body")
+                cond = called(op, "condition")
+                m = _TRIP.search(op.attrs)
+                if m:
+                    trips = int(m.group(1))
+                elif cond in comps:
+                    trips = 1
+                    for o in comps[cond].ops:
+                        for c in _CONST_INT.finditer(o.args + o.attrs):
+                            trips = max(trips, int(c.group(1)))
+                else:
+                    trips = 1
+                acc.while_loops.append({"name": op.name, "trips": trips,
+                                        "mult": mult})
+                if body:
+                    visit(body, mult * trips, acc, bytes_mode)
+                continue
+            if kind in ("fusion", "call"):
+                sub_name = called(op, "calls") or called(op, "to_apply")
+                if sub_name:
+                    if sub_name not in flops_memo:
+                        sub = Analysis()
+                        visit(sub_name, 1.0, sub, False)
+                        flops_memo[sub_name] = sub
+                    sub = flops_memo[sub_name]
+                    acc.flops += mult * sub.flops
+                    for c, v in sub.collectives.items():
+                        acc.collectives[c]["count"] += mult * v["count"]
+                        acc.collectives[c]["bytes"] += mult * v["bytes"]
+                if bytes_mode:
+                    t = mult * _traffic_bytes(comp, op)
+                    acc.hbm_bytes += t
+                    if "dynamic" in op.name:
+                        acc.hbm_bytes_min += t
+                continue
+            if kind == "conditional":
+                m = re.search(r"branch_computations=\{([^\}]*)\}", op.attrs)
+                if m:
+                    first = m.group(1).split(",")[0].strip().lstrip("%")
+                    visit(first, mult, acc, bytes_mode)
+                continue
+            if kind in _SKIP_BYTES:
+                continue
+            if bytes_mode:
+                acc.hbm_bytes += mult * _traffic_bytes(comp, op)
+
+    acc = Analysis()
+    if entry:
+        visit(entry, 1.0, acc, True)
+    return acc.as_dict()

@@ -1,0 +1,118 @@
+"""Roofline analysis over dry-run results (§Roofline in EXPERIMENTS.md).
+
+Reads dryrun_results.json and prints, per (arch x shape x mesh):
+  compute   = HLO_FLOPs_per_device / peak_FLOPs            (197 TF/s bf16)
+  memory    = HBM_bytes_per_device / HBM_bw                (819 GB/s)
+              [min, max]: max = as-scheduled CPU-backend HLO traffic,
+              min = perfect-elementwise-fusion bound (dots+collectives+
+              cache slices only) — the TPU compile lands between.
+  collective= collective_bytes_per_device / ICI_bw         (~50 GB/s/link;
+              3D-torus v5e: 45 GB/s/dir x ~3 usable links -> we use the
+              conservative single-link 50 GB/s)
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs, and a one-line lever.
+
+Usage: python -m repro.launch.roofline [--json dryrun_results.json] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (conservative single-link)
+
+CHIPS = {"single": 256, "multi": 512}
+
+
+def terms(rec: dict) -> dict | None:
+    a = rec.get("analysis")
+    if not a or rec.get("status") != "ok":
+        return None
+    n_chips = CHIPS[rec["mesh"]]
+    compute = a["flops"] / PEAK_FLOPS
+    mem_max = a["hbm_bytes"] / HBM_BW
+    mem_min = a["hbm_bytes_min"] / HBM_BW
+    coll = a["collective_bytes"] / LINK_BW
+    model_flops_dev = rec["model_flops"] / n_chips
+    terms_ = {"compute": compute, "memory(min)": mem_min,
+              "memory(max)": mem_max, "collective": coll}
+    # dominant: use mem_min (optimistic) so "memory-bound" calls are robust
+    dom = max(("compute", compute), ("memory", mem_min),
+              ("collective", coll), key=lambda kv: kv[1])[0]
+    useful = model_flops_dev / max(a["flops"], 1)
+    # roofline fraction: useful work time / dominant bottleneck time
+    ideal_t = model_flops_dev / PEAK_FLOPS
+    bound_t = max(compute, mem_min, coll)
+    return {
+        "compute_s": compute, "mem_min_s": mem_min, "mem_max_s": mem_max,
+        "coll_s": coll, "dominant": dom,
+        "model_flops": rec["model_flops"],
+        "useful_ratio": useful,
+        "roofline_frac": ideal_t / max(bound_t, 1e-12),
+        "peak_gib": (rec.get("memory", {}).get("peak_estimate_bytes") or 0)
+        / 2 ** 30,
+        "lower_s": rec.get("lower_s"), "compile_s": rec.get("compile_s"),
+    }
+
+
+LEVERS = {
+    "compute": "cut redundant FLOPs (remat policy, causal-block skipping, "
+               "MoE capacity factor)",
+    "memory": "fuse/widen arithmetic intensity (bigger microbatch, fused "
+              "attention blocks, bf16 stores)",
+    "collective": "re-shard to cut resharding collectives (CP<->TP choice, "
+                  "ZeRO-3 gather scheduling, bf16 grad reduce)",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    results = json.loads(Path(args.json).read_text())
+
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("mesh") != args.mesh:
+            continue
+        t = terms(rec)
+        if t is None:
+            rows.append((rec.get("arch"), rec.get("shape"), None))
+            continue
+        rows.append((rec["arch"], rec["shape"], t))
+
+    if args.md:
+        print("| arch | shape | compute s | mem s [min,max] | coll s |"
+              " dominant | MF/HLO | roofline frac | peak GiB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+    else:
+        print(f"{'arch':28s} {'shape':12s} {'compute':>9s} "
+              f"{'mem[min,max]':>19s} {'coll':>8s} {'dom':>10s} "
+              f"{'MF/HLO':>7s} {'roof%':>6s} {'GiB/dev':>8s}")
+    for arch, shape, t in rows:
+        if t is None:
+            print(f"{arch:28s} {shape:12s}  FAILED")
+            continue
+        if args.md:
+            print(f"| {arch} | {shape} | {t['compute_s']:.3f} |"
+                  f" [{t['mem_min_s']:.3f}, {t['mem_max_s']:.3f}] |"
+                  f" {t['coll_s']:.3f} | {t['dominant']} |"
+                  f" {t['useful_ratio']:.2f} | {t['roofline_frac']:.2f} |"
+                  f" {t['peak_gib']:.1f} |")
+        else:
+            print(f"{arch:28s} {shape:12s} {t['compute_s']:9.4f} "
+                  f"[{t['mem_min_s']:8.4f},{t['mem_max_s']:8.4f}] "
+                  f"{t['coll_s']:8.4f} {t['dominant']:>10s} "
+                  f"{t['useful_ratio']:7.2f} {100*t['roofline_frac']:5.1f}% "
+                  f"{t['peak_gib']:8.2f}")
+    print()
+    for dom, lever in LEVERS.items():
+        print(f"lever[{dom}]: {lever}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: composable JAX implementations of the assigned architectures."""
+from . import transformer, nn_ops, moe, rwkv6, ssm, param, api
+from .api import (make_train_step, make_loss_fn, make_prefill_fn,
+                  make_decode_fn, init_model, abstract_model, model_pspecs,
+                  batch_abstract, batch_pspecs, concrete_batch,
+                  cache_abstract, cache_pspecs, opt_abstract, opt_pspecs,
+                  make_sharder, decode_cache_len)

@@ -1,0 +1,257 @@
+"""Public model API: build train/serve step functions, input specs for the
+dry-run, and sharding spec trees — everything the launcher touches."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from ..configs.base import ModelConfig, TrainConfig, InputShape
+from .param import (PD, init_params, abstract_params, param_pspecs,
+                    make_rules, Rules)
+from .nn_ops import Sharder, NO_SHARD
+from . import transformer as tf
+from ..optim import adamw_init, adamw_update, clip_by_global_norm
+from ..optim.schedule import cosine_schedule
+
+DECODE_PAD = 128     # extra slots after the prefilled cache
+
+
+# ---------------------------------------------------------------------- #
+def tp_size(mesh) -> int:
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def dp_axes(mesh) -> tuple:
+    if mesh is None:
+        return ()
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_sharder(cfg: ModelConfig, mesh) -> Sharder:
+    tp = tp_size(mesh)
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) != 1 else dp[0]
+    return Sharder(
+        mesh=mesh,
+        dp=dp,
+        tp_heads=cfg.num_heads % tp == 0,
+        tp_kv=cfg.num_kv_heads % tp == 0,
+    )
+
+
+def make_param_rules(cfg: ModelConfig, mesh, zero3: bool) -> Rules:
+    tp = tp_size(mesh)
+    return make_rules(mesh, tp_heads=cfg.num_heads % tp == 0,
+                      tp_kv=cfg.num_kv_heads % tp == 0, zero3=zero3)
+
+
+def model_pspecs(cfg: ModelConfig, mesh, zero3: bool = False):
+    return param_pspecs(tf.model_defs(cfg), make_param_rules(cfg, mesh, zero3))
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, batch: int, cache_len: int,
+                 zero3: bool = False):
+    return param_pspecs(tf.cache_defs(cfg, batch, cache_len),
+                        make_param_rules(cfg, mesh, zero3))
+
+
+def init_model(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    dtype = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    return init_params(tf.model_defs(cfg), key, dtype)
+
+
+def abstract_model(cfg: ModelConfig):
+    dtype = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    return abstract_params(tf.model_defs(cfg), dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Batches
+# ---------------------------------------------------------------------- #
+def batch_defs(cfg: ModelConfig, shape: InputShape):
+    """PD tree for one input batch of the given shape."""
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "decode":
+        return {"tokens": PD((b,), ("batch",))}
+    out = {}
+    if cfg.frontend == "audio":
+        out["frames"] = PD((b, s, d), ("batch", None, None))
+    else:
+        out["tokens"] = PD((b, s), ("batch", None))
+        if cfg.frontend == "vision":
+            out["patches"] = PD((b, cfg.num_prefix_tokens, d),
+                                ("batch", None, None))
+    if shape.kind == "train":
+        out["labels"] = PD((b, s), ("batch", None))
+        if cfg.family == "encoder":
+            out["mask"] = PD((b, s), ("batch", None))
+    return out
+
+
+_BATCH_DTYPES = {"tokens": jnp.int32, "labels": jnp.int32, "mask": jnp.bool_,
+                 "frames": jnp.bfloat16, "patches": jnp.bfloat16}
+
+
+def batch_abstract(cfg, shape):
+    defs = batch_defs(cfg, shape)
+    return {k: jax.ShapeDtypeStruct(pd.shape, _BATCH_DTYPES[k])
+            for k, pd in defs.items()}
+
+
+def batch_pspecs(cfg, shape, mesh, zero3=False):
+    rules = make_param_rules(cfg, mesh, zero3)
+    return {k: rules.spec(pd) for k, pd in batch_defs(cfg, shape).items()}
+
+
+def concrete_batch(cfg, shape, seed=0):
+    """Real (host) batch for smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, sds in batch_abstract(cfg, shape).items():
+        if k in ("tokens", "labels"):
+            out[k] = rng.integers(0, cfg.vocab_size, sds.shape,
+                                  dtype=np.int32)
+        elif k == "mask":
+            out[k] = rng.random(sds.shape) < 0.1
+        else:
+            out[k] = rng.normal(0, 1, sds.shape).astype(np.float32)
+    return out
+
+
+def decode_cache_len(cfg, shape: InputShape) -> int:
+    if cfg.attn_type == "sliding":
+        return cfg.num_meta_tokens + cfg.window
+    return shape.seq_len + DECODE_PAD
+
+
+def cache_abstract(cfg, shape: InputShape):
+    defs = tf.cache_defs(cfg, shape.global_batch,
+                         decode_cache_len(cfg, shape))
+    def dt(path_key, pd):
+        if path_key in ("slot_pos", "pos"):
+            return jnp.int32
+        if path_key in ("S", "h"):
+            return jnp.float32
+        if path_key in ("prev_tm", "prev_cm"):
+            return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    out = {"blocks": {}, }
+    for k, pd in defs["blocks"].items():
+        out["blocks"][k] = jax.ShapeDtypeStruct(pd.shape, dt(k, pd))
+    out["slot_pos"] = jax.ShapeDtypeStruct(defs["slot_pos"].shape, jnp.int32)
+    out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Step functions
+# ---------------------------------------------------------------------- #
+def make_loss_fn(cfg: ModelConfig, mesh=None, *, remat=True):
+    shd = make_sharder(cfg, mesh)
+
+    def loss(params, batch):
+        cast = jax.tree.map(
+            lambda x: x.astype(tf.cfg_dtype(cfg))
+            if x.dtype in (jnp.float32, jnp.bfloat16) else x, params)
+        return tf.loss_fn(cfg, cast, batch, shd, remat=remat)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+    shd = make_sharder(cfg, mesh)
+    bf16_grads = tcfg.grad_dtype == "bfloat16"
+
+    def loss_inner(cast_params, batch):
+        return tf.loss_fn(cfg, cast_params, batch, shd, remat=tcfg.remat)
+
+    inner_grad = jax.value_and_grad(loss_inner, has_aux=True)
+
+    def grad_fn(params, batch):
+        if bf16_grads:
+            # differentiate wrt the bf16 copies: gradients (and their DP
+            # all-reduce) stay bf16 — 2x less reduce traffic; the fp32
+            # master update happens in the optimizer.
+            cast = jax.tree.map(
+                lambda x: x.astype(tf.cfg_dtype(cfg))
+                if x.dtype in (jnp.float32, jnp.bfloat16) else x, params)
+            return inner_grad(cast, batch)
+        loss = make_loss_fn(cfg, mesh, remat=tcfg.remat)
+        return jax.value_and_grad(loss, has_aux=True)(params, batch)
+
+    n_mb = tcfg.microbatch
+
+    def train_step(params, opt_state, batch, step):
+        if n_mb == 1:
+            (l, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), m
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, l_sum), ms = jax.lax.scan(acc, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            l = l_sum / n_mb
+            metrics = {k: v.mean() for k, v in ms.items()}
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = cosine_schedule(step, lr=tcfg.lr, warmup=tcfg.warmup,
+                             total_steps=tcfg.total_steps)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr,
+            b1=tcfg.adam_b1, b2=tcfg.adam_b2, eps=tcfg.adam_eps,
+            weight_decay=tcfg.weight_decay)
+        metrics = {"loss": l, "grad_norm": gnorm, "lr": lr, **metrics}
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh=None, *, cache_len=0):
+    shd = make_sharder(cfg, mesh)
+
+    def fn(params, batch):
+        cast = jax.tree.map(
+            lambda x: x.astype(tf.cfg_dtype(cfg))
+            if x.dtype in (jnp.float32, jnp.bfloat16) else x, params)
+        return tf.prefill(cfg, cast, batch, shd, cache_len=cache_len)
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig, mesh=None):
+    shd = make_sharder(cfg, mesh)
+
+    def fn(params, cache, tokens):
+        cast = jax.tree.map(
+            lambda x: x.astype(tf.cfg_dtype(cfg))
+            if x.dtype in (jnp.float32, jnp.bfloat16) else x, params)
+        return tf.decode_step(cfg, cast, cache, tokens, shd)
+    return fn
+
+
+def opt_abstract(cfg: ModelConfig, tcfg: TrainConfig):
+    dt = jnp.float32 if tcfg.opt_state_dtype == "float32" else jnp.bfloat16
+    p = abstract_model(cfg)
+    zeros = lambda s: jax.ShapeDtypeStruct(s.shape, dt)
+    return {"m": jax.tree.map(zeros, p), "v": jax.tree.map(zeros, p),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_pspecs(cfg: ModelConfig, mesh, zero3=False):
+    ps = model_pspecs(cfg, mesh, zero3)
+    return {"m": ps, "v": ps, "step": PS()}

@@ -1,0 +1,221 @@
+"""Shared neural ops: norms, rotary, flash attention (jnp, memory-bounded),
+decode attention over (possibly ring) KV caches, FFNs.
+
+Attention memory discipline: full [S, S] score materialization is never
+allowed — prefill_32k would need TBs.  `flash_attention` scans KV in chunks
+with an online softmax (running max / normalizer), keeping peak block
+memory at B*H*S_q*kv_chunk.
+
+Sharding is jit/SPMD-global: all shapes here are global; `Sharder`
+constraints tell XLA how to partition (TP on heads when divisible, else
+context-parallel on the query-sequence dim).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+
+# ---------------------------------------------------------------------- #
+@dataclass
+class Sharder:
+    mesh: object | None
+    dp: tuple                      # data-parallel mesh axes, e.g. ('pod','data')
+    tp_heads: bool                 # q-heads divisible by tp size
+    tp_kv: bool
+
+    def _ok(self, dim, axis):
+        if axis is None:
+            return None
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        flat = axis if isinstance(axis, tuple) else (axis,)
+        n = 1
+        for a in flat:
+            n *= sizes[a]
+        return axis if dim % n == 0 else None
+
+    def c(self, x, *axes):
+        """Constraint x to PartitionSpec(axes), dropping non-divisible."""
+        if self.mesh is None:
+            return x
+        parts = [self._ok(d, a) for d, a in zip(x.shape, axes)]
+        used = set()
+        clean = []
+        for a in parts:
+            flat = a if isinstance(a, tuple) else (a,) if a else ()
+            if any(f in used for f in flat):
+                clean.append(None)
+            else:
+                clean.append(a)
+                used.update(flat)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, PS(*clean)))
+
+
+NO_SHARD = Sharder(mesh=None, dp=(), tp_heads=False, tp_kv=False)
+
+
+# ---------------------------------------------------------------------- #
+def rms_norm(x, gamma, eps=1e-5):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rotary(x, positions, theta=10_000.0):
+    """x [..., S, hd] (hd even), positions [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def ffn(x, w1, w2, w3=None):
+    """SwiGLU when w3 given, GELU 2-matrix otherwise."""
+    if w3 is not None:
+        h = jax.nn.silu(x @ w1) * (x @ w3)
+    else:
+        h = jax.nn.gelu(x @ w1)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------- #
+def _mask_block(qpos, kpos, *, causal, window, n_meta):
+    """[qc, kc] additive-mask boolean: True = attend."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window:
+        in_window = (qpos[:, None] - kpos[None, :]) < window
+        is_meta = kpos[None, :] < n_meta
+        ok &= in_window | is_meta
+    return ok
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, n_meta=0,
+                    kv_chunk=1024, shd: Sharder = NO_SHARD,
+                    softmax_scale=None):
+    """q [B, Hq, Sq, hd]; k, v [B, Hkv, Skv, hd] -> [B, Hq, Sq, hd].
+
+    GQA via head grouping; online-softmax scan over KV chunks.  Causal
+    rectangle is masked, not skipped (triangular scheduling is a recorded
+    §Perf candidate).
+    """
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    scale = softmax_scale or hd ** -0.5
+    qg = q.reshape(b, hkv, g, sq, hd)
+    kv_chunk = min(kv_chunk, skv)
+    skv_real = skv
+    if skv % kv_chunk:                       # pad KV; padded keys masked off
+        pad = kv_chunk - skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        skv = skv + pad
+    nk = skv // kv_chunk
+
+    kc = k.reshape(b, hkv, nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(sq)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kb, vb, ki = inp                                  # [B,Hkv,kc,hd]
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+        ok = _mask_block(qpos, kpos, causal=causal, window=window,
+                         n_meta=n_meta)
+        ok &= (kpos < skv_real)[None, :]
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        # guard -inf rows (no valid key yet)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(ok[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kc, vc, jnp.arange(nk)))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- #
+def decode_attention(q, k_cache, v_cache, slot_positions, pos, *,
+                     window=0, n_meta=0, shd: Sharder = NO_SHARD,
+                     softmax_scale=None):
+    """Single-step attention over a cache.
+
+    q [B, Hq, hd]; caches [B, Hkv, C, hd]; slot_positions [C] int32 (the
+    absolute position stored in each slot, -1 = empty); pos = current
+    query position (scalar int32).
+    """
+    b, hq, hd = q.shape
+    _, hkv, c, _ = k_cache.shape
+    g = hq // hkv
+    scale = softmax_scale or hd ** -0.5
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (slot_positions >= 0) & (slot_positions <= pos)
+    if window:
+        in_w = (pos - slot_positions) < window
+        valid &= in_w | (slot_positions < n_meta)
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgc,bhcd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- #
+def chunked_cross_entropy(x, embed, labels, *, chunk=512,
+                          shd: Sharder = NO_SHARD, mask=None):
+    """Next-token CE without materializing [B, S, V] logits.
+
+    x [B, S, D]; embed [V, D]; labels [B, S] int32; mask [B, S] optional.
+    Scans sequence chunks; each chunk's logits are vocab-sharded.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    ns = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    xc = x.reshape(b, ns, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, ns, chunk).transpose(1, 0, 2)
+    mc = (mask.reshape(b, ns, chunk).transpose(1, 0, 2)
+          if mask is not None else jnp.ones((ns, b, chunk), bool))
+
+    @functools.partial(jax.checkpoint, policy=None)
+    def step(carry, inp):
+        tot, cnt = carry
+        xb, yb, mb = inp
+        logits = shd.c(
+            jnp.einsum("bsd,vd->bsv", xb, embed,
+                       preferred_element_type=jnp.float32),
+            shd.dp, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mb
+        return (tot + nll.sum(), cnt + mb.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,133 @@
+"""Parameter definition & sharding infrastructure.
+
+Models declare parameters as trees of PD (shape + logical axis names).
+From one declaration we derive: init (real arrays, smoke tests),
+abstract ShapeDtypeStructs (dry-run — no allocation), and PartitionSpecs
+(logical axis -> mesh axis via a rules table with divisibility fallback).
+
+Logical axes:
+  vocab   token embedding rows          -> 'model'
+  embed   d_model                        -> None (or dp axes under ZeRO-3)
+  heads   flattened q-head dim (H*hd)    -> 'model' when H % tp == 0
+  kv      flattened kv-head dim          -> 'model' when KV % tp == 0
+  ff      feed-forward hidden            -> 'model'
+  expert  MoE expert count               -> 'model'
+  layers  stacked-scan leading dim       -> None
+  ssm/state/misc                         -> None
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+
+@dataclass(frozen=True)
+class PD:
+    shape: tuple
+    axes: tuple                  # logical axis name (or None) per dim
+    init: str = "normal"         # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def tree_map_pd(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=lambda x: isinstance(x, PD))
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, PD))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, pd in zip(keys, leaves):
+        if pd.init == "zeros":
+            out.append(jnp.zeros(pd.shape, dtype))
+        elif pd.init == "ones":
+            out.append(jnp.ones(pd.shape, dtype))
+        else:
+            out.append(jax.random.normal(k, pd.shape, dtype) * pd.scale)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.float32):
+    return tree_map_pd(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype), defs)
+
+
+@dataclass
+class Rules:
+    """logical axis -> mesh axis (name or tuple).  Divisibility-checked."""
+    table: dict
+    mesh_sizes: dict             # mesh axis name -> size
+
+    def _size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh_sizes[a]
+            return n
+        return self.mesh_sizes[axis]
+
+    def resolve(self, logical, dim) -> Any:
+        axis = self.table.get(logical)
+        if axis is None:
+            return None
+        if dim % self._size(axis) != 0:
+            return None
+        return axis
+
+    def spec(self, pd: PD) -> PS:
+        used = set()
+        parts = []
+        for dim, logical in zip(pd.shape, pd.axes):
+            a = self.resolve(logical, dim)
+            # a mesh axis may appear only once per spec
+            flat = a if isinstance(a, tuple) else (a,) if a else ()
+            if any(f in used for f in flat):
+                a = None
+            used.update(flat)
+            parts.append(a)
+        return PS(*parts)
+
+
+def param_pspecs(defs, rules: Rules):
+    return tree_map_pd(rules.spec, defs)
+
+
+def make_rules(mesh, *, tp_heads: bool, tp_kv: bool,
+               zero3: bool = False) -> Rules:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp = dp if len(dp) > 1 else dp[0] if dp else None
+    table = {
+        "vocab": "model",
+        "ff": "model",
+        "expert": "model",
+        "heads": "model" if tp_heads else None,
+        "kv": "model" if tp_kv else None,
+        "embed": dp if zero3 else None,
+        "layers": None,
+        # decode caches / states
+        "batch": dp,
+        "cache_seq": "model",
+    }
+    return Rules(table=table, mesh_sizes=sizes)
+
+
+def count_params(defs) -> int:
+    total = 0
+    for pd in jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, PD)):
+        n = 1
+        for s in pd.shape:
+            n *= s
+        total += n
+    return int(total)

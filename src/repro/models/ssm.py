@@ -1,0 +1,112 @@
+"""Mamba-style selective SSM heads (the SSM half of Hymba's hybrid block).
+
+Per head (dim hd, state size N):
+    Δ_t = softplus(x_t W_Δ + b_Δ)            [B, S, H, hd]
+    B_t, C_t = x_t W_B, x_t W_C              [B, S, H, N]
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + Δ_t ⊙ (B_t ⊗ x_t)
+    y_t = (h_t · C_t) + D ⊙ x_t
+A is a learned negative diagonal (stored as log).  Sequence evaluation is
+an exact lax.scan (chunked parallel form is a §Perf candidate, noted in
+EXPERIMENTS.md); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .param import PD
+
+
+def ssm_defs(cfg, lead=()):
+    d = cfg.d_model
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    hd = d // h
+    la = ("layers",) if lead else ()
+    def m(shape, axes, **kw):
+        return PD(lead + shape, la + axes, **kw)
+    return {
+        "Wx": m((d, d), ("embed", "heads")),
+        "Wdt": m((d, h), ("embed", None)),
+        "bdt": m((h,), (None,), init="zeros"),
+        "WB": m((d, h * n), ("embed", None)),
+        "WC": m((d, h * n), ("embed", None)),
+        "Alog": m((h, hd, n), (None, None, None), init="zeros"),
+        "D": m((h, hd), (None, None), init="ones"),
+        "Wo": m((d, d), ("heads", "embed")),
+    }
+
+
+def _proj(cfg, p, x):
+    b, s, d = x.shape
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    hd = d // h
+    xh = (x @ p["Wx"]).reshape(b, s, h, hd)
+    dt = jax.nn.softplus(x @ p["Wdt"] + p["bdt"]).astype(jnp.float32)
+    bb = (x @ p["WB"]).reshape(b, s, h, n).astype(jnp.float32)
+    cc = (x @ p["WC"]).reshape(b, s, h, n).astype(jnp.float32)
+    a = -jnp.exp(p["Alog"].astype(jnp.float32))            # [H, hd, N] < 0
+    return xh, dt, bb, cc, a
+
+
+def ssm_scan(cfg, p, x, h0, chunk: int = 128):
+    """x [B,S,D]; h0 [B,H,hd,N] f32.  Returns (y [B,S,D], h_fin).
+
+    Two-level scan: the outer scan walks chunks (its carry — one state per
+    chunk boundary — is all the backward pass stores), the inner per-step
+    scan is wrapped in jax.checkpoint so its states are recomputed, not
+    saved.  Keeps training memory at O(S/chunk + chunk) states instead of
+    O(S)."""
+    b, s_real, d = x.shape
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    hd = d // h
+    xh, dt, bb, cc, a = _proj(cfg, p, x)
+    c = min(chunk, s_real)
+    s = s_real
+    if s % c:
+        pad = c - s % c
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, bb, cc = zp(xh), zp(bb), zp(cc)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # Δ=0 -> state-neutral
+        s += pad
+    nc = s // c
+
+    def step(hc, inp):
+        xt, dtt, bt, ct = inp          # [B,H,hd], [B,H], [B,H,N], [B,H,N]
+        decay = jnp.exp(dtt[..., None, None] * a[None])    # [B,H,hd,N]
+        inc = dtt[..., None, None] * bt[:, :, None, :] \
+            * xt.astype(jnp.float32)[..., None]
+        hc = decay * hc + inc
+        y = jnp.einsum("bhdn,bhn->bhd", hc, ct)
+        return hc, y
+
+    def to_chunks(t):                  # [B,S,...] -> [nc, c, B, ...]
+        t = t.reshape((b, nc, c) + t.shape[2:])
+        return t.transpose((1, 2, 0) + tuple(range(3, t.ndim)))
+
+    xs = tuple(to_chunks(t) for t in (xh, dt, bb, cc))
+
+    @jax.checkpoint
+    def chunk_body(hc, inp):
+        h_new, ys = jax.lax.scan(step, hc, inp)
+        return h_new, ys
+
+    h_fin, ys = jax.lax.scan(chunk_body, h0, xs)            # ys [nc, c, B, H, hd]
+    y = ys.reshape(s, b, h, hd).transpose(1, 0, 2, 3)[:, :s_real]
+    y = y.astype(x.dtype) + xh[:, :s_real] * p["D"][None, None]
+    return y.reshape(b, s_real, d) @ p["Wo"], h_fin
+
+
+def ssm_step(cfg, p, x, hc):
+    """x [B,D] -> (y [B,D], h_new)."""
+    b, d = x.shape
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    hd = d // h
+    xh, dt, bb, cc, a = _proj(cfg, p, x[:, None])
+    xt, dtt, bt, ct = xh[:, 0], dt[:, 0], bb[:, 0], cc[:, 0]
+    decay = jnp.exp(dtt[..., None, None] * a[None])
+    inc = dtt[..., None, None] * bt[:, :, None, :] \
+        * xt.astype(jnp.float32)[..., None]
+    h_new = decay * hc + inc
+    y = jnp.einsum("bhdn,bhn->bhd", h_new, ct).astype(x.dtype)
+    y = y + xt * p["D"][None]
+    return y.reshape(b, d) @ p["Wo"], h_new

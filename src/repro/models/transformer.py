@@ -1,0 +1,531 @@
+"""Composable model assembly for every assigned architecture family.
+
+One scan "block" covers `moe_every` layers (so interleaved-MoE models stay
+scan-uniform); block params are stacked on a leading 'layers' dim and the
+trunk is a lax.scan over blocks (small HLO, XLA can pipeline ZeRO-3
+gathers), with optional per-block remat.
+
+Entry points (all pure functions of (cfg, params, ...)):
+  loss_fn       train loss (chunked CE / masked CE for encoders)
+  prefill       full-sequence forward producing decode caches + last logits
+  decode_step   one token with cache/state (the serve_step of decode shapes)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .param import PD
+from .nn_ops import (Sharder, NO_SHARD, rms_norm, rotary, ffn,
+                     flash_attention, decode_attention,
+                     chunked_cross_entropy)
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from . import ssm as ssm_mod
+
+
+# ====================================================================== #
+# Parameter definitions
+# ====================================================================== #
+def n_blocks(cfg) -> int:
+    if cfg.family == "moe":
+        assert cfg.num_layers % cfg.moe_every == 0
+        return cfg.num_layers // cfg.moe_every
+    return cfg.num_layers
+
+
+def layers_per_block(cfg) -> int:
+    return cfg.moe_every if cfg.family == "moe" else 1
+
+
+def _attn_defs(cfg, lead):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    la = ("layers",) if lead else ()
+    def m(shape, axes, **kw):
+        return PD(lead + shape, la + axes, **kw)
+    defs = {
+        "norm": m((d,), ("embed",), init="ones"),
+        "wq": m((d, h * hd), ("embed", "heads")),
+        "wk": m((d, kv * hd), ("embed", "kv")),
+        "wv": m((d, kv * hd), ("embed", "kv")),
+        "wo": m((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = m((h * hd,), ("heads",), init="zeros")
+        defs["bk"] = m((kv * hd,), ("kv",), init="zeros")
+        defs["bv"] = m((kv * hd,), ("kv",), init="zeros")
+    return defs
+
+
+def _ffn_defs(cfg, lead):
+    d, f = cfg.d_model, cfg.d_ff
+    la = ("layers",) if lead else ()
+    def m(shape, axes, **kw):
+        return PD(lead + shape, la + axes, **kw)
+    defs = {
+        "norm": m((d,), ("embed",), init="ones"),
+        "w1": m((d, f), ("embed", "ff")),
+        "w2": m((f, d), ("ff", "embed")),
+    }
+    if cfg.gated_ffn:
+        defs["w3"] = m((d, f), ("embed", "ff"))
+    return defs
+
+
+def block_defs(cfg):
+    nb = n_blocks(cfg)
+    lead = (nb,)
+    fam = cfg.family
+    if fam == "rwkv6":
+        return {
+            "tm": rwkv_mod.time_mix_defs(cfg, lead),
+            "tm_norm": PD(lead + (cfg.d_model,), ("layers", "embed"),
+                          init="ones"),
+            "cm": rwkv_mod.channel_mix_defs(cfg, lead),
+            "cm_norm": PD(lead + (cfg.d_model,), ("layers", "embed"),
+                          init="ones"),
+        }
+    if fam == "hybrid":
+        return {
+            "attn": _attn_defs(cfg, lead),
+            "ssm": ssm_mod.ssm_defs(cfg, lead),
+            "ssm_norm": PD(lead + (cfg.d_model,), ("layers", "embed"),
+                           init="ones"),
+            "mlp": _ffn_defs(cfg, lead),
+        }
+    if fam == "moe":
+        out = {}
+        for i in range(cfg.moe_every):
+            out[f"attn{i}"] = _attn_defs(cfg, lead)
+            if i == cfg.moe_every - 1:
+                out[f"moe{i}"] = moe_mod.moe_param_defs(cfg, nb)
+                out[f"moe{i}"]["norm"] = PD(
+                    lead + (cfg.d_model,), ("layers", "embed"), init="ones")
+            else:
+                out[f"mlp{i}"] = _ffn_defs(cfg, lead)
+        return out
+    # dense / vlm / encoder
+    return {"attn": _attn_defs(cfg, lead), "mlp": _ffn_defs(cfg, lead)}
+
+
+def model_defs(cfg):
+    d, v = cfg.d_model, cfg.vocab_size
+    defs = {
+        "blocks": block_defs(cfg),
+        "final_norm": PD((d,), ("embed",), init="ones"),
+    }
+    if cfg.frontend != "audio":
+        defs["embed"] = PD((v, d), ("vocab", "embed"))
+    if not cfg.tie_embeddings or cfg.frontend == "audio":
+        defs["unembed"] = PD((v, d), ("vocab", "embed"))
+    if cfg.num_meta_tokens:
+        defs["meta"] = PD((cfg.num_meta_tokens, d), (None, "embed"))
+    return defs
+
+
+def unembed_matrix(cfg, params):
+    return params.get("unembed", params.get("embed"))
+
+
+def prefix_len(cfg) -> int:
+    return cfg.num_prefix_tokens + cfg.num_meta_tokens
+
+
+# ====================================================================== #
+# Block forward (full sequence: train / prefill)
+# ====================================================================== #
+def _attention_seq(cfg, p, x, shd, *, make_cache=False, cache_len=0):
+    """Full-sequence attention sublayer.  Returns (y, cache | None)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    hin = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = hin @ p["wq"]
+    k = hin @ p["wk"]
+    v = hin @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    pos = jnp.arange(s)
+    q = rotary(q, pos[None, None], cfg.rope_theta)
+    k = rotary(k, pos[None, None], cfg.rope_theta)
+    if shd.tp_heads:
+        q = shd.c(q, shd.dp, "model", None, None)
+        k = shd.c(k, shd.dp, "model" if shd.tp_kv else None, None, None)
+        v = shd.c(v, shd.dp, "model" if shd.tp_kv else None, None, None)
+    else:   # context parallel: shard query sequence, replicate KV
+        q = shd.c(q, shd.dp, None, "model", None)
+        k = shd.c(k, shd.dp, None, None, None)
+        v = shd.c(v, shd.dp, None, None, None)
+    y = flash_attention(
+        q, k, v, causal=cfg.causal,
+        window=cfg.window if cfg.attn_type == "sliding" else 0,
+        n_meta=cfg.num_meta_tokens, shd=shd)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    out = y @ p["wo"]
+    cache = None
+    if make_cache:
+        cl = cache_len or s
+        ck = jnp.zeros((b, kv, cl, hd), k.dtype)
+        cv = jnp.zeros((b, kv, cl, hd), v.dtype)
+        if cfg.attn_type == "sliding":
+            # meta region + ring region, entries placed at their decode
+            # write-slots so prefill and decode_step stay consistent
+            n_meta = cfg.num_meta_tokens
+            w = cl - n_meta
+            take = min(s - n_meta, w)
+            ck = ck.at[:, :, :n_meta].set(k[:, :, :n_meta])
+            cv = cv.at[:, :, :n_meta].set(v[:, :, :n_meta])
+            p_arr = jnp.arange(s - take, s)
+            slots = n_meta + (p_arr - n_meta) % w
+            ck = ck.at[:, :, slots].set(k[:, :, p_arr])
+            cv = cv.at[:, :, slots].set(v[:, :, p_arr])
+        else:
+            take = min(s, cl)
+            ck = ck.at[:, :, :take].set(k[:, :, s - take:])
+            cv = cv.at[:, :, :take].set(v[:, :, s - take:])
+        cache = {"k": shd.c(ck, shd.dp, None, "model", None),
+                 "v": shd.c(cv, shd.dp, None, "model", None)}
+    return out, cache
+
+
+def _ffn_seq(cfg, p, x, shd):
+    hin = rms_norm(x, p["norm"], cfg.norm_eps)
+    return ffn(hin, p["w1"], p["w2"], p.get("w3"))
+
+
+def block_forward(cfg, bp, x, shd, *, make_cache=False, cache_len=0):
+    """One scan block over the full sequence.
+
+    Returns (x, (cache, metrics))."""
+    fam = cfg.family
+    metrics = {}
+    cache = {}
+    if fam == "rwkv6":
+        b = x.shape[0]
+        hd, d = cfg.rwkv_head_dim, cfg.d_model
+        h = rwkv_mod.rwkv_heads(cfg)
+        s0 = (jnp.zeros((b, h, hd, hd), jnp.float32), jnp.zeros((b, d), x.dtype))
+        y, (s_fin, prev_tm) = rwkv_mod.time_mix_chunked(
+            cfg, bp["tm"], rms_norm(x, bp["tm_norm"], cfg.norm_eps), s0)
+        x = x + y
+        y, prev_cm = rwkv_mod.channel_mix(
+            cfg, bp["cm"], rms_norm(x, bp["cm_norm"], cfg.norm_eps),
+            jnp.zeros((b, d), x.dtype))
+        x = x + y
+        if make_cache:
+            cache = {"S": s_fin, "prev_tm": prev_tm, "prev_cm": prev_cm}
+    elif fam == "hybrid":
+        y_attn, c = _attention_seq(cfg, bp["attn"], x, shd,
+                                   make_cache=make_cache, cache_len=cache_len)
+        hin = rms_norm(x, bp["ssm_norm"], cfg.norm_eps)
+        b = x.shape[0]
+        h0 = jnp.zeros((b, cfg.ssm_heads, cfg.d_model // cfg.ssm_heads,
+                        cfg.ssm_state), jnp.float32)
+        y_ssm, h_fin = ssm_mod.ssm_scan(cfg, bp["ssm"], hin, h0)
+        x = x + y_attn + y_ssm
+        x = x + _ffn_seq(cfg, bp["mlp"], x, shd)
+        if make_cache:
+            cache = {**(c or {}), "h": h_fin}
+    elif fam == "moe":
+        for i in range(cfg.moe_every):
+            y, c = _attention_seq(cfg, bp[f"attn{i}"], x, shd,
+                                  make_cache=make_cache, cache_len=cache_len)
+            x = x + y
+            if make_cache:
+                cache[f"k{i}"] = c["k"]
+                cache[f"v{i}"] = c["v"]
+            if i == cfg.moe_every - 1:
+                mp = bp[f"moe{i}"]
+                hin = rms_norm(x, mp["norm"], cfg.norm_eps)
+                y, m = moe_mod.moe_ffn(cfg, mp, hin, shd)
+                metrics.update(m)
+                x = x + y
+            else:
+                x = x + _ffn_seq(cfg, bp[f"mlp{i}"], x, shd)
+    else:  # dense / vlm / encoder
+        y, c = _attention_seq(cfg, bp["attn"], x, shd,
+                              make_cache=make_cache, cache_len=cache_len)
+        x = x + y
+        x = x + _ffn_seq(cfg, bp["mlp"], x, shd)
+        if make_cache:
+            cache = c or {}
+    return x, (cache, metrics)
+
+
+# ====================================================================== #
+# Trunk
+# ====================================================================== #
+def embed_inputs(cfg, params, batch, shd: Sharder):
+    """Build x0 [B, prefix + S, D] from the batch dict."""
+    if cfg.frontend == "audio":
+        x = batch["frames"].astype(cfg_dtype(cfg))
+    else:
+        emb = params["embed"]
+        x = emb[batch["tokens"]].astype(cfg_dtype(cfg))
+        if cfg.frontend == "vision":
+            x = jnp.concatenate(
+                [batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.num_meta_tokens:
+        b = x.shape[0]
+        meta = jnp.broadcast_to(params["meta"][None].astype(x.dtype),
+                                (b, cfg.num_meta_tokens, x.shape[-1]))
+        x = jnp.concatenate([meta, x], axis=1)
+    return shd.c(x, shd.dp, None, None)
+
+
+def cfg_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def trunk(cfg, params, x, shd, *, remat=True, make_cache=False,
+          cache_len=0):
+    """Scan over blocks.  Returns (x, caches, metrics)."""
+    def body(carry, bp):
+        y, (cache, m) = block_forward(cfg, bp, carry, shd,
+                                      make_cache=make_cache,
+                                      cache_len=cache_len)
+        return y, (cache, m)
+
+    f = jax.checkpoint(body) if remat else body
+    x, (caches, metrics) = jax.lax.scan(f, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    metrics = {k: v.mean() for k, v in metrics.items()} if metrics else {}
+    return x, caches, metrics
+
+
+# ====================================================================== #
+# Losses
+# ====================================================================== #
+def loss_fn(cfg, params, batch, shd: Sharder = NO_SHARD, *, remat=True):
+    """Returns (loss, metrics)."""
+    x = embed_inputs(cfg, params, batch, shd)
+    x, _, metrics = trunk(cfg, params, x, shd, remat=remat)
+    pl = prefix_len(cfg)
+    if pl:
+        x = x[:, pl:]
+    un = unembed_matrix(cfg, params).astype(x.dtype)
+    mask = batch.get("mask")
+    ce = chunked_cross_entropy(x, un, batch["labels"],
+                               chunk=cfg.loss_chunk, shd=shd, mask=mask)
+    loss = ce
+    if "moe_aux" in metrics:
+        loss = loss + 0.01 * metrics["moe_aux"]
+    metrics = {"ce": ce, **metrics}
+    return loss, metrics
+
+
+# ====================================================================== #
+# Prefill & decode
+# ====================================================================== #
+def init_slot_positions(cfg, cache_len: int, filled: int):
+    pos = jnp.arange(cache_len)
+    return jnp.where(pos < filled, pos, -1).astype(jnp.int32)
+
+
+def prefill(cfg, params, batch, shd: Sharder = NO_SHARD, *,
+            cache_len: int = 0):
+    """Full-sequence forward; returns (last_logits, cache_tree)."""
+    x = embed_inputs(cfg, params, batch, shd)
+    s_total = x.shape[1]
+    cache_len = cache_len or s_total
+    x, caches, _ = trunk(cfg, params, x, shd, remat=False,
+                         make_cache=True, cache_len=cache_len)
+    un = unembed_matrix(cfg, params).astype(x.dtype)
+    last = x[:, -1]
+    logits = shd.c(jnp.einsum("bd,vd->bv", last, un,
+                              preferred_element_type=jnp.float32),
+                   shd.dp, "model")
+    if cfg.family in ("rwkv6",):
+        slot_pos = jnp.zeros((0,), jnp.int32)
+    elif cfg.attn_type == "sliding":
+        n_meta = cfg.num_meta_tokens
+        w = cache_len - n_meta
+        take = min(s_total - n_meta, w)
+        slot_pos = jnp.full((cache_len,), -1, jnp.int32)
+        slot_pos = slot_pos.at[:n_meta].set(jnp.arange(n_meta))
+        p_arr = jnp.arange(s_total - take, s_total)
+        slot_pos = slot_pos.at[n_meta + (p_arr - n_meta) % w].set(p_arr)
+    else:
+        take = min(s_total, cache_len)
+        slot_pos = init_slot_positions(cfg, cache_len, take)
+        slot_pos = jnp.where(slot_pos >= 0,
+                             slot_pos + (s_total - take), -1)
+    cache = {"blocks": caches, "slot_pos": slot_pos,
+             "pos": jnp.asarray(s_total, jnp.int32)}
+    return logits, cache
+
+
+def _write_slot(cfg, pos, cache_len):
+    """Slot to write position `pos` into (ring for sliding windows)."""
+    if cfg.attn_type == "sliding":
+        n_meta = cfg.num_meta_tokens
+        w = cache_len - n_meta
+        return jnp.where(pos < n_meta, pos, n_meta + (pos - n_meta) % w)
+    return jnp.minimum(pos, cache_len - 1)
+
+
+def _attention_step(cfg, p, x, cache, slot_pos, pos, slot, shd):
+    b, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    hin = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = hin @ p["wq"]
+    k = hin @ p["wk"]
+    v = hin @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, h, hd)
+    k = k.reshape(b, kv, hd)
+    v = v.reshape(b, kv, hd)
+    q = rotary(q, jnp.full((b, h), pos), cfg.rope_theta)
+    k = rotary(k, jnp.full((b, kv), pos), cfg.rope_theta)
+    ck = jax.lax.dynamic_update_index_in_dim(cache["k"], k, slot, 2)
+    cv = jax.lax.dynamic_update_index_in_dim(cache["v"], v, slot, 2)
+    y = decode_attention(
+        q, ck, cv, slot_pos, pos,
+        window=cfg.window if cfg.attn_type == "sliding" else 0,
+        n_meta=cfg.num_meta_tokens, shd=shd)
+    return y.reshape(b, h * hd) @ p["wo"], {"k": ck, "v": cv}
+
+
+def decode_step(cfg, params, cache, tokens, shd: Sharder = NO_SHARD):
+    """One decode step.  tokens [B] int32.  Returns (logits, new cache)."""
+    pos = cache["pos"]
+    emb = params["embed"]
+    x = emb[tokens].astype(cfg_dtype(cfg))
+    x = shd.c(x, shd.dp, None)
+
+    cache_len = 0
+    if cfg.family != "rwkv6":
+        cache_len = _first_attn_len(cache["blocks"])
+    slot = _write_slot(cfg, pos, cache_len) if cache_len else jnp.int32(0)
+    slot_pos = cache["slot_pos"]
+    if cache_len:
+        slot_pos = slot_pos.at[slot].set(pos)
+
+    def body(x, inp):
+        bp, bc = inp
+        new_c = dict(bc)
+        fam = cfg.family
+        if fam == "rwkv6":
+            st = (bc["S"], bc["prev_tm"])
+            y, (s_new, prev_tm) = rwkv_mod.time_mix_step(
+                cfg, bp["tm"], rms_norm(x, bp["tm_norm"], cfg.norm_eps), st)
+            x = x + y
+            y, prev_cm = rwkv_mod.channel_mix_step(
+                cfg, bp["cm"], rms_norm(x, bp["cm_norm"], cfg.norm_eps),
+                bc["prev_cm"])
+            x = x + y
+            new_c = {"S": s_new, "prev_tm": prev_tm, "prev_cm": prev_cm}
+        elif fam == "hybrid":
+            y_attn, kc = _attention_step(cfg, bp["attn"], x,
+                                         {"k": bc["k"], "v": bc["v"]},
+                                         slot_pos, pos, slot, shd)
+            hin = rms_norm(x, bp["ssm_norm"], cfg.norm_eps)
+            y_ssm, h_new = ssm_mod.ssm_step(cfg, bp["ssm"], hin, bc["h"])
+            x = x + y_attn + y_ssm
+            x = x + _ffn_step(cfg, bp["mlp"], x)
+            new_c = {**kc, "h": h_new}
+        elif fam == "moe":
+            new_c = {}
+            for i in range(cfg.moe_every):
+                y, kc = _attention_step(cfg, bp[f"attn{i}"], x,
+                                        {"k": bc[f"k{i}"], "v": bc[f"v{i}"]},
+                                        slot_pos, pos, slot, shd)
+                x = x + y
+                new_c[f"k{i}"] = kc["k"]
+                new_c[f"v{i}"] = kc["v"]
+                if i == cfg.moe_every - 1:
+                    mp = bp[f"moe{i}"]
+                    hin = rms_norm(x, mp["norm"], cfg.norm_eps)
+                    y, _ = moe_mod.moe_ffn(cfg, mp, hin[:, None], shd)
+                    x = x + y[:, 0]
+                else:
+                    x = x + _ffn_step(cfg, bp[f"mlp{i}"], x)
+        else:
+            y, kc = _attention_step(cfg, bp["attn"], x,
+                                    {"k": bc["k"], "v": bc["v"]},
+                                    slot_pos, pos, slot, shd)
+            x = x + y
+            x = x + _ffn_step(cfg, bp["mlp"], x)
+            new_c = kc
+        return x, new_c
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                           cache["blocks"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    un = unembed_matrix(cfg, params).astype(x.dtype)
+    logits = shd.c(jnp.einsum("bd,vd->bv", x, un,
+                              preferred_element_type=jnp.float32),
+                   shd.dp, "model")
+    new_cache = {"blocks": new_blocks, "slot_pos": slot_pos,
+                 "pos": pos + 1}
+    return logits, new_cache
+
+
+def _ffn_step(cfg, p, x):
+    hin = rms_norm(x, p["norm"], cfg.norm_eps)
+    return ffn(hin, p["w1"], p["w2"], p.get("w3"))
+
+
+def _first_attn_len(blocks) -> int:
+    """Static cache length from any k-cache leaf [nB, B, kv, C, hd]."""
+    for key in ("k", "k0"):
+        node = blocks.get(key) if isinstance(blocks, dict) else None
+        if node is not None:
+            return node.shape[3]
+    # search nested
+    for v in blocks.values():
+        if isinstance(v, dict):
+            r = _first_attn_len(v)
+            if r:
+                return r
+    return 0
+
+
+# ====================================================================== #
+# Cache construction (decode-shape dry-run inputs)
+# ====================================================================== #
+def cache_defs(cfg, batch: int, cache_len: int):
+    """PD tree describing a fully-populated decode cache."""
+    nb = n_blocks(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    d = cfg.d_model
+
+    def kv_pd():
+        return PD((nb, batch, kv, cache_len, hd),
+                  ("layers", "batch", None, "cache_seq", None))
+
+    fam = cfg.family
+    if fam == "rwkv6":
+        rhd = cfg.rwkv_head_dim
+        h = rwkv_mod.rwkv_heads(cfg)
+        blocks = {
+            "S": PD((nb, batch, h, rhd, rhd),
+                    ("layers", "batch", "heads", None, None)),
+            "prev_tm": PD((nb, batch, d), ("layers", "batch", "embed")),
+            "prev_cm": PD((nb, batch, d), ("layers", "batch", "embed")),
+        }
+        slot = PD((0,), (None,))
+    elif fam == "hybrid":
+        hd_ssm = d // cfg.ssm_heads
+        blocks = {
+            "k": kv_pd(), "v": kv_pd(),
+            "h": PD((nb, batch, cfg.ssm_heads, hd_ssm, cfg.ssm_state),
+                    ("layers", "batch", None, None, None)),
+        }
+        slot = PD((cache_len,), ("cache_seq",))
+    elif fam == "moe":
+        blocks = {}
+        for i in range(cfg.moe_every):
+            blocks[f"k{i}"] = kv_pd()
+            blocks[f"v{i}"] = kv_pd()
+        slot = PD((cache_len,), ("cache_seq",))
+    else:
+        blocks = {"k": kv_pd(), "v": kv_pd()}
+        slot = PD((cache_len,), ("cache_seq",))
+    return {"blocks": blocks, "slot_pos": slot, "pos": PD((), ())}

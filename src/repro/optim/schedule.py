@@ -1,0 +1,11 @@
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, lr, warmup, total_steps, min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                    0.0, 1.0)
+    cos = lr * (min_ratio + (1 - min_ratio) * 0.5
+                * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)

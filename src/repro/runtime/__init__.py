@@ -1,0 +1,1 @@
+from .elastic import shrink_mesh, reshard, run_with_retries

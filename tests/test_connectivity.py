@@ -1,0 +1,106 @@
+"""Connectivity check (Alg. 3) vs BFS oracle, including the expensive
+expansion path where d_c exceeds what the index covers."""
+import numpy as np
+import pytest
+
+from repro.core import build_ni_index, connectivity_mask
+from repro.core.connectivity import _bfs_within, reach_sets
+from repro.data import random_graph
+
+
+@pytest.mark.parametrize("d_max,d_c", [(1, 2), (1, 5), (2, 4), (2, 5),
+                                       (3, 5), (3, 6)])
+def test_connectivity_vs_bfs(d_max, d_c):
+    g = random_graph(n_nodes=80, n_edges=240, n_preds=2, seed=d_max * 10 + d_c)
+    ni = build_ni_index(g, d_max=d_max)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, g.num_nodes, 64)
+    b = rng.integers(0, g.num_nodes, 64)
+    got = connectivity_mask(g, ni, a, b, d_c, impl="ref")
+    for i in range(len(a)):
+        fwd = _bfs_within(g, int(a[i]), d_c, True)
+        want = int(b[i]) in fwd
+        assert got[i] == want, (a[i], b[i])
+
+
+def test_connectivity_bidirectional():
+    g = random_graph(n_nodes=60, n_edges=150, n_preds=2, seed=3)
+    ni = build_ni_index(g, d_max=2)
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, g.num_nodes, 32)
+    b = rng.integers(0, g.num_nodes, 32)
+    got = connectivity_mask(g, ni, a, b, 3, bidirectional=True, impl="ref")
+    for i in range(len(a)):
+        fwd = int(b[i]) in _bfs_within(g, int(a[i]), 3, True)
+        bwd = int(a[i]) in _bfs_within(g, int(b[i]), 3, True)
+        assert got[i] == (fwd or bwd)
+
+
+def test_reach_sets_include_self_and_match_bfs():
+    g = random_graph(n_nodes=50, n_edges=160, n_preds=2, seed=9)
+    ni = build_ni_index(g, d_max=2)
+    nodes = np.arange(0, 20)
+    ids, overflow = reach_sets(ni, nodes, hops=2, sign=+1)
+    for i, n in enumerate(nodes):
+        if overflow[i]:
+            continue
+        got = {int(x) for x in ids[i] if x >= 0}
+        want = _bfs_within(g, int(n), 2, True)
+        assert got == want
+
+
+def test_connectivity_vectorized_form_matches():
+    from repro.core.connectivity import connectivity_mask_vectorized
+    import numpy as np
+    from repro.core import build_ni_index, connectivity_mask
+    from repro.data import random_graph
+    g = random_graph(n_nodes=70, n_edges=200, n_preds=2, seed=21)
+    ni = build_ni_index(g, d_max=2)
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, g.num_nodes, 40)
+    b = rng.integers(0, g.num_nodes, 40)
+    m1 = connectivity_mask(g, ni, a, b, 4)
+    m2 = connectivity_mask_vectorized(g, ni, a, b, 4, impl="ref")
+    assert (m1 == m2).all()
+
+
+def test_enumerate_shortest_paths():
+    from repro.core.connectivity import enumerate_shortest_paths
+    import numpy as np
+    from repro.core import build_ni_index, connectivity_mask
+    from repro.data import random_graph
+    g = random_graph(n_nodes=60, n_edges=170, n_preds=2, seed=13)
+    ni = build_ni_index(g, d_max=2)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, g.num_nodes, 30)
+    b = rng.integers(0, g.num_nodes, 30)
+    mask = connectivity_mask(g, ni, a, b, 4)
+    out_adj = {}
+    for s, d in zip(g.src, g.dst):
+        out_adj.setdefault(int(s), set()).add(int(d))
+    for i in range(30):
+        paths = enumerate_shortest_paths(g, int(a[i]), int(b[i]), 4)
+        assert bool(paths) == bool(mask[i])       # consistent existence
+        for p in paths:
+            assert p[0] == a[i] and p[-1] == b[i]
+            assert len(p) - 1 <= 4
+            for u, v in zip(p, p[1:]):            # every hop is an edge
+                assert v in out_adj.get(u, set())
+        if paths:                                  # all same (shortest) len
+            assert len({len(p) for p in paths}) == 1
+
+
+def test_instantiate_connections_end_to_end():
+    from repro.core.connectivity import instantiate_connections
+    from repro.core import make_engine
+    from repro.data import random_graph, random_query
+    g = random_graph(n_nodes=50, n_edges=160, n_preds=2, seed=4)
+    q = random_query(g, size=4, seed=17, n_connection=1, d_c=3)
+    if not q.connections:
+        return
+    r = make_engine(g, "h2", impl="ref").execute(q)
+    inst = instantiate_connections(g, r, q, max_paths=4)
+    assert len(inst) == r.count
+    for row_inst in inst:
+        for paths in row_inst.values():
+            assert paths                           # match => path exists

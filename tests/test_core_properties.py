@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) for the core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (IDMap, build_ni_index, brute_force_match,
+                        make_engine, vertex_cover_2approx)
+from repro.data import random_graph, random_query
+
+
+@st.composite
+def small_graph(draw):
+    seed = draw(st.integers(0, 10_000))
+    n = draw(st.integers(10, 60))
+    e = draw(st.integers(n, 4 * n))
+    return random_graph(n_nodes=n, n_edges=e, n_preds=3,
+                        n_literals=max(3, n // 5), seed=seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(small_graph(), st.text(alphabet="Rl/it 0123456789", max_size=4))
+def test_idmap_prefix_interval(g, prefix):
+    """Every label in [lo,hi) starts with the prefix; none outside do."""
+    idm = IDMap(g)
+    lo, hi = idm.interval(prefix)
+    labels = g.labels
+    inside = labels[lo:hi]
+    assert all(str(s).startswith(prefix) for s in inside)
+    outside = np.concatenate([labels[:lo], labels[hi:]])
+    assert not any(str(s).startswith(prefix) for s in outside)
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_graph(), st.integers(1, 3))
+def test_ni_index_exact_khop(g, d_max):
+    """NI entry at distance d == exact BFS d-hop frontier (unless overflow)."""
+    ni = build_ni_index(g, d_max=d_max)
+    indptr, nbr, _ = g.out_csr
+    rng = np.random.default_rng(0)
+    for n in rng.integers(0, g.num_nodes, size=min(10, g.num_nodes)):
+        # BFS with exact distances.  A self-loop makes a node its own
+        # 1-hop neighbor (shortest path of length >= 1), matching the
+        # index semantics.
+        dist = {int(n): 0}
+        frontier = [int(n)]
+        self_loop = int(n) in set(
+            int(v) for v in nbr[indptr[n]:indptr[n + 1]])
+        for d in range(1, d_max + 1):
+            nxt = []
+            for u in frontier:
+                for v in nbr[indptr[u]:indptr[u + 1]]:
+                    v = int(v)
+                    if v not in dist:
+                        dist[v] = d
+                        nxt.append(v)
+            frontier = nxt
+            want = sorted(v for v, dd in dist.items() if dd == d)
+            if d == 1 and self_loop:
+                want = sorted(set(want) | {int(n)})
+            e = ni.entries[d]
+            if e.overflow[n]:
+                continue
+            got = sorted(int(x) for x in e.ids[n] if x >= 0)
+            assert got == want, (n, d)
+
+
+@settings(max_examples=10, deadline=None)
+@given(small_graph())
+def test_vertex_cover_covers_all_edges(g):
+    vc = vertex_cover_2approx(g)
+    assert all(vc[s] or vc[d] for s, d in zip(g.src, g.dst))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 500), st.integers(3, 5))
+def test_pruning_soundness_and_equivalence(seed, size):
+    """All engine variants return exactly the brute-force match set —
+    i.e. signature pruning never removes a true match (soundness) and the
+    full pipeline adds none (completeness)."""
+    g = random_graph(n_nodes=50, n_edges=150, n_preds=3, n_literals=15,
+                     seed=seed)
+    q = random_query(g, size=size, seed=seed * 7 + 1)
+    want = {tuple(t[c] for c in sorted(range(q.num_nodes)))
+            for t in brute_force_match(g, q)}
+    for variant in ("stwig+", "spath_ni2", "h2", "h3", "hvc"):
+        got = make_engine(g, variant, impl="ref").execute(q).result_set()
+        assert got == want, variant
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 300))
+def test_connection_edge_equivalence(seed):
+    g = random_graph(n_nodes=40, n_edges=130, n_preds=2, n_literals=10,
+                     seed=seed)
+    q = random_query(g, size=4, seed=seed + 11, n_connection=1, d_c=3)
+    if not q.connections:
+        return
+    want = {tuple(t[c] for c in sorted(range(q.num_nodes)))
+            for t in brute_force_match(g, q)}
+    for variant in ("stwig+", "h3"):
+        got = make_engine(g, variant, impl="ref").execute(q).result_set()
+        assert got == want, variant

@@ -1,0 +1,190 @@
+"""Model zoo: per-arch smoke (reduced config, forward/train step, shapes,
+no NaNs) + numerical equivalences (chunked vs step forms, flash vs naive
+attention, chunked vs full CE)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.configs.base import InputShape, TrainConfig, supported_shapes
+from repro.models import api
+from repro.models.nn_ops import flash_attention, chunked_cross_entropy
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.optim import adamw_init
+
+SMOKE = InputShape("smoke", 64, 2, "train")
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_train_step(name):
+    cfg = reduced_config(ARCHS[name])
+    params = api.init_model(cfg, 0)
+    tcfg = TrainConfig(microbatch=2, total_steps=10, warmup=2)
+    step = api.make_train_step(cfg, tcfg)
+    batch = api.concrete_batch(cfg, SMOKE, seed=1)
+    opt = adamw_init(params)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch, 2)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0
+    for leaf in jax.tree.leaves(params2):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "rwkv6-7b", "hymba-1.5b",
+                                  "granite-moe-1b-a400m"])
+def test_arch_loss_decreases(name):
+    cfg = reduced_config(ARCHS[name])
+    params = api.init_model(cfg, 0)
+    tcfg = TrainConfig(lr=3e-3, microbatch=1, total_steps=30, warmup=1)
+    step = jax.jit(api.make_train_step(cfg, tcfg))
+    batch = api.concrete_batch(cfg, SMOKE, seed=1)   # fixed batch: memorize
+    opt = adamw_init(params)
+    losses = []
+    for i in range(8):
+        params, opt, m = step(params, opt, batch, i)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_supported_shapes_skip_rules():
+    assert [s.name for s in supported_shapes(ARCHS["rwkv6-7b"])] == \
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    assert [s.name for s in supported_shapes(ARCHS["hymba-1.5b"])] == \
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    assert [s.name for s in supported_shapes(ARCHS["hubert-xlarge"])] == \
+        ["train_4k", "prefill_32k"]
+    assert [s.name for s in supported_shapes(ARCHS["starcoder2-15b"])] == \
+        ["train_4k", "prefill_32k", "decode_32k"]
+    total = sum(len(supported_shapes(c)) for c in ARCHS.values())
+    assert total == 31
+
+
+# ------------------------------------------------------------------ #
+def test_flash_attention_matches_naive():
+    rng = np.random.default_rng(0)
+    b, h, s, hd = 2, 4, 96, 16
+    q = rng.normal(size=(b, h, s, hd)).astype(np.float32)
+    k = rng.normal(size=(b, 2, s, hd)).astype(np.float32)
+    v = rng.normal(size=(b, 2, s, hd)).astype(np.float32)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=True, kv_chunk=32)
+    # naive
+    qg = q.reshape(b, 2, 2, s, hd)
+    scores = np.einsum("bkgqd,bksd->bkgqs", qg, k) / np.sqrt(hd)
+    mask = np.tril(np.ones((s, s), bool))
+    scores = np.where(mask, scores, -np.inf)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bkgqs,bksd->bkgqd", p, v).reshape(b, h, s, hd)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_sliding_window_with_meta():
+    rng = np.random.default_rng(1)
+    b, h, s, hd, w, m = 1, 2, 64, 8, 16, 4
+    q = rng.normal(size=(b, h, s, hd)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, hd)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, hd)).astype(np.float32)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=True, window=w, n_meta=m, kv_chunk=16)
+    qpos = np.arange(s)[:, None]
+    kpos = np.arange(s)[None, :]
+    ok = (qpos >= kpos) & (((qpos - kpos) < w) | (kpos < m))
+    scores = np.einsum("bhqd,bhsd->bhqs", q, k) / np.sqrt(hd)
+    scores = np.where(ok, scores, -np.inf)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bhqs,bhsd->bhqd", p, v)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_ce_matches_full():
+    rng = np.random.default_rng(2)
+    b, s, d, v = 2, 32, 16, 50
+    x = rng.normal(size=(b, s, d)).astype(np.float32)
+    emb = rng.normal(size=(v, d)).astype(np.float32)
+    labels = rng.integers(0, v, (b, s)).astype(np.int32)
+    got = float(chunked_cross_entropy(jnp.asarray(x), jnp.asarray(emb),
+                                      jnp.asarray(labels), chunk=8))
+    logits = x @ emb.T
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True))
+                 .sum(-1)) + logits.max(-1)
+    nll = lse - np.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    np.testing.assert_allclose(got, nll.mean(), rtol=1e-5)
+
+
+def test_rwkv_chunked_equals_stepwise():
+    cfg = reduced_config(ARCHS["rwkv6-7b"])
+    defs = rwkv_mod.time_mix_defs(cfg)
+    from repro.models.param import init_params
+    p = init_params(defs, jax.random.PRNGKey(0))
+    b, s, d = 2, 24, cfg.d_model
+    h = rwkv_mod.rwkv_heads(cfg)
+    hd = cfg.rwkv_head_dim
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    st0 = (jnp.zeros((b, h, hd, hd), jnp.float32), jnp.zeros((b, d)))
+    y_chunk, (S_c, _) = rwkv_mod.time_mix_chunked(cfg, p, x, st0, chunk=8)
+    # stepwise
+    st = st0
+    ys = []
+    for t in range(s):
+        y, st = rwkv_mod.time_mix_step(cfg, p, x[:, t], st)
+        ys.append(y)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(st[0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_scan_equals_stepwise():
+    cfg = reduced_config(ARCHS["hymba-1.5b"])
+    defs = ssm_mod.ssm_defs(cfg)
+    from repro.models.param import init_params
+    p = init_params(defs, jax.random.PRNGKey(0))
+    b, s, d = 2, 20, cfg.d_model
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    h0 = jnp.zeros((b, h, d // h, n), jnp.float32)
+    y_scan, h_fin = ssm_mod.ssm_scan(cfg, p, x, h0, chunk=8)
+    hc = h0
+    ys = []
+    for t in range(s):
+        y, hc = ssm_mod.ssm_step(cfg, p, x[:, t], hc)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_scan),
+                               np.asarray(jnp.stack(ys, 1)),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_fin), np.asarray(hc),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "rwkv6-7b", "hymba-1.5b",
+                                  "paligemma-3b"])
+def test_decode_matches_prefill(name):
+    cfg = reduced_config(ARCHS[name])
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params = api.init_model(cfg, 0)
+    B, S = 2, 24
+    batch = api.concrete_batch(cfg, InputShape("t", S, B, "prefill"), seed=3)
+    cache_len = api.decode_cache_len(cfg, InputShape("d", S + 8, B, "decode"))
+    _, cache = api.make_prefill_fn(cfg, cache_len=cache_len)(params, batch)
+    nxt = np.full(B, 7, np.int32)
+    logits2, _ = api.make_decode_fn(cfg)(params, cache, jnp.asarray(nxt))
+    b2 = dict(batch)
+    b2["tokens"] = np.concatenate([np.asarray(batch["tokens"]),
+                                   nxt[:, None]], 1)
+    ref, _ = api.make_prefill_fn(cfg, cache_len=cache_len)(params, b2)
+    err = float(jnp.max(jnp.abs(logits2.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < 2e-2 * max(float(jnp.max(jnp.abs(ref))), 1.0)

@@ -1,0 +1,102 @@
+"""Dataset statistics (§4.1, §5) and planner (§4.3) behavior."""
+import numpy as np
+
+from repro.core import (compute_stats, make_engine, Thresholds,
+                        neighborhood_selectivity)
+from repro.core.planner import decide
+from repro.core.decompose import decompose
+from repro.data import DATASETS, random_query
+
+
+def _stats(name, scale=0.05):
+    return compute_stats(DATASETS[name](scale=scale, seed=1))
+
+
+def test_metric_orderings_match_paper():
+    """LUBM-like: highest coherence, lowest specialty, lowest diversity —
+    the paper's predictor of low pruning benefit (Table 1 / §5)."""
+    lubm, dblp, imdb = _stats("lubm"), _stats("dblp"), _stats("imdb")
+    assert lubm.coherence > dblp.coherence > 0
+    assert lubm.coherence > imdb.coherence
+    assert lubm.specialty < dblp.specialty
+    assert lubm.specialty < imdb.specialty
+    assert lubm.diversity < imdb.diversity
+
+
+def test_predicate_selectivity_sums_to_one():
+    g = DATASETS["dblp"](scale=0.05, seed=2)
+    st = compute_stats(g)
+    assert np.isclose(st.pred_selectivity.sum(), 1.0)
+
+
+def test_literal_selectivity_decreases_with_n():
+    g = DATASETS["dblp"](scale=0.05, seed=2)
+    st = compute_stats(g)
+    for pa, table in st.literal_selectivity.items():
+        ns = sorted(table)
+        vals = [table[n] for n in ns]
+        # longer prefixes match fewer labels (non-strict monotonicity)
+        assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+def test_neighborhood_selectivity_nonnegative_and_grows_with_k():
+    g = DATASETS["dblp"](scale=0.05, seed=2)
+    st = compute_stats(g)
+    q = random_query(g, size=5, seed=42)
+    for node in range(q.num_nodes):
+        s1 = neighborhood_selectivity(q, node, st, 1)
+        s2 = neighborhood_selectivity(q, node, st, 2)
+        assert 0 <= s1 <= s2 + 1e-9
+
+
+def test_planner_thresholds_gate_the_check():
+    g = DATASETS["dblp"](scale=0.05, seed=2)
+    st = compute_stats(g)
+    q = random_query(g, size=6, seed=7)
+    iv = q.intervals(make_engine(g, "stwig+").idmap)
+    sizes = {i: int(iv[i, 1] - iv[i, 0]) for i in range(q.num_nodes)}
+    trees = [decompose(q, c, sizes) for c in q.components()]
+    always = decide(q, trees, sizes, st, Thresholds(0, 0, 0), k=2)
+    assert always.use_check       # zero thresholds -> complex & selective
+    never = decide(q, trees, sizes, st,
+                   Thresholds(1e18, 1e18, 1e18), k=2)
+    assert not never.use_check
+
+
+def test_engine_variants_policy():
+    g = DATASETS["lubm"](scale=0.03, seed=1)
+    q = random_query(g, size=4, seed=5)
+    r_never = make_engine(g, "stwig+", impl="ref").execute(q)
+    assert not r_never.stats.used_check
+    r_always = make_engine(g, "spath_ni2", impl="ref").execute(q)
+    assert r_always.stats.used_check
+    assert r_never.result_set() == r_always.result_set()
+
+
+def test_bloom_prefilter_engine_equality():
+    """gStore-style bitstring prefilter never changes results (sound)."""
+    from repro.core import brute_force_match, make_engine
+    from repro.data import random_graph, random_query
+    for seed in range(3):
+        g = random_graph(n_nodes=50, n_edges=150, n_preds=3,
+                         n_literals=15, seed=seed)
+        q = random_query(g, size=4, seed=seed * 5 + 2, exact_nodes=0.5)
+        want = {tuple(t[c] for c in sorted(range(q.num_nodes)))
+                for t in brute_force_match(g, q)}
+        eng = make_engine(g, "spath_ni2", impl="ref")
+        eng.cfg.use_bloom = True
+        assert eng.execute(q).result_set() == want
+
+
+def test_tune_thresholds_grid():
+    from repro.core import tune_thresholds, Thresholds
+
+    # synthetic cost: cheaper when the check is OFF for simple queries
+    class Q:
+        pass
+
+    def cost(q, th):
+        # pretend: low tau_sel forces wasted checks
+        return 1.0 if th.tau_sel >= 8 else 2.0
+    th = tune_thresholds(cost, [Q(), Q()], grid_sel=(4.0, 8.0))
+    assert th.tau_sel >= 8
