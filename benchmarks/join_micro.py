@@ -1,0 +1,84 @@
+"""Join micro-benchmark: nested-loop vs sort-merge equi-join.
+
+Sweeps square table sizes 1e2-1e5 with unit-average fanout (key domain ==
+table size, so |out| ~ |in|), timing warm jitted runs of both strategies
+plus the planner's 'auto' pick at the small end.  Emits BENCH_join.json so
+future PRs can track the speedup trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.matching import Table, join_tables, _pow2
+
+SIZES = (100, 1_000, 10_000, 100_000)
+NESTED_MAX_SIZE = 10_000        # nested above this is minutes-slow on CPU
+SMALL = 256                     # planner hands tables this size to nested
+REPEATS = 3
+
+
+def _mk(cols, n, domain, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, max(domain, 1), (n, len(cols))).astype(np.int32)
+    cap = _pow2(n)
+    rows = np.full((cap, len(cols)), -1, np.int32)
+    rows[:n] = data
+    return Table(cols=tuple(cols), rows=jnp.asarray(rows), count=n)
+
+
+def _time(fn, repeats=REPEATS):
+    fn()                                        # warm: jit + first shapes
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        out.rows.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6                           # us
+
+
+def run():
+    results = {"sizes": [], "nested_us": [], "sorted_us": [],
+               "speedup": [], "small": {}}
+    for n in SIZES:
+        a = _mk((0, 1), n, n, seed=n)
+        b = _mk((1, 2), n, n, seed=n + 1)
+        sorted_us = _time(lambda: join_tables(a, b, impl="sorted"))
+        if n <= NESTED_MAX_SIZE:
+            nested_us = _time(lambda: join_tables(a, b, impl="nested"))
+        else:
+            nested_us = None
+        results["sizes"].append(n)
+        results["nested_us"].append(nested_us)
+        results["sorted_us"].append(sorted_us)
+        speedup = (nested_us / sorted_us) if nested_us else None
+        results["speedup"].append(speedup)
+        yield (f"join.sorted.{n}", sorted_us, f"rows={n}")
+        if nested_us is not None:
+            yield (f"join.nested.{n}", nested_us,
+                   f"speedup={speedup:.1f}x")
+
+    # small-table regime: the planner must not regress vs pure nested
+    a = _mk((0, 1), SMALL, SMALL, seed=9)
+    b = _mk((1, 2), SMALL, SMALL, seed=10)
+    auto_us = _time(lambda: join_tables(a, b, impl="auto"))
+    nested_us = _time(lambda: join_tables(a, b, impl="nested"))
+    ratio = auto_us / nested_us
+    results["small"] = {"size": SMALL, "auto_us": auto_us,
+                        "nested_us": nested_us, "auto_over_nested": ratio}
+    yield (f"join.auto_small.{SMALL}", auto_us,
+           f"auto/nested={ratio:.2f}")
+
+    out_path = os.environ.get("REPRO_BENCH_JOIN_JSON", "BENCH_join.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -5,13 +5,14 @@ from .query import QueryTemplate, QueryEdge, ConnectionEdge, brute_force_match
 from .signature import build_requirements, check_interval_candidates
 from .decompose import DTree, decompose, join_order
 from .matching import Table, join_tables, cross_join, edge_pairs, \
-    dtree_candidates, CapacityOverflow
+    dtree_candidates, CapacityOverflow, resolve_join_impl, filter_rows, \
+    injective_filter
 from .connectivity import (connectivity_mask, reach_sets,
     connectivity_mask_vectorized, enumerate_shortest_paths,
     instantiate_connections)
 from .stats import DatasetStats, compute_stats, predicate_selectivity, \
     literal_selectivity, coherence, relationship_specialty, literal_diversity
 from .planner import Thresholds, PlanDecision, decide, \
-    neighborhood_selectivity, tune_thresholds
+    neighborhood_selectivity, tune_thresholds, JoinEstimator
 from .engine import Engine, EngineConfig, MatchResult, make_engine
 from .distributed import shard_check, gather_candidates

@@ -15,6 +15,7 @@ Engine variants (paper §6):
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 
@@ -28,10 +29,10 @@ from .signature import (build_requirements, check_interval_candidates,
                         build_bloom, bloom_prefilter)
 from .decompose import decompose, join_order, DTree
 from .matching import (Table, CapacityOverflow, dtree_candidates,
-                       join_tables, cross_join, single_node_table,
-                       filter_rows, injective_filter)
+                       cross_join, single_node_table, filter_rows,
+                       injective_filter, planned_join, _pow2)
 from .connectivity import connectivity_mask
-from .planner import Thresholds, PlanDecision, decide
+from .planner import Thresholds, PlanDecision, decide, JoinEstimator
 from .stats import DatasetStats, compute_stats
 
 
@@ -44,6 +45,7 @@ class EngineConfig:
     chunk: int = 8192
     max_rows: int | None = 1 << 20   # LIMIT guard for explosive joins
     use_bloom: bool = False          # gStore-style 1-hop bitstring prefilter
+    join_impl: str = "auto"          # auto (planner per-join) | sorted | nested
 
 
 @dataclass
@@ -59,6 +61,13 @@ class QueryStats:
     total_time: float = 0.0
     join_work: int = 0                  # Σ |A|*|B| over joins (work proxy)
     dtree_work: int = 0                 # Σ D-tree candidate rows generated
+    # join planner telemetry
+    join_strategies: dict = field(default_factory=dict)  # impl -> #joins
+    join_retries: int = 0               # capacity-overflow recompiles
+    n_estimated_joins: int = 0
+    join_est_rows: int = 0              # Σ estimated output rows
+    join_actual_rows: int = 0           # Σ actual output rows
+    join_est_log_err: float = 0.0       # Σ |ln(est/actual)| (accuracy)
 
 
 @dataclass
@@ -149,6 +158,18 @@ class Engine:
 
         # ---- per-component matching -----------------------------------
         t2 = time.perf_counter()
+        estimator = JoinEstimator(self.stats, cand_sizes)
+
+        def record_join(impl, est, actual, retried):
+            qs.join_strategies[impl] = qs.join_strategies.get(impl, 0) + 1
+            qs.join_retries += int(retried)
+            if est is not None:
+                qs.n_estimated_joins += 1
+                qs.join_est_rows += int(est)
+                qs.join_actual_rows += int(actual)
+                qs.join_est_log_err += abs(math.log((est + 1)
+                                                    / (actual + 1)))
+
         comp_tables: list[Table] = []
         for comp, trees in zip(comps, trees_per_comp):
             if not query.component_edges(comp):
@@ -163,8 +184,13 @@ class Engine:
                 continue
             cand_tables = []
             for tr in trees:
-                tab = self._retry(dtree_candidates, self.graph, tr,
-                                  pass_masks, row_limit=self.cfg.max_rows)
+                tab = dtree_candidates(
+                    self.graph, tr, pass_masks,
+                    row_limit=self.cfg.max_rows,
+                    join_impl=self.cfg.join_impl,
+                    nested_max=self.cfg.thresholds.nested_join_max,
+                    probe_impl=self._probe_impl(),
+                    estimator=estimator.edge_join, record=record_join)
                 qs.truncated |= tab.truncated
                 qs.dtree_work += tab.count
                 cand_tables.append(injective_filter(tab))
@@ -172,9 +198,9 @@ class Engine:
             tab = cand_tables[order[0]]
             for i in order[1:]:
                 qs.join_work += max(tab.count, 1) * max(cand_tables[i].count, 1)
-                tab = injective_filter(self._retry(
-                    join_tables, tab, cand_tables[i],
-                    row_limit=self.cfg.max_rows))
+                tab = injective_filter(self._join(
+                    tab, cand_tables[i], estimator,
+                    row_limit=self.cfg.max_rows, record=record_join))
                 qs.truncated |= tab.truncated
             comp_tables.append(tab)
         qs.match_time = time.perf_counter() - t2
@@ -189,13 +215,33 @@ class Engine:
         return MatchResult(cols=final.cols, rows=rows, stats=qs)
 
     # -------------------------------------------------------------- #
+    def _probe_impl(self) -> str:
+        """merge-probe kernel impl for sort-merge joins.  The 'ref' engine
+        impl maps to the semantically identical searchsorted path: the
+        O(A*B) probe oracle exists for kernel validation, not for running
+        real joins."""
+        impl = self.cfg.impl
+        return "sorted" if impl == "ref" else impl
+
+    def _join(self, a: Table, b: Table, estimator: JoinEstimator,
+              row_limit: int | None = None, record=None) -> Table:
+        """Planned equi-join: strategy by table size, capacity pre-sized
+        from the stats-driven cardinality estimate, single exact-size
+        retry on overflow."""
+        shared = tuple(c for c in a.cols if c in b.cols)
+        est = estimator.table_join(a.count, b.count, shared)
+        return planned_join(a, b, est, row_limit=row_limit,
+                            impl=self.cfg.join_impl,
+                            nested_max=self.cfg.thresholds.nested_join_max,
+                            probe_impl=self._probe_impl(), record=record)
+
     def _retry(self, fn, *args, **kw):
         cap = None
         for _ in range(8):
             try:
                 return fn(*args, **kw) if cap is None else fn(*args, cap=cap, **kw)
             except CapacityOverflow as e:
-                cap = 1 << (e.needed - 1).bit_length()
+                cap = _pow2(e.needed)
         raise RuntimeError("capacity retry loop failed")
 
     def _process_connections(self, query: QueryTemplate, comps,

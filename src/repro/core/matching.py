@@ -3,12 +3,24 @@
 TPU-native formulation: candidate generation is *edge-parallel* — one pass
 over the full edge array produces all (root, child) pairs matching a query
 edge (predicate + endpoint pass masks), with no per-node degree padding.
-Joins are vectorized nested-loop equi-joins over padded candidate tables
-(exactly the paper's join predicate: shared query nodes must map equal).
+
+Joins are planned per-pair between two device-resident strategies:
+
+  * ``sorted`` — sort-merge equi-join: shared join columns are packed into
+    a single int32 key (hierarchical dense-rank packing, so any number of
+    columns fits 31 bits without overflow), both sides are sorted once,
+    per-row match ranges come from the merge-probe kernel
+    (``kernels.merge_probe``: searchsorted on CPU, Pallas on TPU), and
+    matches are expanded with a segment-offset gather.  O((A+B)·log+out)
+    work, all intermediates on device.
+  * ``nested`` — the vectorized nested-loop join (an |A|×|B| compare mask
+    per chunk).  O(A·B) but with trivial constants; the planner keeps it
+    for small tables where sort/probe setup dominates.
 
 All tables are capacity-padded for jit shape stability; true counts are
-tracked, and capacity overflow triggers a host-side retry with doubled
-capacity (the re-plan path a real engine would take).
+tracked, and capacity overflow raises CapacityOverflow carrying the exact
+needed size so the engine's retry re-sizes in one step (stats-driven
+estimates pre-size capacities so the retry is the exception).
 """
 from __future__ import annotations
 
@@ -20,7 +32,17 @@ import jax.numpy as jnp
 
 from .graph import RDFGraph
 from .decompose import DTree
+from ..kernels import ops as kops
 import functools
+
+
+DEFAULT_NESTED_MAX = 256      # planner: nested-loop below this table size
+
+# Join-key space: real packed keys live in [0, 2^31 - 3]; the top two
+# int32 values are invalid-row sentinels (distinct per side so an invalid
+# a-row never matches an invalid b-row).
+_A_INVALID = (1 << 31) - 1
+_B_INVALID = (1 << 31) - 2
 
 
 class CapacityOverflow(Exception):
@@ -118,6 +140,127 @@ def _shared_and_new(a_cols, b_cols):
     return shared, new
 
 
+def resolve_join_impl(a_count: int, b_count: int, impl: str = "auto",
+                      nested_max: int = DEFAULT_NESTED_MAX) -> str:
+    """Per-join strategy choice: nested-loop for small tables (sort/probe
+    setup dominates), sort-merge otherwise."""
+    if impl != "auto":
+        return impl
+    return "nested" if max(a_count, b_count) <= nested_max else "sorted"
+
+
+# ------------------------- sort-merge path ---------------------------- #
+@jax.jit
+def _rank_pair(hi, lo):
+    """Dense lexicographic rank of (hi, lo) pairs — order- and
+    equality-preserving map into [0, len).  Keeps packed keys inside int32
+    for any number of join columns (rank < |A|+|B| at every level)."""
+    order = jnp.lexsort((lo, hi))
+    hs, ls = hi[order], lo[order]
+    boundary = (hs[1:] != hs[:-1]) | (ls[1:] != ls[:-1])
+    new = jnp.concatenate([jnp.ones((1,), jnp.int32),
+                           boundary.astype(jnp.int32)])
+    ranks_sorted = jnp.cumsum(new) - 1
+    return jnp.zeros_like(ranks_sorted).at[order].set(
+        ranks_sorted).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("a_sel", "b_sel"))
+def _build_join_keys(a_rows, b_rows, a_sel, b_sel):
+    """Pack the shared join columns of both tables into one int32 key per
+    row.  Single shared column: the node id is the key.  Multiple columns:
+    hierarchical dense-rank packing over the concatenated tables, so both
+    sides share one key space and equal keys <=> equal column tuples.
+    Invalid rows map to per-side sentinels that sort last and never match.
+    """
+    n_a = a_rows.shape[0]
+    a_valid = a_rows[:, 0] >= 0
+    b_valid = b_rows[:, 0] >= 0
+
+    def comp(s):
+        va = jnp.where(a_valid, a_rows[:, a_sel[s]], _A_INVALID)
+        vb = jnp.where(b_valid, b_rows[:, b_sel[s]], _B_INVALID)
+        return jnp.concatenate([va, vb]).astype(jnp.int32)
+
+    key = comp(0)
+    for s in range(1, len(a_sel)):
+        key = _rank_pair(key, comp(s))
+    a_keys = jnp.where(a_valid, key[:n_a], _A_INVALID)
+    b_keys = jnp.where(b_valid, key[n_a:], _B_INVALID)
+    return a_keys, b_keys
+
+
+@jax.jit
+def _sort_rows_by_key(keys, rows):
+    order = jnp.argsort(keys)
+    return keys[order], rows[order]
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "new_sel", "has_new"))
+def _merge_expand(a_rows_s, b_rows_s, start, cnt, limit, cap, new_sel,
+                  has_new):
+    """Expand per-a-row match ranges into output rows.
+
+    Output slot t belongs to sorted a-row i = searchsorted(cumsum(cnt), t)
+    and pairs it with sorted b-row start[i] + (t - prefix[i]) — a pure
+    segment-offset gather, no host round-trip."""
+    a_cap = a_rows_s.shape[0]
+    csum = jnp.cumsum(cnt)
+    t = jnp.arange(cap, dtype=jnp.int32)
+    seg = jnp.searchsorted(csum, t, side="right").astype(jnp.int32)
+    valid = (t < csum[-1]) & (t < limit)
+    i = jnp.minimum(seg, a_cap - 1)
+    base = csum[i] - cnt[i]
+    j = jnp.clip(start[i] + (t - base), 0, b_rows_s.shape[0] - 1)
+    left = jnp.where(valid[:, None], a_rows_s[i], -1)
+    if has_new:
+        sel = jnp.asarray(new_sel, jnp.int32)
+        right = jnp.where(valid[:, None], b_rows_s[j][:, sel], -1)
+        return jnp.concatenate([left, right], axis=1)
+    return left
+
+
+def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
+                 probe_impl: str) -> Table:
+    a_sel = tuple(s[0] for s in shared)
+    b_sel = tuple(s[1] for s in shared)
+    out_cols = a.cols + tuple(b.cols[j] for j in new)
+
+    a_keys, b_keys = _build_join_keys(a.rows, b.rows, a_sel, b_sel)
+    a_keys_s, a_rows_s = _sort_rows_by_key(a_keys, a.rows)
+    b_keys_s, b_rows_s = _sort_rows_by_key(b_keys, b.rows)
+    start, cnt = kops.merge_probe(a_keys_s, b_keys_s, impl=probe_impl)
+
+    # The per-row count vector syncs to host once per join (planning
+    # metadata, not row data): summing in int64 avoids the int32 wrap a
+    # skewed >2^31-match join would hit on device.
+    cnt_np = np.asarray(cnt)
+    total = int(cnt_np.sum(dtype=np.int64))
+    out_count = total if row_limit is None else min(total, row_limit)
+    truncated = row_limit is not None and total > row_limit
+    if out_count >= 1 << 31:
+        raise RuntimeError(
+            f"join result ({total} rows) too large to materialize; "
+            "set a row_limit")
+    if cap is None:
+        cap = _pow2(out_count)
+    if out_count > cap:
+        raise CapacityOverflow(out_count)
+    if total >= 1 << 31:
+        # device cumsum would wrap: clip per-row counts on host so the
+        # running total saturates at the row limit, then expand normally.
+        csum = cnt_np.astype(np.int64).cumsum()
+        clipped = np.clip(out_count - (csum - cnt_np.astype(np.int64)),
+                          0, cnt_np.astype(np.int64))
+        cnt = jnp.asarray(clipped.astype(np.int32))
+    rows = _merge_expand(a_rows_s, b_rows_s, start, cnt,
+                         jnp.int32(out_count), cap=cap,
+                         new_sel=tuple(new), has_new=bool(new))
+    return Table(cols=out_cols, rows=rows, count=out_count,
+                 truncated=truncated)
+
+
+# ------------------------- nested-loop path --------------------------- #
 @jax.jit
 def _join_chunk_mask(a_rows, b_rows, a_sel, b_sel):
     """eq[i, j] = rows valid & all shared cols equal.
@@ -130,17 +273,18 @@ def _join_chunk_mask(a_rows, b_rows, a_sel, b_sel):
     return eq & valid
 
 
-def join_tables(a: Table, b: Table, cap: int | None = None,
-                chunk: int = 4096, b_chunk: int = 1 << 16,
-                row_limit: int | None = None) -> Table:
-    """Vectorized nested-loop equi-join on shared query-node columns.
+def _assemble(pieces: list[jax.Array], cap: int, ncols: int) -> jax.Array:
+    """Stack device-resident row chunks into one padded device buffer."""
+    out = jnp.full((cap, ncols), -1, jnp.int32)
+    off = 0
+    for p in pieces:
+        out = jax.lax.dynamic_update_slice(out, p, (off, 0))
+        off += int(p.shape[0])
+    return out
 
-    Both sides are chunked so the compare matrix stays bounded; with
-    row_limit the join stops once the limit is reached (LIMIT semantics —
-    the returned table has .truncated=True)."""
-    shared, new = _shared_and_new(a.cols, b.cols)
-    if not shared:
-        return cross_join(a, b, cap=cap, chunk=chunk, row_limit=row_limit)
+
+def _join_nested(a: Table, b: Table, shared, new, cap, chunk, b_chunk,
+                 row_limit) -> Table:
     a_sel = jnp.asarray([s[0] for s in shared], jnp.int32)
     b_sel = jnp.asarray([s[1] for s in shared], jnp.int32)
     new_sel = jnp.asarray(new, jnp.int32)
@@ -159,32 +303,118 @@ def join_tables(a: Table, b: Table, cap: int | None = None,
             cnt = int(eq.sum())
             if cnt == 0:
                 continue
-            if row_limit is not None and total >= row_limit:
-                truncated = True
-                break
-            total += cnt
+            if row_limit is not None:
+                remaining = row_limit - total
+                if remaining <= 0:
+                    truncated = True
+                    break
+                take = min(cnt, remaining)
+                truncated |= take < cnt
+            else:
+                take = cnt
             rows = _join_gather(eq, a_rows, b_rows_t,
                                 new_sel if new else jnp.zeros(0, jnp.int32),
                                 _pow2(cnt), bool(new))
-            pieces.append(np.asarray(rows[:cnt]))
+            pieces.append(rows[:take])
+            total += take
         if truncated:
             break
     if cap is None:
         cap = _pow2(total)
     if total > cap:
         raise CapacityOverflow(total)
-    out = np.full((cap, len(out_cols)), -1, np.int32)
-    if pieces:
-        cat = np.concatenate(pieces, axis=0)
-        out[: cat.shape[0]] = cat
-    t = Table(cols=out_cols, rows=jnp.asarray(out), count=total)
+    t = Table(cols=out_cols, rows=_assemble(pieces, cap, len(out_cols)),
+              count=total)
     t.truncated = truncated
     return t
 
 
+# ---------------------------------------------------------------------- #
+def join_tables(a: Table, b: Table, cap: int | None = None,
+                chunk: int = 4096, b_chunk: int = 1 << 16,
+                row_limit: int | None = None, impl: str = "auto",
+                nested_max: int = DEFAULT_NESTED_MAX,
+                probe_impl: str = "auto") -> Table:
+    """Equi-join on shared query-node columns.
+
+    impl: 'auto' (planner picks per table size), 'sorted' (sort-merge),
+    or 'nested' (chunked vectorized nested loop).  With row_limit the join
+    stops once the limit is reached (LIMIT semantics — appended rows are
+    clamped to the remaining budget and .truncated is set iff matches were
+    dropped or scanning stopped early)."""
+    shared, new = _shared_and_new(a.cols, b.cols)
+    if not shared:
+        return cross_join(a, b, cap=cap, row_limit=row_limit)
+    impl = resolve_join_impl(a.count, b.count, impl, nested_max)
+    if impl == "nested":
+        return _join_nested(a, b, shared, new, cap, chunk, b_chunk,
+                            row_limit)
+    return _join_sorted(a, b, shared, new, cap, row_limit, probe_impl)
+
+
+MAX_PRESIZE_CAP = 1 << 22     # estimate-driven preallocation ceiling (rows)
+
+
+def planned_join(a: Table, b: Table, est: int | None,
+                 row_limit: int | None = None, impl: str = "auto",
+                 nested_max: int = DEFAULT_NESTED_MAX,
+                 probe_impl: str = "auto", record=None,
+                 chunk: int = 4096, b_chunk: int = 1 << 16) -> Table:
+    """Estimate-pre-sized join with a single exact-size overflow retry.
+
+    The capacity hint from `est` is clamped by the worst-case output
+    (|A|*|B|), the row limit, and MAX_PRESIZE_CAP, so an over-estimate can
+    never pre-allocate an absurd buffer — an under-estimate costs one
+    retry at the exact pow2 size.  record(impl, est, actual, retried)
+    feeds QueryStats telemetry."""
+    if not any(c in b.cols for c in a.cols):
+        impl = "cross"              # no shared cols: join_tables delegates
+    else:
+        impl = resolve_join_impl(a.count, b.count, impl, nested_max)
+    cap_hint = None
+    if est is not None:
+        if row_limit is not None:
+            est = min(est, row_limit)
+        cap_hint = min(_pow2(int(est * 1.25) + 16),
+                       _pow2(max(a.count, 1) * max(b.count, 1)),
+                       MAX_PRESIZE_CAP)
+        if row_limit is not None:
+            cap_hint = min(cap_hint, _pow2(row_limit))
+    kw = dict(row_limit=row_limit, impl=impl, probe_impl=probe_impl,
+              chunk=chunk, b_chunk=b_chunk)
+    retried = False
+    try:
+        out = join_tables(a, b, cap=cap_hint, **kw)
+    except CapacityOverflow as e:
+        retried = True
+        out = join_tables(a, b, cap=_pow2(e.needed), **kw)
+    if record is not None:
+        record(impl, est, out.count, retried)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _cross_expand(a_rows, b_rows, a_count, b_count, cap):
+    """Counts are traced scalars so distinct table sizes share one
+    compilation per output capacity."""
+    t = jnp.arange(cap, dtype=jnp.int32)
+    bc = jnp.maximum(b_count, 1)
+    # t < a*b  <=>  t // b < a: avoids the int32 product, which wraps
+    # for >= 2^31-row cross products
+    valid = ((t // bc) < a_count) & (a_count > 0) & (b_count > 0)
+    i = jnp.minimum(t // bc, jnp.maximum(a_count - 1, 0))
+    j = jnp.minimum(t % bc, jnp.maximum(b_count - 1, 0))
+    left = jnp.where(valid[:, None], a_rows[i], -1)
+    right = jnp.where(valid[:, None], b_rows[j], -1)
+    return jnp.concatenate([left, right], axis=1)
+
+
 def cross_join(a: Table, b: Table, cap: int | None = None,
-               chunk: int = 4096, row_limit: int | None = None) -> Table:
-    """Cartesian product (used before connectivity-check joins)."""
+               row_limit: int | None = None) -> Table:
+    """Cartesian product (used before connectivity-check joins).
+
+    Fully device-resident: the product is expanded with an index-arithmetic
+    gather instead of host-side repeat/tile."""
     out_cols = a.cols + b.cols
     total = a.count * b.count
     truncated = False
@@ -198,14 +428,9 @@ def cross_join(a: Table, b: Table, cap: int | None = None,
         cap = _pow2(total)
     if total > cap:
         raise CapacityOverflow(total)
-    an = np.asarray(a.rows[: a_count])
-    bn = np.asarray(b.rows[: b_count])
-    left = np.repeat(an, bn.shape[0], axis=0)
-    right = np.tile(bn, (an.shape[0], 1))
-    out = np.full((cap, len(out_cols)), -1, np.int32)
-    if total:
-        out[:total] = np.concatenate([left, right], axis=1)
-    t = Table(cols=out_cols, rows=jnp.asarray(out), count=total)
+    rows = _cross_expand(a.rows, b.rows, jnp.int32(a_count),
+                         jnp.int32(b_count), cap)
+    t = Table(cols=out_cols, rows=rows, count=total)
     t.truncated = truncated
     return t
 
@@ -228,9 +453,16 @@ def single_node_table(node: int, lo: int, hi: int,
 def dtree_candidates(graph: RDFGraph, tree: DTree,
                      pass_masks: dict[int, jax.Array],
                      row_limit: int | None = None,
-                     cap: int | None = None) -> Table:
+                     join_impl: str = "auto",
+                     nested_max: int = DEFAULT_NESTED_MAX,
+                     probe_impl: str = "auto",
+                     estimator=None, record=None) -> Table:
     """Generate all candidate matches of one D-tree by sequential
-    edge-parallel pair generation + joins on the root column."""
+    edge-parallel pair generation + joins on the root column.
+
+    estimator(left_count, pred, outgoing, pair_count) -> estimated join
+    rows (or None) pre-sizes each join's capacity so the overflow retry is
+    rare; record(impl, est, actual, retried) feeds QueryStats."""
     table: Table | None = None
     truncated = False
     for pred, child, outgoing in tree.edges:
@@ -240,8 +472,14 @@ def dtree_candidates(graph: RDFGraph, tree: DTree,
         else:
             pairs = edge_pairs(graph, pred, pass_masks[child],
                                pass_masks[tree.root], cols=(child, tree.root))
-        table = pairs if table is None else join_tables(
-            table, pairs, row_limit=row_limit)
+        if table is None:
+            table = pairs
+        else:
+            est = None if estimator is None else estimator(
+                table.count, pred, outgoing, pairs.count)
+            table = planned_join(table, pairs, est, row_limit=row_limit,
+                                 impl=join_impl, nested_max=nested_max,
+                                 probe_impl=probe_impl, record=record)
         truncated |= table.truncated
         if table.count == 0:
             break
@@ -250,28 +488,59 @@ def dtree_candidates(graph: RDFGraph, tree: DTree,
     return table
 
 
+@functools.partial(jax.jit, static_argnames=("pairs",))
+def _injective_keep(rows, pairs):
+    keep = rows[:, 0] >= 0                  # padding rows never survive
+    for i, j in pairs:
+        keep &= rows[:, i] != rows[:, j]
+    return keep
+
+
 def injective_filter(table: Table) -> Table:
     """Keep rows whose values are pairwise distinct across distinct query
     nodes (subgraph-isomorphism semantics)."""
     k = len(table.cols)
     if k < 2 or table.count == 0:
         return table
-    rows = np.asarray(table.rows[: table.count])
-    keep = np.ones(table.count, dtype=bool)
-    for i in range(k):
-        for j in range(i + 1, k):
-            if table.cols[i] != table.cols[j]:
-                keep &= rows[:, i] != rows[:, j]
-    if keep.all():
+    pairs = tuple((i, j) for i in range(k) for j in range(i + 1, k)
+                  if table.cols[i] != table.cols[j])
+    if not pairs:
         return table
-    return filter_rows(table, keep)
+    # full-capacity mask (pow2 shape, no per-count recompiles)
+    keep = _injective_keep(table.rows, pairs)
+    kept = int(keep.sum())
+    if kept == table.count:
+        return table
+    return filter_rows(table, keep, kept=kept)
 
 
-def filter_rows(table: Table, keep: np.ndarray) -> Table:
-    """Keep rows where keep[i] (bool over first `count` rows)."""
-    rows = np.asarray(table.rows[: table.count])[np.asarray(keep, bool)]
-    cap = _pow2(rows.shape[0])
-    out = np.full((cap, len(table.cols)), -1, np.int32)
-    out[: rows.shape[0]] = rows
-    return Table(cols=table.cols, rows=jnp.asarray(out),
-                 count=rows.shape[0], truncated=table.truncated)
+@functools.partial(jax.jit, static_argnames=("cap_out",))
+def _filter_gather(rows, keep, cap_out):
+    cap_in = rows.shape[0]
+    idx = jnp.nonzero(keep, size=cap_out, fill_value=cap_in)[0]
+    safe = jnp.minimum(idx, cap_in - 1)
+    return jnp.where((idx < cap_in)[:, None], rows[safe], -1)
+
+
+def filter_rows(table: Table, keep, kept: int | None = None) -> Table:
+    """Keep rows where keep[i] — a bool mask over either the first `count`
+    rows (host callers) or the full capacity (device producers; padding
+    rows must be False there).  The compaction gather runs on device and
+    is shaped by pow2 capacities only, so arbitrary counts never force a
+    recompile.  Pass `kept` (the known number of True entries) to skip the
+    host sync of the mask sum."""
+    n = np.shape(keep)[0]
+    assert n in (table.count, table.cap), \
+        f"keep mask length {n} matches neither count={table.count} " \
+        f"nor cap={table.cap}"
+    if n != table.cap:
+        k = np.zeros(table.cap, bool)
+        k[:n] = np.asarray(keep, bool)
+        keep = k
+    keep = jnp.asarray(keep, dtype=bool)
+    if kept is None:
+        kept = int(keep.sum())
+    cap = _pow2(kept)
+    rows = _filter_gather(table.rows, keep, cap)
+    return Table(cols=table.cols, rows=rows, count=kept,
+                 truncated=table.truncated)

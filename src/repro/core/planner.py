@@ -31,6 +31,7 @@ class Thresholds:
     tau_iter: float = 1000.0       # τ1: D-tree candidate iterations
     tau_join: float = 1.0e6        # τ2: estimated intermediate joins
     tau_sel: float = 8.0           # τ3: min neighborhood selectivity
+    nested_join_max: int = 256     # per-join: nested-loop below this size
 
 
 @dataclass
@@ -112,6 +113,41 @@ def decide(query: QueryTemplate, trees_per_comp: list[list[DTree]],
         est_join_product=prod,
         per_node_selectivity=per_node,
     )
+
+
+class JoinEstimator:
+    """Stats-driven join-cardinality estimates (§4.1 features reused for
+    execution planning).
+
+    The engine uses these to pre-size join capacities so the
+    CapacityOverflow -> recompile retry loop becomes the exception;
+    estimator accuracy is recorded in QueryStats per query."""
+
+    def __init__(self, stats: DatasetStats, cand_sizes: dict[int, int]):
+        self.stats = stats
+        self.cand_sizes = cand_sizes
+
+    def edge_join(self, left_count: int, pred: int | None, outgoing: bool,
+                  pair_count: int) -> int:
+        """Candidate table joined with the edge table of `pred` on the
+        D-tree root column: expected rows ~= left * per-endpoint fanout."""
+        st = self.stats
+        if st is None or st.src_fanout is None or pred is None:
+            fan = st.avg_fanout if st is not None else 1.0
+        else:
+            fan = float((st.src_fanout if outgoing else st.dst_fanout)[pred])
+        return int(left_count * max(fan, 1.0)) + 1
+
+    def table_join(self, a_count: int, b_count: int,
+                   shared_cols: tuple[int, ...]) -> int:
+        """System R equi-join estimate: |A J B| = |A||B| / V(key), with
+        V(key) approximated by the smallest candidate-interval size among
+        the shared query nodes, capped by both table sizes."""
+        if not shared_cols:
+            return a_count * b_count
+        v = min(self.cand_sizes.get(q, 1) for q in shared_cols)
+        v = max(1, min(v, max(a_count, 1), max(b_count, 1)))
+        return int(a_count * b_count / v) + 1
 
 
 def tune_thresholds(run_query, queries: list[QueryTemplate],

@@ -23,6 +23,12 @@ class DatasetStats:
     specialty: float
     diversity: int
     type_pred: int | None = None
+    # join-cardinality features: edges of p per distinct subject/object —
+    # the expected fanout when a candidate table is joined with p's edge
+    # table on the subject (src) or object (dst) side.
+    src_fanout: np.ndarray | None = None      # [P] float64
+    dst_fanout: np.ndarray | None = None      # [P] float64
+    avg_fanout: float = 1.0                   # fallback for wildcard preds
 
     def lit_sel(self, pa: int, n: int) -> float:
         table = self.literal_selectivity.get(pa)
@@ -39,6 +45,27 @@ class DatasetStats:
 def predicate_selectivity(graph: RDFGraph) -> np.ndarray:
     counts = np.bincount(graph.pred, minlength=graph.num_predicates)
     return counts / max(graph.num_edges, 1)
+
+
+def predicate_fanout(graph: RDFGraph) -> tuple[np.ndarray, np.ndarray, float]:
+    """Per-predicate join fanout: |edges(p)| / #distinct src(p) (and dst).
+
+    Feeds the sort-merge join planner's cardinality estimates: joining a
+    table on node column q with the edge table of p multiplies its size by
+    roughly this factor."""
+    p_count = graph.num_predicates
+    counts = np.bincount(graph.pred, minlength=p_count).astype(np.float64)
+    src_fan = np.ones(p_count)
+    dst_fan = np.ones(p_count)
+    for ends, fan in ((graph.src, src_fan), (graph.dst, dst_fan)):
+        pairs = np.unique(graph.pred.astype(np.int64) * (graph.num_nodes + 1)
+                          + ends.astype(np.int64))
+        distinct = np.bincount((pairs // (graph.num_nodes + 1)).astype(int),
+                               minlength=p_count).astype(np.float64)
+        np.divide(counts, np.maximum(distinct, 1.0), out=fan,
+                  where=counts > 0)
+    avg = float(graph.num_edges / max(graph.num_nodes, 1))
+    return src_fan, dst_fan, max(avg, 1.0)
 
 
 def literal_selectivity(graph: RDFGraph, ns=(1, 2, 3, 4, 5, 6, 8),
@@ -168,6 +195,7 @@ def literal_diversity(graph: RDFGraph, m_sample: int = 100_000,
 
 def compute_stats(graph: RDFGraph, m_sample: int = 100_000) -> DatasetStats:
     tp = _find_type_predicate(graph)
+    src_fan, dst_fan, avg_fan = predicate_fanout(graph)
     return DatasetStats(
         pred_selectivity=predicate_selectivity(graph),
         literal_selectivity=literal_selectivity(graph),
@@ -175,4 +203,7 @@ def compute_stats(graph: RDFGraph, m_sample: int = 100_000) -> DatasetStats:
         specialty=relationship_specialty(graph),
         diversity=literal_diversity(graph, m_sample),
         type_pred=tp,
+        src_fanout=src_fan,
+        dst_fanout=dst_fan,
+        avg_fanout=avg_fan,
     )

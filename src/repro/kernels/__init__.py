@@ -4,4 +4,5 @@ Each kernel ships with a pure-jnp oracle in ref.py; ops.py dispatches by
 backend (pallas on TPU, ref on CPU, interpret for kernel-body validation).
 """
 from . import ops, ref
-from .ops import interval_count, bitmask_contains, intersect_any
+from .ops import (interval_count, bitmask_contains, intersect_any,
+                  merge_probe)

@@ -18,6 +18,7 @@ from . import ref as _ref
 from .interval_count import interval_count_pallas
 from .bitmask_contains import bitmask_contains_pallas
 from .sorted_intersect import intersect_any_pallas
+from .merge_probe import merge_probe_pallas
 
 
 def _resolve(impl: str, cpu_default: str = "ref") -> str:
@@ -53,6 +54,21 @@ def bitmask_contains(cand, query, *, impl: str = "auto"):
 
 _intersect_sorted_jit = jax.jit(_ref.intersect_any_sorted)
 _intersect_ref_jit = jax.jit(_ref.intersect_any_ref)
+
+_merge_probe_sorted_jit = jax.jit(_ref.merge_probe_sorted)
+_merge_probe_ref_jit = jax.jit(_ref.merge_probe_ref)
+
+
+def merge_probe(a_keys, b_keys, *, impl: str = "auto"):
+    """Match ranges of sorted a_keys in sorted b_keys: (start, cnt)."""
+    impl = _resolve(impl, cpu_default="sorted")
+    a_keys = jnp.asarray(a_keys, jnp.int32)
+    b_keys = jnp.asarray(b_keys, jnp.int32)
+    if impl == "sorted":
+        return _merge_probe_sorted_jit(a_keys, b_keys)
+    if impl == "ref":
+        return _merge_probe_ref_jit(a_keys, b_keys)
+    return merge_probe_pallas(a_keys, b_keys, interpret=(impl == "interpret"))
 
 
 def intersect_any(a, b, *, impl: str = "auto"):

@@ -61,6 +61,29 @@ def interval_count_sorted(ids: jax.Array, lo: jax.Array,
     return (idx[:, j:] - idx[:, :j]).astype(jnp.int32)
 
 
+def merge_probe_ref(a_keys: jax.Array,
+                    b_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per a-key match range in sorted b: start[i] = #{j: b[j] < a[i]},
+    cnt[i] = #{j: b[j] == a[i]}.
+
+    a_keys [A] int32, b_keys [B] int32, both ascending.  O(A*B) compare
+    oracle defining the semantics of the merge-probe kernel.
+    """
+    lt = b_keys[None, :] < a_keys[:, None]
+    eq = b_keys[None, :] == a_keys[:, None]
+    return (lt.sum(axis=1).astype(jnp.int32),
+            eq.sum(axis=1).astype(jnp.int32))
+
+
+def merge_probe_sorted(a_keys: jax.Array,
+                       b_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Binary-search formulation of merge_probe_ref — O((A+B) log B).
+    CPU fast path of the sort-merge join; exact same semantics."""
+    start = jnp.searchsorted(b_keys, a_keys, side="left")
+    end = jnp.searchsorted(b_keys, a_keys, side="right")
+    return start.astype(jnp.int32), (end - start).astype(jnp.int32)
+
+
 def intersect_any_sorted(a: jax.Array, b: jax.Array) -> jax.Array:
     """Membership-test formulation of intersect_any_ref: sort each a-row,
     binary-search every b element — O(P*B log A) time and O(P*B) memory

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the core invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (IDMap, build_ni_index, brute_force_match,
                         make_engine, vertex_cover_2approx)

@@ -22,7 +22,11 @@ def run_sub(code: str) -> dict:
     out = subprocess.run([sys.executable, "-c", prog],
                          capture_output=True, text=True, timeout=600,
                          env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              # forced host devices only exist on the CPU
+                              # backend; without this each subprocess stalls
+                              # for minutes probing for a TPU
+                              "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
 

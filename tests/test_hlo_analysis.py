@@ -52,7 +52,11 @@ def test_analyzer_counts_loops_and_collectives():
     out = subprocess.run([sys.executable, "-c", prog],
                          capture_output=True, text=True, timeout=300,
                          env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              # forced host devices only exist on the CPU
+                              # backend; without this the subprocess stalls
+                              # for minutes probing for a TPU
+                              "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-2000:]
     r = json.loads(out.stdout.strip().splitlines()[-1])
     assert r["flops"] == r["want"], r

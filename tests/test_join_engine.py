@@ -1,0 +1,171 @@
+"""Sort-merge join subsystem: randomized parity against nested-loop and a
+brute-force numpy oracle, LIMIT semantics, capacity retries, planner
+strategy selection, and engine-level equivalence across join impls."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import make_engine, CapacityOverflow, resolve_join_impl
+from repro.core.matching import Table, join_tables, cross_join, _pow2
+from repro.data import DATASETS, random_graph, random_query
+
+RNG = np.random.default_rng(1234)
+
+
+def mk_table(cols, data):
+    data = np.asarray(data, np.int32).reshape(-1, len(cols))
+    cap = _pow2(len(data))
+    rows = np.full((cap, len(cols)), -1, np.int32)
+    rows[: len(data)] = data
+    return Table(cols=tuple(cols), rows=jnp.asarray(rows), count=len(data))
+
+
+def oracle_join(a, b):
+    """Brute-force equi-join on shared cols -> sorted multiset of rows."""
+    shared = [c for c in a.cols if c in b.cols]
+    new = [j for j, c in enumerate(b.cols) if c not in a.cols]
+    out = []
+    for ra in a.numpy():
+        for rb in b.numpy():
+            if all(ra[a.cols.index(c)] == rb[b.cols.index(c)]
+                   for c in shared):
+                out.append(tuple(int(x) for x in ra)
+                           + tuple(int(rb[j]) for j in new))
+    return sorted(out)
+
+
+def rows_multiset(t):
+    return sorted(tuple(int(x) for x in r) for r in t.numpy())
+
+
+# ------------------------- randomized parity -------------------------- #
+@pytest.mark.parametrize("seed", range(8))
+def test_join_random_parity(seed):
+    rng = np.random.default_rng(seed)
+    na, nb = rng.integers(0, 60, 2)
+    ncols = rng.integers(1, 4)
+    a_cols = tuple(rng.choice(6, ncols, replace=False))
+    b_cols = tuple(rng.choice(6, rng.integers(1, 4), replace=False))
+    a = mk_table(a_cols, rng.integers(0, 5, (na, len(a_cols))))
+    b = mk_table(b_cols, rng.integers(0, 5, (nb, len(b_cols))))
+    want = oracle_join(a, b)
+    for impl in ("nested", "sorted", "auto"):
+        got = rows_multiset(join_tables(a, b, impl=impl))
+        assert got == want, impl
+
+
+def test_join_many_shared_cols_rank_packing():
+    """>2 shared columns exercises the hierarchical dense-rank packing."""
+    rng = np.random.default_rng(3)
+    a = mk_table((0, 1, 2, 3), rng.integers(0, 3, (80, 4)))
+    b = mk_table((3, 2, 1, 0), rng.integers(0, 3, (70, 4)))
+    assert rows_multiset(join_tables(a, b, impl="sorted")) == oracle_join(a, b)
+
+
+def test_join_self_loop_single_col():
+    a = mk_table((0,), [[1], [2], [2], [5]])
+    b = mk_table((0, 1), [[2, 9], [2, 8], [5, 7], [6, 1]])
+    want = oracle_join(a, b)
+    for impl in ("nested", "sorted"):
+        assert rows_multiset(join_tables(a, b, impl=impl)) == want
+
+
+def test_join_empty_sides():
+    empty = mk_table((1, 2), np.zeros((0, 2)))
+    full = mk_table((0, 1), [[1, 2], [3, 4]])
+    for impl in ("nested", "sorted"):
+        assert join_tables(full, empty, impl=impl).count == 0
+        assert join_tables(empty, full, impl=impl).count == 0
+
+
+def test_no_shared_cols_is_cross_join():
+    a = mk_table((0,), [[1], [2]])
+    b = mk_table((1,), [[7], [8], [9]])
+    t = join_tables(a, b)
+    assert t.cols == (0, 1)
+    assert rows_multiset(t) == sorted(
+        (int(x), int(y)) for x in [1, 2] for y in [7, 8, 9])
+    assert rows_multiset(cross_join(a, b)) == rows_multiset(t)
+
+
+# -------------------------- LIMIT semantics --------------------------- #
+@pytest.mark.parametrize("impl", ["nested", "sorted"])
+def test_row_limit_clamps_exactly(impl):
+    """Regression: the nested path used to check the limit *before* adding
+    a chunk, overshooting by up to a chunk and truncating a chunk late."""
+    a = mk_table((0,), np.zeros((50, 1)))
+    b = mk_table((0, 1), np.column_stack([np.zeros(50), np.arange(50)]))
+    t = join_tables(a, b, impl=impl, row_limit=100, chunk=8)
+    assert t.count == 100
+    assert t.truncated
+    # under the limit: full result, not truncated
+    t = join_tables(a, b, impl=impl, row_limit=5000, chunk=8)
+    assert t.count == 2500
+    assert not t.truncated
+
+
+def test_row_limit_exact_boundary_not_truncated_sorted():
+    a = mk_table((0,), np.zeros((10, 1)))
+    b = mk_table((0, 1), np.column_stack([np.zeros(10), np.arange(10)]))
+    t = join_tables(a, b, impl="sorted", row_limit=100)
+    assert t.count == 100 and not t.truncated
+
+
+# ------------------------- capacity overflow -------------------------- #
+@pytest.mark.parametrize("impl", ["nested", "sorted"])
+def test_capacity_overflow_carries_exact_need(impl):
+    a = mk_table((0,), np.zeros((40, 1)))
+    b = mk_table((0, 1), np.column_stack([np.zeros(40), np.arange(40)]))
+    with pytest.raises(CapacityOverflow) as ei:
+        join_tables(a, b, impl=impl, cap=64)
+    assert ei.value.needed == 1600
+    # exact-size retry (what Engine._join does) succeeds
+    t = join_tables(a, b, impl=impl, cap=_pow2(ei.value.needed))
+    assert t.count == 1600
+
+
+# ------------------------- planner selection -------------------------- #
+def test_resolve_join_impl_thresholds():
+    assert resolve_join_impl(10, 256) == "nested"
+    assert resolve_join_impl(10, 257) == "sorted"
+    assert resolve_join_impl(5000, 3, "auto", nested_max=64) == "sorted"
+    assert resolve_join_impl(5000, 3, "nested") == "nested"
+
+
+def test_engine_records_join_strategies_and_estimates():
+    g = DATASETS["lubm"](scale=0.03, seed=1)
+    eng = make_engine(g, "stwig+", impl="ref")
+    r = eng.execute(random_query(g, size=5, seed=31))
+    qs = r.stats
+    assert sum(qs.join_strategies.values()) > 0
+    assert qs.n_estimated_joins > 0
+    assert qs.join_actual_rows >= 0 and qs.join_est_rows > 0
+
+
+# --------------------- engine-level equivalence ----------------------- #
+@pytest.mark.parametrize("variant", ["stwig+", "spath_ni2", "h2", "h3",
+                                     "hvc", "rdf_h"])
+def test_engine_variants_sorted_equals_nested(variant):
+    """All engine variants must return identical result sets under the
+    sort-merge and the seed nested-loop join implementations."""
+    g = DATASETS["lubm"](scale=0.025, seed=2)
+    results = {}
+    for ji in ("nested", "sorted"):
+        eng = make_engine(g, variant, impl="ref")
+        eng.cfg.join_impl = ji
+        results[ji] = eng.execute(
+            random_query(g, size=5, seed=77)).result_set()
+    assert results["nested"] == results["sorted"]
+
+
+def test_engine_random_graphs_join_impl_equivalence():
+    for seed in range(3):
+        g = random_graph(n_nodes=60, n_edges=200, n_preds=3,
+                         n_literals=15, seed=seed)
+        q = random_query(g, size=4, seed=seed * 3 + 1)
+        rs = []
+        for ji in ("nested", "sorted", "auto"):
+            eng = make_engine(g, "rdf_h", impl="ref")
+            eng.cfg.join_impl = ji
+            rs.append(eng.execute(q).result_set())
+        assert rs[0] == rs[1] == rs[2]

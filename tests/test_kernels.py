@@ -80,6 +80,46 @@ def test_intersect_padding_not_a_hit():
     assert (got == 0).all()
 
 
+def _sorted_keys(n, hi=500, sentinel=None, frac_pad=0.2):
+    ks = RNG.integers(0, hi, n).astype(np.int32)
+    if sentinel is not None and n:
+        ks[: max(int(n * frac_pad), 1)] = sentinel
+    return np.sort(ks)
+
+
+@pytest.mark.parametrize("na,nb", [(1, 1), (7, 130), (128, 128),
+                                   (300, 77), (1000, 513), (257, 8)])
+def test_merge_probe_sweep(na, nb):
+    a = _sorted_keys(na, sentinel=(1 << 31) - 1)       # a-side invalid pads
+    b = _sorted_keys(nb, sentinel=(1 << 31) - 2)       # b-side invalid pads
+    ws, wc = (np.asarray(x) for x in ref.merge_probe_ref(a, b))
+    for impl in ("sorted", "interpret"):
+        gs, gc = (np.asarray(x) for x in ops.merge_probe(a, b, impl=impl))
+        np.testing.assert_array_equal(gs, ws)
+        np.testing.assert_array_equal(gc, wc)
+
+
+def test_merge_probe_ranges_are_consistent():
+    """start/cnt must delimit exactly the equal-key run in b."""
+    a = _sorted_keys(64, hi=30)
+    b = _sorted_keys(96, hi=30)
+    s, c = (np.asarray(x) for x in ops.merge_probe(a, b, impl="interpret"))
+    for i, key in enumerate(a):
+        np.testing.assert_array_equal(b[s[i]: s[i] + c[i]],
+                                      np.full(c[i], key))
+        assert s[i] == np.searchsorted(b, key, side="left")
+
+
+def test_merge_probe_invalid_rows_never_match():
+    """The join's per-side sentinels must produce zero-count ranges."""
+    a = np.sort(np.asarray([3, 7, (1 << 31) - 1] * 4, np.int32))
+    b = np.sort(np.asarray([7, 9, (1 << 31) - 2] * 4, np.int32))
+    for impl in ("sorted", "interpret"):
+        _, c = (np.asarray(x) for x in ops.merge_probe(a, b, impl=impl))
+        assert (c[a == (1 << 31) - 1] == 0).all()
+        assert (c[a == 7] == 4).all()
+
+
 def test_auto_dispatch_cpu_is_ref():
     ids = _ragged_sorted_ids(8, 8)
     lo = np.asarray([0], np.int32)
