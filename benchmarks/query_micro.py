@@ -1,0 +1,219 @@
+"""End-to-end query benchmark: whole-query join plan vs. the seed greedy
+order, plus the sort-run-reuse win at the join layer.
+
+Three scenarios, emitted to BENCH_query.json:
+
+  * conn3 — a 7-node, 3-component template with two connection edges of
+    very different selectivity (d_c=6 through a hub vs. d_c=1 diagonal).
+    The seed's smallest-product-first rule merges the wrong pair first
+    and drags a full cross product through the expensive connectivity
+    filter; the cost-based ConnectionPlan does the selective merge first.
+    3 joins end-to-end (one D-tree-internal + two component merges);
+    asserts the two orders return identical result sets.
+  * tree_skew — three candidate tables where the seed's smallest-table-
+    first join order explodes through a low-V(key) hub column; the
+    Selinger DP (plan_table_joins) routes around it.
+  * sort_reuse — a 3-join chain on one key, executed with CandidateTable
+    sort-order propagation vs. with order metadata stripped (PR 1
+    behavior: every join re-sorts both sides).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (RDFGraph, QueryTemplate, QueryEdge, ConnectionEdge,
+                        make_engine, JoinEstimator, JoinTelemetry)
+from repro.core.matching import Table, planned_join, _pow2
+from repro.core.planner import plan_table_joins
+
+REPEATS = 3
+
+
+def _best(fn, repeats=REPEATS):
+    fn()                                        # warm: jit + first shapes
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3                           # ms
+
+
+# ----------------------------- conn3 ---------------------------------- #
+def _conn3_graph(n_xy=10, n_y=200, n_z=200, n_fill=1500):
+    """X: 10 pX edges + hub link; Y: 200-row 2-edge chain, every yc
+    diagonally pC-linked to za; Z: 200 pZ edges.  Fillers raise the
+    average fanout so the d_c=6 connection estimates as non-selective."""
+    triples = []
+    for i in range(n_xy):
+        triples.append((f"xa/{i:04d}", "pX", f"xb/{i:04d}"))
+        triples.append((f"xb/{i:04d}", "pH", "hub/0"))
+    for i in range(n_y):
+        triples.append((f"ya/{i:04d}", "pY", f"yb/{i:04d}"))
+        triples.append((f"yb/{i:04d}", "pY2", f"yc/{i:04d}"))
+        triples.append(("hub/0", "pH", f"ya/{i:04d}"))
+        triples.append((f"yc/{i:04d}", "pC", f"za/{i:04d}"))
+    for i in range(n_z):
+        triples.append((f"za/{i:04d}", "pZ", f"zb/{i:04d}"))
+    for i in range(n_fill):
+        for k in (1, 2, 3, 5, 7, 11):
+            triples.append((f"fil/{i:05d}", "pF",
+                            f"fil/{(i + k) % n_fill:05d}"))
+    return RDFGraph.from_triples(triples, literal_objects=set())
+
+
+def _conn3():
+    g = _conn3_graph()
+    pid = {str(p): i for i, p in enumerate(g.predicates)}
+    q = QueryTemplate(
+        keywords=["xa/", "xb/", "ya/", "yb/", "yc/", "za/", "zb/"],
+        edges=[QueryEdge(0, 1, pid["pX"]), QueryEdge(2, 3, pid["pY"]),
+               QueryEdge(3, 4, pid["pY2"]), QueryEdge(5, 6, pid["pZ"])],
+        connections=[ConnectionEdge(1, 2, 6), ConnectionEdge(4, 5, 1)])
+    out = {}
+    result_sets = {}
+    for pm in ("cost", "greedy"):
+        eng = make_engine(g, "stwig+")
+        eng.cfg.plan_mode = pm
+        r = eng.execute(q)
+        result_sets[pm] = r.result_set()
+        out[f"{pm}_ms"] = _best(lambda: eng.execute(q))
+        out[f"{pm}_stats"] = {
+            "sorts_performed": r.stats.sorts_performed,
+            "sorts_avoided": r.stats.sorts_avoided,
+            "plan_cost": r.stats.plan_cost,
+            "greedy_plan_cost": r.stats.greedy_plan_cost,
+            "join_work": r.stats.join_work,
+        }
+        out[f"{pm}_rows"] = r.count
+    out["identical_result_sets"] = result_sets["cost"] == result_sets["greedy"]
+    out["speedup"] = out["greedy_ms"] / out["cost_ms"]
+    out["n_joins"] = 3
+    return out
+
+
+# --------------------------- tree_skew -------------------------------- #
+def _mk(cols, data):
+    data = np.asarray(data, np.int32).reshape(-1, len(cols))
+    cap = _pow2(len(data))
+    rows = np.full((cap, len(cols)), -1, np.int32)
+    rows[: len(data)] = data
+    return Table(cols=tuple(cols), rows=jnp.asarray(rows), count=len(data))
+
+
+def _tree_skew_tables(n_small=100, n_big=3000, n_match=10, seed=0):
+    """T0 (n0,n1,n2): hub value on n2; T1 (n2,n3,n4): same hub, distinct
+    n4; T2 (n4,n5,n6): only n_match rows share T1's n4 values.  Greedy
+    (T0 first) materializes n_small*n_big rows; cost order keeps every
+    intermediate tiny."""
+    rng = np.random.default_rng(seed)
+    hub = 7
+    t0 = _mk((0, 1, 2), np.column_stack(
+        [10_000 + np.arange(n_small), 20_000 + np.arange(n_small),
+         np.full(n_small, hub)]))
+    t1 = _mk((2, 3, 4), np.column_stack(
+        [np.full(n_big, hub), 30_000 + np.arange(n_big),
+         40_000 + np.arange(n_big)]))
+    n4 = np.concatenate([40_000 + rng.choice(n_big, n_match, replace=False),
+                         90_000 + np.arange(n_big - n_match)])
+    t2 = _mk((4, 5, 6), np.column_stack(
+        [n4, 50_000 + np.arange(n_big), 60_000 + np.arange(n_big)]))
+    return [t0, t1, t2]
+
+
+def _run_order(tables, order, est):
+    acc = tables[order[0]]
+    for i in order[1:]:
+        shared = tuple(c for c in acc.cols if c in tables[i].cols)
+        e = est.table_join(acc.count, tables[i].count, shared)
+        acc = planned_join(acc, tables[i], e)
+    acc.rows.block_until_ready()
+    return acc
+
+
+def _strip(t):
+    """Drop sort-order metadata / cached runs (fresh buffers, same data)."""
+    return Table(cols=t.cols, rows=t.rows, count=t.count)
+
+
+def _tree_skew():
+    tables = _tree_skew_tables()
+    # V(key): n2 is an (effectively) single-candidate hub node, n4 a wide
+    # interval — exactly what IDMap candidate intervals would report.
+    est = JoinEstimator(None, {2: 1, 4: 6000, 0: 100, 1: 100, 3: 3000,
+                               5: 3000, 6: 3000})
+    node_sets = [set(t.cols) for t in tables]
+    counts = [t.count for t in tables]
+    greedy = [0, 1, 2]                  # seed rule: smallest table first
+    plan = plan_table_joins(node_sets, counts, est, nested_max=256,
+                            greedy_order=greedy)
+    out = {"plan_order": plan.order, "greedy_order": greedy,
+           "plan_est_cost": plan.est_cost, "greedy_est_cost": plan.greedy_cost}
+    r_greedy = _run_order([_strip(t) for t in tables], greedy, est)
+    r_plan = _run_order([_strip(t) for t in tables], plan.order, est)
+    assert r_greedy.result_set() == r_plan.result_set()
+    out["identical_result_sets"] = True
+    out["rows"] = r_plan.count
+    out["greedy_ms"] = _best(
+        lambda: _run_order([_strip(t) for t in tables], greedy, est))
+    out["cost_ms"] = _best(
+        lambda: _run_order([_strip(t) for t in tables], plan.order, est))
+    out["speedup"] = out["greedy_ms"] / out["cost_ms"]
+    return out
+
+
+# --------------------------- sort_reuse ------------------------------- #
+def _sort_reuse(n=50_000, seed=3):
+    rng = np.random.default_rng(seed)
+    chain = [_mk((0, 1), np.column_stack(
+        [rng.integers(0, n, n), rng.integers(0, n, n)]))]
+    for k in (2, 3, 4):
+        chain.append(_mk((1, k), np.column_stack(
+            [rng.integers(0, n, n), rng.integers(0, n, n)])))
+
+    def run(reuse: bool, tel=None):
+        tabs = chain if reuse else [_strip(t) for t in chain]
+        acc = tabs[0]
+        for t in tabs[1:]:
+            acc = planned_join(acc, t, est=n, impl="sorted", telemetry=tel)
+        acc.rows.block_until_ready()
+        return acc
+
+    tel = JoinTelemetry()
+    run(True, tel)                      # populate caches + counters
+    tel2 = JoinTelemetry()
+    run(True, tel2)                     # steady state: all runs cached
+    out = {"first_pass": vars(tel), "steady_state": vars(tel2)}
+    out["reuse_ms"] = _best(lambda: run(True))
+    out["resort_ms"] = _best(lambda: run(False))
+    out["speedup"] = out["resort_ms"] / out["reuse_ms"]
+    return out
+
+
+# ---------------------------------------------------------------------- #
+def run():
+    results = {}
+    results["conn3"] = _conn3()
+    yield ("query.conn3.cost", results["conn3"]["cost_ms"] * 1e3,
+           f"speedup={results['conn3']['speedup']:.2f}x "
+           f"identical={results['conn3']['identical_result_sets']}")
+    results["tree_skew"] = _tree_skew()
+    yield ("query.tree_skew.cost", results["tree_skew"]["cost_ms"] * 1e3,
+           f"speedup={results['tree_skew']['speedup']:.2f}x")
+    results["sort_reuse"] = _sort_reuse()
+    yield ("query.sort_reuse", results["sort_reuse"]["reuse_ms"] * 1e3,
+           f"resort/reuse={results['sort_reuse']['speedup']:.2f}x "
+           f"avoided={results['sort_reuse']['steady_state']['sorts_avoided']}")
+    out_path = os.environ.get("REPRO_BENCH_QUERY_JSON", "BENCH_query.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -4,15 +4,19 @@ from .ni_index import NIIndex, NIEntry, build_ni_index, vertex_cover_2approx
 from .query import QueryTemplate, QueryEdge, ConnectionEdge, brute_force_match
 from .signature import build_requirements, check_interval_candidates
 from .decompose import DTree, decompose, join_order
-from .matching import Table, join_tables, cross_join, edge_pairs, \
+from .matching import Table, CandidateTable, SortedRun, JoinTelemetry, \
+    join_tables, cross_join, edge_pairs, \
     dtree_candidates, CapacityOverflow, resolve_join_impl, filter_rows, \
     injective_filter
 from .connectivity import (connectivity_mask, reach_sets,
     connectivity_mask_vectorized, enumerate_shortest_paths,
     instantiate_connections)
 from .stats import DatasetStats, compute_stats, predicate_selectivity, \
-    literal_selectivity, coherence, relationship_specialty, literal_diversity
+    literal_selectivity, coherence, relationship_specialty, \
+    literal_diversity, connection_selectivity
 from .planner import Thresholds, PlanDecision, decide, \
-    neighborhood_selectivity, tune_thresholds, JoinEstimator
+    neighborhood_selectivity, tune_thresholds, JoinEstimator, \
+    JoinPlan, PlannedStep, plan_table_joins, simulate_join_order, \
+    ConnectionPlan, plan_connections
 from .engine import Engine, EngineConfig, MatchResult, make_engine
 from .distributed import shard_check, gather_candidates

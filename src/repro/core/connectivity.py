@@ -166,10 +166,17 @@ def connectivity_mask(graph: RDFGraph, ni: NIIndex,
 
 def connectivity_mask_vectorized(graph: RDFGraph, ni: NIIndex,
                                  a_nodes: np.ndarray, b_nodes: np.ndarray,
-                                 d_c: int, *, impl: str = "auto",
+                                 d_c: int, bidirectional: bool = False,
+                                 *, impl: str = "auto",
                                  chunk: int = 1024) -> np.ndarray:
     """TPU-target form: batched reach-set gathers + intersect kernel.
     Exactness guaranteed by BFS fallback on overflow rows."""
+    if bidirectional:
+        fwd = connectivity_mask_vectorized(graph, ni, a_nodes, b_nodes,
+                                           d_c, impl=impl, chunk=chunk)
+        rev = connectivity_mask_vectorized(graph, ni, b_nodes, a_nodes,
+                                           d_c, impl=impl, chunk=chunk)
+        return fwd | rev
     p = len(a_nodes)
     out = np.zeros(p, dtype=bool)
     h_fwd = -(-d_c // 2)

@@ -63,7 +63,12 @@ def decompose(query: QueryTemplate, comp: list[int],
 def join_order(trees: list[DTree], cand_counts: list[int]) -> list[int]:
     """Paper's join order: start from the smallest candidate set, repeatedly
     add the smallest-candidate tree that shares a query node with the
-    already-joined set (fall back to global smallest if disconnected)."""
+    already-joined set (fall back to global smallest if disconnected).
+
+    This is the seed heuristic, kept as the `plan_mode="greedy"` baseline
+    and as the comparison order the cost-based planner
+    (`planner.plan_table_joins`) evaluates under its own cost model; the
+    engine executes the planner's order by default."""
     n = len(trees)
     order = []
     used = [False] * n

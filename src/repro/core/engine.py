@@ -2,9 +2,12 @@
 
 Pipeline per query: separate connection edges → IDMap candidate intervals →
 (policy-dependent) neighborhood check → per-component D-tree decomposition →
-edge-parallel D-tree candidate generation → size-ordered joins →
+edge-parallel D-tree candidate generation → cost-based whole-query join plan
+(planner.plan_table_joins over System-R estimates, sort-run-reuse aware) →
 connection-edge evaluation (intra-table filters first, then cross-component
-connectivity joins, smallest candidate product first) → final match table.
+connectivity joins in planner.plan_connections order) → final match table.
+EngineConfig.plan_mode='greedy' keeps the seed's smallest-first heuristics
+for A/B comparison.
 
 Engine variants (paper §6):
   STWIG+      check_policy='never',     any index (1-hop suffices)
@@ -30,10 +33,12 @@ from .signature import (build_requirements, check_interval_candidates,
 from .decompose import decompose, join_order, DTree
 from .matching import (Table, CapacityOverflow, dtree_candidates,
                        cross_join, single_node_table, filter_rows,
-                       injective_filter, planned_join, _pow2)
+                       injective_filter, planned_join, _pow2,
+                       JoinTelemetry)
 from .connectivity import connectivity_mask
-from .planner import Thresholds, PlanDecision, decide, JoinEstimator
-from .stats import DatasetStats, compute_stats
+from .planner import (Thresholds, PlanDecision, decide, JoinEstimator,
+                      plan_table_joins, plan_connections)
+from .stats import DatasetStats, compute_stats, connection_selectivity
 
 
 @dataclass
@@ -46,6 +51,7 @@ class EngineConfig:
     max_rows: int | None = 1 << 20   # LIMIT guard for explosive joins
     use_bloom: bool = False          # gStore-style 1-hop bitstring prefilter
     join_impl: str = "auto"          # auto (planner per-join) | sorted | nested
+    plan_mode: str = "cost"          # whole-query join order: cost | greedy
 
 
 @dataclass
@@ -68,6 +74,12 @@ class QueryStats:
     join_est_rows: int = 0              # Σ estimated output rows
     join_actual_rows: int = 0           # Σ actual output rows
     join_est_log_err: float = 0.0       # Σ |ln(est/actual)| (accuracy)
+    # whole-query plan telemetry
+    plan_mode: str = "cost"             # join order used (cost | greedy)
+    sorts_performed: int = 0            # sort-merge sorts actually run
+    sorts_avoided: int = 0              # skipped via sort-order/cached runs
+    plan_cost: float = 0.0              # Σ est cost of executed join plans
+    greedy_plan_cost: float = 0.0       # same cost model, greedy order
 
 
 @dataclass
@@ -159,6 +171,8 @@ class Engine:
         # ---- per-component matching -----------------------------------
         t2 = time.perf_counter()
         estimator = JoinEstimator(self.stats, cand_sizes)
+        qs.plan_mode = cfg.plan_mode
+        tel = JoinTelemetry()
 
         def record_join(impl, est, actual, retried):
             qs.join_strategies[impl] = qs.join_strategies.get(impl, 0) + 1
@@ -190,17 +204,31 @@ class Engine:
                     join_impl=self.cfg.join_impl,
                     nested_max=self.cfg.thresholds.nested_join_max,
                     probe_impl=self._probe_impl(),
-                    estimator=estimator.edge_join, record=record_join)
+                    estimator=estimator.edge_join, record=record_join,
+                    telemetry=tel)
                 qs.truncated |= tab.truncated
                 qs.dtree_work += tab.count
                 cand_tables.append(injective_filter(tab))
-            order = join_order(trees, [t.count for t in cand_tables])
+            counts = [t.count for t in cand_tables]
+            greedy = join_order(trees, counts)
+            if cfg.plan_mode == "cost" and len(cand_tables) > 1:
+                plan = plan_table_joins(
+                    [set(tr.nodes) for tr in trees], counts, estimator,
+                    cfg.thresholds.nested_join_max,
+                    sort_orders=[t.sort_order for t in cand_tables],
+                    greedy_order=greedy)
+                order = plan.order
+                qs.plan_cost += plan.est_cost
+                qs.greedy_plan_cost += plan.greedy_cost
+            else:
+                order = greedy
             tab = cand_tables[order[0]]
             for i in order[1:]:
                 qs.join_work += max(tab.count, 1) * max(cand_tables[i].count, 1)
                 tab = injective_filter(self._join(
                     tab, cand_tables[i], estimator,
-                    row_limit=self.cfg.max_rows, record=record_join))
+                    row_limit=self.cfg.max_rows, record=record_join,
+                    telemetry=tel))
                 qs.truncated |= tab.truncated
             comp_tables.append(tab)
         qs.match_time = time.perf_counter() - t2
@@ -209,6 +237,8 @@ class Engine:
         t3 = time.perf_counter()
         final = self._process_connections(query, comps, comp_tables, qs)
         qs.conn_time = time.perf_counter() - t3
+        qs.sorts_performed = tel.sorts_performed
+        qs.sorts_avoided = tel.sorts_avoided
 
         qs.total_time = time.perf_counter() - t0
         rows = np.asarray(final.rows[: final.count])
@@ -224,7 +254,8 @@ class Engine:
         return "sorted" if impl == "ref" else impl
 
     def _join(self, a: Table, b: Table, estimator: JoinEstimator,
-              row_limit: int | None = None, record=None) -> Table:
+              row_limit: int | None = None, record=None,
+              telemetry: JoinTelemetry | None = None) -> Table:
         """Planned equi-join: strategy by table size, capacity pre-sized
         from the stats-driven cardinality estimate, single exact-size
         retry on overflow."""
@@ -233,7 +264,8 @@ class Engine:
         return planned_join(a, b, est, row_limit=row_limit,
                             impl=self.cfg.join_impl,
                             nested_max=self.cfg.thresholds.nested_join_max,
-                            probe_impl=self._probe_impl(), record=record)
+                            probe_impl=self._probe_impl(), record=record,
+                            telemetry=telemetry)
 
     def _retry(self, fn, *args, **kw):
         cap = None
@@ -247,6 +279,12 @@ class Engine:
     def _process_connections(self, query: QueryTemplate, comps,
                              comp_tables: list[Table],
                              qs: QueryStats) -> Table:
+        """Connection-edge evaluation (Alg. 3): intra filters first (linear
+        in table size), then cross-component merges.  The merge order comes
+        from planner.plan_connections (cost-based over the estimated
+        cross-product work with connection-selectivity estimates) under
+        plan_mode='cost'; plan_mode='greedy' keeps the seed's dynamic
+        smallest-current-product rule as an A/B baseline."""
         tables = list(comp_tables)
         owner = {}
         for i, comp in enumerate(comps):
@@ -260,16 +298,10 @@ class Engine:
                 i = group[i]
             return i
 
-        # intra-component connection filters first (linear in table size)
-        intra = [c for c in query.connections
-                 if find(owner[c.src]) == find(owner[c.dst])]
-        inter = [c for c in query.connections
-                 if find(owner[c.src]) != find(owner[c.dst])]
-        for c in intra:
-            gi = find(owner[c.src])
+        def intra_filter(gi: int, c) -> None:
             tab = tables[gi]
             if tab.count == 0:
-                continue
+                return
             rows = np.asarray(tab.rows[: tab.count])
             a = rows[:, tab.cols.index(c.src)]
             b = rows[:, tab.cols.index(c.dst)]
@@ -277,30 +309,19 @@ class Engine:
                                      c.bidirectional, impl=self.cfg.impl)
             tables[gi] = filter_rows(tab, keep)
 
-        # inter-component: smallest candidate product first
-        while inter:
-            inter.sort(key=lambda c: tables[find(owner[c.src])].count
-                       * tables[find(owner[c.dst])].count)
-            c = inter.pop(0)
+        def apply_connection(c) -> None:
             gi, gj = find(owner[c.src]), find(owner[c.dst])
             if gi == gj:
                 # merged by an earlier join: now an intra filter
-                tab = tables[gi]
-                rows = np.asarray(tab.rows[: tab.count])
-                a = rows[:, tab.cols.index(c.src)]
-                b = rows[:, tab.cols.index(c.dst)]
-                keep = connectivity_mask(self.graph, self.ni, a, b,
-                                         c.max_dist, c.bidirectional,
-                                         impl=self.cfg.impl)
-                tables[gi] = filter_rows(tab, keep)
-                continue
+                intra_filter(gi, c)
+                return
             ta, tb = tables[gi], tables[gj]
             qs.join_work += max(ta.count, 1) * max(tb.count, 1)
             joined = injective_filter(self._retry(
                 cross_join, ta, tb, row_limit=self.cfg.max_rows))
             qs.truncated |= joined.truncated
-            rows = np.asarray(joined.rows[: joined.count])
             if joined.count:
+                rows = np.asarray(joined.rows[: joined.count])
                 a = rows[:, joined.cols.index(c.src)]
                 b = rows[:, joined.cols.index(c.dst)]
                 keep = connectivity_mask(self.graph, self.ni, a, b,
@@ -309,6 +330,33 @@ class Engine:
                 joined = filter_rows(joined, keep)
             group[gj] = gi
             tables[gi] = joined
+
+        intra = [c for c in query.connections
+                 if find(owner[c.src]) == find(owner[c.dst])]
+        inter = [c for c in query.connections
+                 if find(owner[c.src]) != find(owner[c.dst])]
+        for c in intra:
+            intra_filter(find(owner[c.src]), c)
+
+        if inter and self.cfg.plan_mode == "cost":
+            endpoints = [(find(owner[c.src]), find(owner[c.dst]))
+                         for c in inter]
+            sels = [connection_selectivity(self.stats,
+                                           self.graph.num_nodes,
+                                           c.max_dist, c.bidirectional)
+                    for c in inter]
+            plan = plan_connections([t.count for t in tables],
+                                    endpoints, sels)
+            qs.plan_cost += plan.est_cost
+            qs.greedy_plan_cost += plan.greedy_cost
+            for k in plan.order:
+                apply_connection(inter[k])
+        else:
+            # seed baseline: smallest current candidate product first
+            while inter:
+                inter.sort(key=lambda c: tables[find(owner[c.src])].count
+                           * tables[find(owner[c.dst])].count)
+                apply_connection(inter.pop(0))
 
         # cross-join any remaining disconnected groups
         roots = sorted({find(i) for i in range(len(tables))})

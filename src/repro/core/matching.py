@@ -19,12 +19,20 @@ Joins are planned per-pair between two device-resident strategies:
 
 All tables are capacity-padded for jit shape stability; true counts are
 tracked, and capacity overflow raises CapacityOverflow carrying the exact
-needed size so the engine's retry re-sizes in one step (stats-driven
-estimates pre-size capacities so the retry is the exception).
+needed size — plus the completed sort+probe state on the sort-merge path —
+so the engine's retry re-sizes in one step without redoing the work
+(stats-driven estimates pre-size capacities so the retry is the exception).
+
+Tables are first-class: CandidateTable carries sort-order metadata
+(`sort_order` — the column tuple its rows are currently ordered by) and a
+cache of sorted runs, so a chain of sort-merge joins on the same key sorts
+each side at most once.  Join outputs, filters, and cross products tag or
+propagate the order they preserve; `JoinTelemetry` counts sorts performed
+vs. avoided for QueryStats.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 import jax
@@ -52,12 +60,43 @@ class CapacityOverflow(Exception):
 
 
 @dataclass
-class Table:
-    """Padded match table: rows[i] maps cols[j] -> graph node id."""
+class SortedRun:
+    """One cached sorted materialization of a table.
+
+    rows: the table's rows permuted to be lexicographically nondecreasing
+    by `key_cols` (valid rows first, padding last).  keys: the packed
+    int32 join keys in that same order, cached only for single-column
+    runs tagged with the side role they were built for — single-column
+    keys are independent of the partner table, but carry a per-side
+    invalid-row sentinel, so an 'a'-side key run cannot be reused on the
+    'b' side.  Multi-column rank-packed keys depend on the partner table
+    and are never cached (keys is None)."""
+    rows: jax.Array
+    keys: jax.Array | None = None
+    key_side: str | None = None     # 'a' | 'b' (role keys were built for)
+
+
+@dataclass
+class CandidateTable:
+    """First-class device-resident match table.
+
+    rows[i] maps cols[j] -> graph node id; rows is capacity-padded
+    (pow2) for jit shape stability and `count` tracks the valid prefix.
+
+    Sort-order metadata threads through the whole join pipeline:
+    `sort_order` names the column tuple the valid rows are currently
+    lexicographically ordered by (None = unknown order), and `_runs`
+    caches previously computed sorted materializations keyed by column
+    tuple.  `_join_sorted` consults both to skip redundant
+    `_sort_rows_by_key` calls, and tags its outputs with the order they
+    inherit from the merge, so chains of joins on the same key sort each
+    side at most once."""
     cols: tuple[int, ...]
     rows: jax.Array            # [cap, len(cols)] int32, invalid rows = -1
     count: int                 # true number of valid rows
     truncated: bool = False    # row_limit hit (LIMIT semantics)
+    sort_order: tuple[int, ...] | None = None   # current row order (or None)
+    _runs: dict = field(default_factory=dict, repr=False, compare=False)
 
     @property
     def cap(self) -> int:
@@ -67,7 +106,60 @@ class Table:
         return np.asarray(self.rows[: self.count])
 
     def result_set(self) -> set[tuple[int, ...]]:
-        return {tuple(int(x) for x in r) for r in self.numpy()}
+        """Deduplicated rows in *canonical* column order (columns sorted
+        by query-node id), so tables produced by different join orders —
+        whose .cols permutations differ — compare equal.  Matches
+        MatchResult.result_set."""
+        order = np.argsort(self.cols, kind="stable")
+        return {tuple(int(r[i]) for i in order) for r in self.numpy()}
+
+    # ---------------- sort-run bookkeeping ------------------------- #
+    def is_sorted_by(self, key_cols: tuple[int, ...]) -> bool:
+        """True iff rows are already ordered by key_cols (a lexicographic
+        sort by a longer tuple is also sorted by any prefix)."""
+        return (self.sort_order is not None
+                and len(self.sort_order) >= len(key_cols)
+                and self.sort_order[: len(key_cols)] == tuple(key_cols))
+
+    def sorted_run(self, key_cols: tuple[int, ...]) -> SortedRun | None:
+        """A cached/implicit sorted materialization for key_cols, if any."""
+        key_cols = tuple(key_cols)
+        if self.is_sorted_by(key_cols):
+            run = self._runs.get(key_cols)
+            return run if run is not None else SortedRun(rows=self.rows)
+        return self._runs.get(key_cols)
+
+    # Each cached run holds a full sorted copy of the rows; cap how many
+    # a table retains (FIFO) so a table joined on many distinct keys
+    # can't pin unbounded device memory.  Chained joins on one key — the
+    # reuse pattern that matters — need exactly one entry, and join
+    # *outputs* reuse via their sort_order tag, which costs nothing.
+    MAX_CACHED_RUNS = 4
+
+    def cache_run(self, key_cols: tuple[int, ...], rows_sorted: jax.Array,
+                  keys_sorted: jax.Array | None = None,
+                  key_side: str | None = None) -> None:
+        if len(key_cols) != 1:
+            keys_sorted = key_side = None   # partner-dependent, not reusable
+        key_cols = tuple(key_cols)
+        while key_cols not in self._runs \
+                and len(self._runs) >= self.MAX_CACHED_RUNS:
+            self._runs.pop(next(iter(self._runs)))
+        self._runs[key_cols] = SortedRun(
+            rows=rows_sorted, keys=keys_sorted, key_side=key_side)
+
+
+# Historical name: the thin rows+count dataclass this grew out of.  All
+# call sites accept/return CandidateTable; the alias keeps the public API.
+Table = CandidateTable
+
+
+@dataclass
+class JoinTelemetry:
+    """Per-query sort-reuse counters (threaded from the engine down into
+    the sort-merge join path)."""
+    sorts_performed: int = 0
+    sorts_avoided: int = 0
 
 
 def _pow2(x: int, lo: int = 64) -> int:
@@ -220,21 +312,99 @@ def _merge_expand(a_rows_s, b_rows_s, start, cnt, limit, cap, new_sel,
     return left
 
 
+@dataclass
+class _ProbeResume:
+    """Sort+probe results carried on CapacityOverflow so the exact-size
+    retry re-runs only the expand — no second sort, probe, or host sync."""
+    a_rows_s: jax.Array
+    b_rows_s: jax.Array
+    start: jax.Array
+    cnt: jax.Array
+    cnt_np: np.ndarray
+    key_cols: tuple[int, ...]
+
+
+def _reuse_key_order(a: Table, b: Table, shared):
+    """Permute the shared-column order — equi-join semantics are
+    order-invariant — so that an existing sort order or cached run on
+    either side becomes usable.  Prefers reusing the larger side (bigger
+    sort skipped)."""
+    if len(shared) < 2:
+        return shared
+    col_set = {a.cols[i] for i, _ in shared}
+    best = None
+    for t, weight in ((a, a.count), (b, b.count)):
+        orders = []
+        if t.sort_order is not None and len(t.sort_order) >= len(shared):
+            orders.append(tuple(t.sort_order[: len(shared)]))
+        orders.extend(k for k in t._runs if len(k) == len(shared))
+        for o in orders:
+            if set(o) == col_set and len(set(o)) == len(shared):
+                if best is None or weight > best[0]:
+                    best = (weight, o)
+    if best is None:
+        return shared
+    by_col = {a.cols[i]: (i, j) for i, j in shared}
+    return [by_col[c] for c in best[1]]
+
+
 def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
-                 probe_impl: str) -> Table:
-    a_sel = tuple(s[0] for s in shared)
-    b_sel = tuple(s[1] for s in shared)
+                 probe_impl: str, telemetry: JoinTelemetry | None = None,
+                 resume: _ProbeResume | None = None) -> Table:
     out_cols = a.cols + tuple(b.cols[j] for j in new)
+    if resume is None:
+        shared = _reuse_key_order(a, b, shared)
+        a_sel = tuple(s[0] for s in shared)
+        b_sel = tuple(s[1] for s in shared)
+        key_cols = tuple(a.cols[i] for i in a_sel)
 
-    a_keys, b_keys = _build_join_keys(a.rows, b.rows, a_sel, b_sel)
-    a_keys_s, a_rows_s = _sort_rows_by_key(a_keys, a.rows)
-    b_keys_s, b_rows_s = _sort_rows_by_key(b_keys, b.rows)
-    start, cnt = kops.merge_probe(a_keys_s, b_keys_s, impl=probe_impl)
+        a_run = a.sorted_run(key_cols)
+        b_run = b.sorted_run(key_cols)
+        a_rows_in = a_run.rows if a_run is not None else a.rows
+        b_rows_in = b_run.rows if b_run is not None else b.rows
+        # Packed keys: a cached single-column key run is reused only in
+        # the side role it was built for (invalid-row sentinels are
+        # per-side); otherwise keys are (re)built from the — possibly
+        # pre-sorted — rows, which keeps them in sorted order because
+        # the rank packing is order-preserving.
+        a_keys = a_run.keys if (a_run is not None and a_run.keys is not None
+                                and a_run.key_side == "a") else None
+        b_keys = b_run.keys if (b_run is not None and b_run.keys is not None
+                                and b_run.key_side == "b") else None
+        if a_keys is None or b_keys is None:
+            ak, bk = _build_join_keys(a_rows_in, b_rows_in, a_sel, b_sel)
+            a_keys = ak if a_keys is None else a_keys
+            b_keys = bk if b_keys is None else b_keys
+        if a_run is not None:
+            a_keys_s, a_rows_s = a_keys, a_rows_in
+            if telemetry is not None:
+                telemetry.sorts_avoided += 1
+        else:
+            a_keys_s, a_rows_s = _sort_rows_by_key(a_keys, a.rows)
+            a.cache_run(key_cols, a_rows_s, a_keys_s, "a")
+            if telemetry is not None:
+                telemetry.sorts_performed += 1
+        if b_run is not None:
+            b_keys_s, b_rows_s = b_keys, b_rows_in
+            if telemetry is not None:
+                telemetry.sorts_avoided += 1
+        else:
+            b_keys_s, b_rows_s = _sort_rows_by_key(b_keys, b.rows)
+            b.cache_run(key_cols, b_rows_s, b_keys_s, "b")
+            if telemetry is not None:
+                telemetry.sorts_performed += 1
+        start, cnt = kops.merge_probe(a_keys_s, b_keys_s, impl=probe_impl)
 
-    # The per-row count vector syncs to host once per join (planning
-    # metadata, not row data): summing in int64 avoids the int32 wrap a
-    # skewed >2^31-match join would hit on device.
-    cnt_np = np.asarray(cnt)
+        # The per-row count vector syncs to host ONCE per join (planning
+        # metadata, not row data): summing in int64 avoids the int32 wrap
+        # a skewed >2^31-match join would hit on device.  The same array
+        # serves the capacity check, the overflow clip below, and — via
+        # _ProbeResume on CapacityOverflow — the exact-size retry.
+        cnt_np = np.asarray(cnt)
+    else:
+        a_rows_s, b_rows_s = resume.a_rows_s, resume.b_rows_s
+        start, cnt, cnt_np = resume.start, resume.cnt, resume.cnt_np
+        key_cols = resume.key_cols
     total = int(cnt_np.sum(dtype=np.int64))
     out_count = total if row_limit is None else min(total, row_limit)
     truncated = row_limit is not None and total > row_limit
@@ -245,10 +415,14 @@ def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
     if cap is None:
         cap = _pow2(out_count)
     if out_count > cap:
-        raise CapacityOverflow(out_count)
+        err = CapacityOverflow(out_count)
+        err.resume = _ProbeResume(a_rows_s, b_rows_s, start, cnt, cnt_np,
+                                  key_cols)
+        raise err
     if total >= 1 << 31:
         # device cumsum would wrap: clip per-row counts on host so the
-        # running total saturates at the row limit, then expand normally.
+        # running total saturates at the row limit, then expand normally
+        # (reuses the one cnt_np transfer made above).
         csum = cnt_np.astype(np.int64).cumsum()
         clipped = np.clip(out_count - (csum - cnt_np.astype(np.int64)),
                           0, cnt_np.astype(np.int64))
@@ -256,8 +430,10 @@ def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
     rows = _merge_expand(a_rows_s, b_rows_s, start, cnt,
                          jnp.int32(out_count), cap=cap,
                          new_sel=tuple(new), has_new=bool(new))
+    # The expand emits output slots in sorted-a order: the result is
+    # lexicographically ordered by the join key and inherits it.
     return Table(cols=out_cols, rows=rows, count=out_count,
-                 truncated=truncated)
+                 truncated=truncated, sort_order=key_cols)
 
 
 # ------------------------- nested-loop path --------------------------- #
@@ -334,14 +510,18 @@ def join_tables(a: Table, b: Table, cap: int | None = None,
                 chunk: int = 4096, b_chunk: int = 1 << 16,
                 row_limit: int | None = None, impl: str = "auto",
                 nested_max: int = DEFAULT_NESTED_MAX,
-                probe_impl: str = "auto") -> Table:
+                probe_impl: str = "auto",
+                telemetry: JoinTelemetry | None = None,
+                _resume: _ProbeResume | None = None) -> Table:
     """Equi-join on shared query-node columns.
 
     impl: 'auto' (planner picks per table size), 'sorted' (sort-merge),
     or 'nested' (chunked vectorized nested loop).  With row_limit the join
     stops once the limit is reached (LIMIT semantics — appended rows are
     clamped to the remaining budget and .truncated is set iff matches were
-    dropped or scanning stopped early)."""
+    dropped or scanning stopped early).  telemetry counts sorts performed
+    vs. avoided on the sort-merge path; _resume (from a CapacityOverflow's
+    .resume) replays a completed sort+probe at a larger capacity."""
     shared, new = _shared_and_new(a.cols, b.cols)
     if not shared:
         return cross_join(a, b, cap=cap, row_limit=row_limit)
@@ -349,7 +529,8 @@ def join_tables(a: Table, b: Table, cap: int | None = None,
     if impl == "nested":
         return _join_nested(a, b, shared, new, cap, chunk, b_chunk,
                             row_limit)
-    return _join_sorted(a, b, shared, new, cap, row_limit, probe_impl)
+    return _join_sorted(a, b, shared, new, cap, row_limit, probe_impl,
+                        telemetry=telemetry, resume=_resume)
 
 
 MAX_PRESIZE_CAP = 1 << 22     # estimate-driven preallocation ceiling (rows)
@@ -359,14 +540,17 @@ def planned_join(a: Table, b: Table, est: int | None,
                  row_limit: int | None = None, impl: str = "auto",
                  nested_max: int = DEFAULT_NESTED_MAX,
                  probe_impl: str = "auto", record=None,
-                 chunk: int = 4096, b_chunk: int = 1 << 16) -> Table:
+                 chunk: int = 4096, b_chunk: int = 1 << 16,
+                 telemetry: JoinTelemetry | None = None) -> Table:
     """Estimate-pre-sized join with a single exact-size overflow retry.
 
     The capacity hint from `est` is clamped by the worst-case output
     (|A|*|B|), the row limit, and MAX_PRESIZE_CAP, so an over-estimate can
     never pre-allocate an absurd buffer — an under-estimate costs one
-    retry at the exact pow2 size.  record(impl, est, actual, retried)
-    feeds QueryStats telemetry."""
+    retry at the exact pow2 size.  On the sort-merge path the retry
+    replays the first attempt's sort+probe results (carried on the
+    exception), so only the expand re-runs.  record(impl, est, actual,
+    retried) feeds QueryStats telemetry."""
     if not any(c in b.cols for c in a.cols):
         impl = "cross"              # no shared cols: join_tables delegates
     else:
@@ -381,13 +565,14 @@ def planned_join(a: Table, b: Table, est: int | None,
         if row_limit is not None:
             cap_hint = min(cap_hint, _pow2(row_limit))
     kw = dict(row_limit=row_limit, impl=impl, probe_impl=probe_impl,
-              chunk=chunk, b_chunk=b_chunk)
+              chunk=chunk, b_chunk=b_chunk, telemetry=telemetry)
     retried = False
     try:
         out = join_tables(a, b, cap=cap_hint, **kw)
     except CapacityOverflow as e:
         retried = True
-        out = join_tables(a, b, cap=_pow2(e.needed), **kw)
+        out = join_tables(a, b, cap=_pow2(e.needed),
+                          _resume=getattr(e, "resume", None), **kw)
     if record is not None:
         record(impl, est, out.count, retried)
     return out
@@ -401,9 +586,14 @@ def _cross_expand(a_rows, b_rows, a_count, b_count, cap):
     bc = jnp.maximum(b_count, 1)
     # t < a*b  <=>  t // b < a: avoids the int32 product, which wraps
     # for >= 2^31-row cross products
-    valid = ((t // bc) < a_count) & (a_count > 0) & (b_count > 0)
-    i = jnp.minimum(t // bc, jnp.maximum(a_count - 1, 0))
-    j = jnp.minimum(t % bc, jnp.maximum(b_count - 1, 0))
+    i0 = t // bc
+    valid = (i0 < a_count) & (a_count > 0) & (b_count > 0)
+    i = jnp.minimum(i0, jnp.maximum(a_count - 1, 0))
+    # j as t - i0*bc, NOT t % bc: the fused int32 remainder miscompiles
+    # under XLA CPU at some shapes (gather index collapses to 0 — caught
+    # by test_cross_expand_xla_remainder_regression); the subtraction
+    # form lowers correctly and is equivalent for t, bc >= 0.
+    j = jnp.minimum(t - i0 * bc, jnp.maximum(b_count - 1, 0))
     left = jnp.where(valid[:, None], a_rows[i], -1)
     right = jnp.where(valid[:, None], b_rows[j], -1)
     return jnp.concatenate([left, right], axis=1)
@@ -430,7 +620,10 @@ def cross_join(a: Table, b: Table, cap: int | None = None,
         raise CapacityOverflow(total)
     rows = _cross_expand(a.rows, b.rows, jnp.int32(a_count),
                          jnp.int32(b_count), cap)
-    t = Table(cols=out_cols, rows=rows, count=total)
+    # a-major expansion: each a row becomes a contiguous block, so the
+    # product stays ordered by whatever a was ordered by.
+    t = Table(cols=out_cols, rows=rows, count=total,
+              sort_order=a.sort_order)
     t.truncated = truncated
     return t
 
@@ -447,7 +640,9 @@ def single_node_table(node: int, lo: int, hi: int,
     cap = _pow2(len(ids))
     rows = np.full((cap, 1), -1, np.int32)
     rows[: len(ids), 0] = ids
-    return Table(cols=(node,), rows=jnp.asarray(rows), count=len(ids))
+    # ids come from an arange (optionally mask-filtered): already sorted
+    return Table(cols=(node,), rows=jnp.asarray(rows), count=len(ids),
+                 sort_order=(node,))
 
 
 def dtree_candidates(graph: RDFGraph, tree: DTree,
@@ -456,7 +651,8 @@ def dtree_candidates(graph: RDFGraph, tree: DTree,
                      join_impl: str = "auto",
                      nested_max: int = DEFAULT_NESTED_MAX,
                      probe_impl: str = "auto",
-                     estimator=None, record=None) -> Table:
+                     estimator=None, record=None,
+                     telemetry: JoinTelemetry | None = None) -> Table:
     """Generate all candidate matches of one D-tree by sequential
     edge-parallel pair generation + joins on the root column.
 
@@ -479,7 +675,8 @@ def dtree_candidates(graph: RDFGraph, tree: DTree,
                 table.count, pred, outgoing, pairs.count)
             table = planned_join(table, pairs, est, row_limit=row_limit,
                                  impl=join_impl, nested_max=nested_max,
-                                 probe_impl=probe_impl, record=record)
+                                 probe_impl=probe_impl, record=record,
+                                 telemetry=telemetry)
         truncated |= table.truncated
         if table.count == 0:
             break
@@ -542,5 +739,7 @@ def filter_rows(table: Table, keep, kept: int | None = None) -> Table:
         kept = int(keep.sum())
     cap = _pow2(kept)
     rows = _filter_gather(table.rows, keep, cap)
+    # compaction is order-preserving: the surviving rows keep their
+    # relative order, so the sort-order tag carries across filters
     return Table(cols=table.cols, rows=rows, count=kept,
-                 truncated=table.truncated)
+                 truncated=table.truncated, sort_order=table.sort_order)

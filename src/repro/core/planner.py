@@ -15,6 +15,7 @@ pruning power of checking q's neighborhood structure.
 """
 from __future__ import annotations
 
+import itertools
 import math
 from dataclasses import dataclass, field
 
@@ -148,6 +149,313 @@ class JoinEstimator:
         v = min(self.cand_sizes.get(q, 1) for q in shared_cols)
         v = max(1, min(v, max(a_count, 1), max(b_count, 1)))
         return int(a_count * b_count / v) + 1
+
+
+# ---------------------------------------------------------------------- #
+# Whole-query join planning: cost-based join ordering over a component's
+# D-tree candidate tables (Selinger-style DP over the System-R estimates
+# JoinEstimator already provides) and over the cross-component connection
+# edges.  The cost model knows about sort-run reuse: a sort-merge join
+# whose left side is already ordered by the join key skips that sort, so
+# orders that chain joins on the same key are cheaper.
+# ---------------------------------------------------------------------- #
+_LOG2 = math.log(2.0)
+_PLAN_DP_MAX = 10           # exhaustive subset-DP up to this many tables
+_CONN_PERM_MAX = 6          # exhaustive permutations up to this many edges
+
+
+def _sort_cost(n: int) -> float:
+    n = max(int(n), 1)
+    return n * math.log(max(n, 2)) / _LOG2
+
+
+def _pairwise_join_cost(left_rows: int, right_rows: int, est_out: int,
+                        nested_max: int, left_sorted: bool,
+                        right_sorted: bool) -> float:
+    """Work proxy (row ops) for one equi-join under the engine's strategy
+    rule: nested-loop below nested_max, else sort-merge where each unsorted
+    side pays an n log n sort and the merge+expand pays (A + B + out)."""
+    if max(left_rows, right_rows) <= nested_max:
+        return float(max(left_rows, 1) * max(right_rows, 1))
+    cost = float(left_rows + right_rows + est_out)
+    if not left_sorted:
+        cost += _sort_cost(left_rows)
+    if not right_sorted:
+        cost += _sort_cost(right_rows)
+    return cost
+
+
+@dataclass
+class PlannedStep:
+    """One join in a component plan: table `index` is merged into the
+    accumulated table."""
+    index: int
+    est_rows: int               # estimated accumulated rows after the join
+    est_cost: float             # estimated cost of this join
+    key_cols: tuple[int, ...]   # shared query nodes joined on ('' = cross)
+    reuses_sort: bool           # left side's order makes the sort skippable
+
+
+@dataclass
+class JoinPlan:
+    """Cost-based join order for one component's candidate tables, plus
+    the greedy baseline evaluated under the same cost model (telemetry:
+    planned vs. greedy cost lands in QueryStats)."""
+    order: list[int]
+    steps: list[PlannedStep]
+    est_cost: float
+    greedy_order: list[int]
+    greedy_cost: float
+
+
+def _reusable(sort_key: tuple[int, ...] | None,
+              shared: tuple[int, ...]) -> bool:
+    """Mirror of matching._reuse_key_order: the join may permute its key
+    columns, so a sorted run is reusable iff the first |shared| sorted
+    columns are exactly the shared set."""
+    return (sort_key is not None and len(sort_key) >= len(shared)
+            and set(sort_key[: len(shared)]) == set(shared)
+            and len(shared) > 0)
+
+
+def _join_step(rows, skey, count_i, order_i, shared, est_out, nested_max,
+               larger_is_left: bool | None = None):
+    """One simulated join: (cost, next sort key, left_reused).
+
+    Mirrors execution fidelity: the nested regime produces an untagged
+    table (no downstream reuse), and when both sides are sorted under
+    *conflicting* permutations of a multi-column key, the executor can
+    align the join key with only one of them — credit the larger side."""
+    sorted_regime = max(rows, count_i) > nested_max
+    left_ok = _reusable(skey, shared)
+    right_ok = _reusable(order_i, shared)
+    if (left_ok and right_ok and len(shared) > 1
+            and tuple(skey[: len(shared)]) != tuple(order_i[: len(shared)])):
+        if larger_is_left is None:
+            larger_is_left = rows >= count_i
+        left_ok, right_ok = larger_is_left, not larger_is_left
+    c = _pairwise_join_cost(rows, count_i, est_out, nested_max,
+                            left_sorted=left_ok, right_sorted=right_ok)
+    if not shared:
+        next_key = skey        # cross_join propagates the left order
+    else:
+        next_key = shared if sorted_regime else None
+    return c, next_key, left_ok and sorted_regime
+
+
+def simulate_join_order(order, node_sets, counts, estimator: JoinEstimator,
+                        nested_max: int,
+                        sort_orders=None) -> tuple[float, list[PlannedStep]]:
+    """Evaluate a join order under the cost model; returns (cost, steps)."""
+    if sort_orders is None:
+        sort_orders = [None] * len(node_sets)
+    steps: list[PlannedStep] = []
+    first = order[0]
+    rows = counts[first]
+    nodes = set(node_sets[first])
+    skey = sort_orders[first]
+    cost = 0.0
+    for i in order[1:]:
+        shared = tuple(sorted(nodes & node_sets[i]))
+        est_out = estimator.table_join(rows, counts[i], shared)
+        c, skey, reused = _join_step(rows, skey, counts[i], sort_orders[i],
+                                     shared, est_out, nested_max)
+        cost += c
+        steps.append(PlannedStep(index=i, est_rows=est_out, est_cost=c,
+                                 key_cols=shared, reuses_sort=reused))
+        rows = est_out
+        nodes |= node_sets[i]
+    return cost, steps
+
+
+def plan_table_joins(node_sets: list[set[int]], counts: list[int],
+                     estimator: JoinEstimator, nested_max: int,
+                     sort_orders=None,
+                     greedy_order: list[int] | None = None) -> JoinPlan:
+    """Pick a cost-based join order over a component's candidate tables.
+
+    Selinger-style DP over subsets (exact up to _PLAN_DP_MAX tables, one
+    best state kept per subset), falling back to greedy-by-marginal-cost
+    beyond that.  `greedy_order` (the seed's smallest-candidate-first
+    order) is evaluated under the same model for comparison telemetry."""
+    n = len(node_sets)
+    node_sets = [set(s) for s in node_sets]
+    if sort_orders is None:
+        sort_orders = [None] * n
+    if greedy_order is None:
+        greedy_order = list(range(n))
+    if n <= 1:
+        order = list(range(n))
+        return JoinPlan(order=order, steps=[], est_cost=0.0,
+                        greedy_order=list(greedy_order), greedy_cost=0.0)
+
+    def run(order):
+        return simulate_join_order(order, node_sets, counts, estimator,
+                                   nested_max, sort_orders)
+
+    greedy_cost, _ = run(greedy_order)
+
+    if n <= _PLAN_DP_MAX:
+        # best[mask] = (cost, est_rows, order, sort_key)
+        best: dict[int, tuple] = {
+            1 << i: (0.0, counts[i], (i,), sort_orders[i])
+            for i in range(n)}
+        full = (1 << n) - 1
+        # every nonempty subset is reachable by adding one table at a
+        # time, so processing masks in popcount order visits each state
+        # after all of its predecessors
+        for mask in sorted(range(1, full + 1),
+                           key=lambda m: (bin(m).count("1"), m)):
+            cost, rows, order, skey = best[mask]
+            nodes = set().union(*(node_sets[j] for j in order))
+            for i in range(n):
+                bit = 1 << i
+                if mask & bit:
+                    continue
+                shared = tuple(sorted(nodes & node_sets[i]))
+                est_out = estimator.table_join(rows, counts[i], shared)
+                c, nkey, _ = _join_step(rows, skey, counts[i],
+                                        sort_orders[i], shared, est_out,
+                                        nested_max)
+                nk = mask | bit
+                if nk not in best or cost + c < best[nk][0]:
+                    best[nk] = (cost + c, est_out, order + (i,), nkey)
+        _, _, order, _ = best[full]
+        order = list(order)
+    else:
+        # greedy by marginal cost (connected tables win automatically:
+        # cross products estimate as |A|x|B|)
+        remaining = set(range(n))
+        start = min(remaining, key=lambda i: counts[i])
+        order = [start]
+        remaining.discard(start)
+        rows, nodes, skey = counts[start], set(node_sets[start]), \
+            sort_orders[start]
+        while remaining:
+            def marginal(i):
+                shared = tuple(sorted(nodes & node_sets[i]))
+                est_out = estimator.table_join(rows, counts[i], shared)
+                return _join_step(rows, skey, counts[i], sort_orders[i],
+                                  shared, est_out, nested_max)[0]
+            i = min(remaining, key=marginal)
+            shared = tuple(sorted(nodes & node_sets[i]))
+            est_out = estimator.table_join(rows, counts[i], shared)
+            _, skey, _ = _join_step(rows, skey, counts[i], sort_orders[i],
+                                    shared, est_out, nested_max)
+            rows = est_out
+            nodes |= node_sets[i]
+            order.append(i)
+            remaining.discard(i)
+    est_cost, steps = run(order)
+    return JoinPlan(order=order, steps=steps, est_cost=est_cost,
+                    greedy_order=list(greedy_order),
+                    greedy_cost=greedy_cost)
+
+
+@dataclass
+class ConnectionPlan:
+    """Cost-based processing order for inter-component connection edges
+    (indices into the engine's `inter` list), with the greedy
+    smallest-product baseline costed under the same model."""
+    order: list[int]
+    est_cost: float
+    greedy_cost: float
+
+
+class _GroupSim:
+    """Union-find over component groups with estimated sizes — the single
+    source of the merge bookkeeping shared by the cost simulation and the
+    greedy baseline (so the two stay comparable by construction)."""
+
+    def __init__(self, sizes):
+        self.parent = list(range(len(sizes)))
+        self.size = [float(s) for s in sizes]
+
+    def find(self, x):
+        while self.parent[x] != x:
+            self.parent[x] = self.parent[self.parent[x]]
+            x = self.parent[x]
+        return x
+
+    def product(self, i, j):
+        """The seed's sort key: product of the two groups' current sizes
+        (same-group edges square their size, exactly as the engine's
+        greedy rule computes it)."""
+        gi, gj = self.find(i), self.find(j)
+        return max(self.size[gi], 1.0) * max(self.size[gj], 1.0)
+
+    def apply(self, i, j, sel):
+        """Process one connection edge; returns its estimated work."""
+        gi, gj = self.find(i), self.find(j)
+        if gi == gj:
+            cost = self.size[gi]
+            self.size[gi] = max(self.size[gi] * sel, 1.0)
+            return cost
+        prod = max(self.size[gi], 1.0) * max(self.size[gj], 1.0)
+        self.parent[gj] = gi
+        self.size[gi] = max(prod * sel, 1.0)
+        return prod
+
+
+def _simulate_conn_order(order, sizes, endpoints, sels):
+    """Total cross-product + filter work for processing connection edges in
+    `order`.  Each inter merge pays |A|x|B| (cross join + connectivity
+    filter over the product); a connection whose endpoints were already
+    merged becomes a linear intra filter.  Estimated group size after a
+    connection is product * selectivity."""
+    sim = _GroupSim(sizes)
+    return sum(sim.apply(*endpoints[idx], sels[idx]) for idx in order)
+
+
+def _greedy_conn_order(sizes, endpoints, sels):
+    """The seed engine's rule: repeatedly take the edge whose current group
+    product is smallest (simulated sizes, same model as the planner)."""
+    sim = _GroupSim(sizes)
+    remaining = list(range(len(endpoints)))
+    order = []
+    while remaining:
+        remaining.sort(key=lambda k: sim.product(*endpoints[k]))
+        k = remaining.pop(0)
+        order.append(k)
+        sim.apply(*endpoints[k], sels[k])
+    return order
+
+
+def plan_connections(sizes: list[int], endpoints: list[tuple[int, int]],
+                     sels: list[float]) -> ConnectionPlan:
+    """Order the inter-component connection edges to minimize estimated
+    cross-product work.  endpoints[k] are group indices into `sizes`;
+    sels[k] the connection's estimated selectivity (see
+    stats.connection_selectivity).  Exhaustive over permutations for up to
+    _CONN_PERM_MAX edges (connection counts are tiny), else greedy by
+    marginal simulated cost."""
+    m = len(endpoints)
+    greedy = _greedy_conn_order(sizes, endpoints, sels)
+    greedy_cost = _simulate_conn_order(greedy, sizes, endpoints, sels)
+    if m <= 1:
+        return ConnectionPlan(order=greedy, est_cost=greedy_cost,
+                              greedy_cost=greedy_cost)
+    if m <= _CONN_PERM_MAX:
+        best, best_cost = greedy, greedy_cost
+        for perm in itertools.permutations(range(m)):
+            c = _simulate_conn_order(perm, sizes, endpoints, sels)
+            if c < best_cost:
+                best, best_cost = list(perm), c
+        return ConnectionPlan(order=list(best), est_cost=best_cost,
+                              greedy_cost=greedy_cost)
+    # greedy by marginal cost of the next edge
+    remaining = set(range(m))
+    order: list[int] = []
+    while remaining:
+        k = min(remaining,
+                key=lambda k: _simulate_conn_order(order + [k], sizes,
+                                                   endpoints, sels))
+        order.append(k)
+        remaining.discard(k)
+    return ConnectionPlan(order=order,
+                          est_cost=_simulate_conn_order(order, sizes,
+                                                        endpoints, sels),
+                          greedy_cost=greedy_cost)
 
 
 def tune_thresholds(run_query, queries: list[QueryTemplate],

@@ -42,6 +42,31 @@ class DatasetStats:
         return table[ks[-1]]
 
 
+def connection_selectivity(stats: DatasetStats, num_nodes: int, d_c: int,
+                           bidirectional: bool = False) -> float:
+    """P(random node pair is connected within d_c hops) — the cardinality
+    feature the whole-query join plan uses to order connection edges.
+
+    Mirrors Algorithm 3's split: a forward reach set within ceil(d_c/2)
+    hops must intersect a backward reach set within the remaining hops.
+    Expected reach-set size is the geometric fanout series
+    sum_{i<=h} avg_fanout^i (capped at |N|), and two independent uniform
+    sets of sizes R_f, R_b over n nodes intersect with probability
+    ~= R_f * R_b / n."""
+    h_fwd = -(-d_c // 2)
+    h_bwd = d_c - h_fwd
+    fan = max(float(stats.avg_fanout), 1.0)
+    n = max(num_nodes, 1)
+
+    def reach(h: int) -> float:
+        return min(float(n), sum(fan ** i for i in range(h + 1)))
+
+    sel = min(1.0, reach(h_fwd) * reach(h_bwd) / n)
+    if bidirectional:
+        sel = min(1.0, 2.0 * sel)
+    return max(sel, 1.0 / (float(n) * n))
+
+
 def predicate_selectivity(graph: RDFGraph) -> np.ndarray:
     counts = np.bincount(graph.pred, minlength=graph.num_predicates)
     return counts / max(graph.num_edges, 1)

@@ -64,6 +64,32 @@ def test_connectivity_vectorized_form_matches():
     assert (m1 == m2).all()
 
 
+@pytest.mark.parametrize("seed,d_max,d_c", [
+    (0, 1, 2), (1, 2, 3), (2, 2, 4), (3, 3, 5), (4, 1, 3), (5, 2, 2)])
+def test_connectivity_vectorized_parity_randomized(seed, d_max, d_c):
+    """connectivity_mask vs connectivity_mask_vectorized on randomized
+    graphs and pairs — including repeated and self pairs — across index
+    depths both covering and not covering d_c."""
+    from repro.core.connectivity import connectivity_mask_vectorized
+    rng = np.random.default_rng(seed)
+    g = random_graph(n_nodes=int(rng.integers(40, 100)),
+                     n_edges=int(rng.integers(120, 320)),
+                     n_preds=3, seed=seed + 100)
+    ni = build_ni_index(g, d_max=d_max)
+    p = 48
+    a = rng.integers(0, g.num_nodes, p)
+    b = rng.integers(0, g.num_nodes, p)
+    b[: p // 8] = a[: p // 8]                # self pairs
+    a[p // 8: p // 4] = a[0]                 # repeated (memoized) sources
+    m1 = connectivity_mask(g, ni, a, b, d_c, impl="ref")
+    m2 = connectivity_mask_vectorized(g, ni, a, b, d_c, impl="ref")
+    assert (m1 == m2).all()
+    b1 = connectivity_mask(g, ni, a, b, d_c, bidirectional=True, impl="ref")
+    b2 = connectivity_mask_vectorized(g, ni, a, b, d_c, bidirectional=True,
+                                      impl="ref")
+    assert (b1 == b2).all()
+
+
 def test_enumerate_shortest_paths():
     from repro.core.connectivity import enumerate_shortest_paths
     import numpy as np

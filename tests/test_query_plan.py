@@ -1,0 +1,275 @@
+"""Whole-query join plan subsystem: CandidateTable sort-order propagation
+and cached sorted runs, the cost-based join ordering (planner.JoinPlan /
+ConnectionPlan), overflow-resume retries, and engine plan_mode parity."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import make_engine, JoinEstimator, JoinTelemetry
+from repro.core.matching import (Table, join_tables, planned_join,
+                                 cross_join, filter_rows, injective_filter,
+                                 single_node_table, CapacityOverflow, _pow2)
+from repro.core.planner import (plan_table_joins, plan_connections,
+                                simulate_join_order, _reusable)
+from repro.data import DATASETS, random_graph, random_query
+
+
+def mk_table(cols, data):
+    data = np.asarray(data, np.int32).reshape(-1, len(cols))
+    cap = _pow2(len(data))
+    rows = np.full((cap, len(cols)), -1, np.int32)
+    rows[: len(data)] = data
+    return Table(cols=tuple(cols), rows=jnp.asarray(rows), count=len(data))
+
+
+def rows_multiset(t):
+    return sorted(tuple(int(x) for x in r) for r in t.numpy())
+
+
+# --------------------- sort-order propagation ------------------------- #
+def test_sorted_join_tags_output_order():
+    rng = np.random.default_rng(0)
+    a = mk_table((0, 1), rng.integers(0, 40, (400, 2)))
+    b = mk_table((1, 2), rng.integers(0, 40, (300, 2)))
+    t = join_tables(a, b, impl="sorted")
+    assert t.sort_order == (1,)
+    vals = t.numpy()[:, t.cols.index(1)]
+    assert (np.diff(vals) >= 0).all()       # really ordered by the key
+
+
+def test_is_sorted_by_prefix_semantics():
+    t = mk_table((3, 5), np.zeros((4, 2)))
+    t.sort_order = (5, 3)
+    assert t.is_sorted_by((5,))
+    assert t.is_sorted_by((5, 3))
+    assert not t.is_sorted_by((3,))
+    assert not t.is_sorted_by((5, 3, 7))
+
+
+def test_filter_and_cross_preserve_order():
+    rng = np.random.default_rng(1)
+    a = mk_table((0, 1), rng.integers(0, 30, (300, 2)))
+    b = mk_table((1, 2), rng.integers(0, 30, (300, 2)))
+    t = join_tables(a, b, impl="sorted")
+    keep = np.zeros(t.cap, bool)
+    keep[: t.count] = rng.random(t.count) < 0.5
+    f = filter_rows(t, keep)
+    assert f.sort_order == t.sort_order
+    vals = f.numpy()[:, f.cols.index(1)]
+    assert (np.diff(vals) >= 0).all()
+    c = mk_table((7,), rng.integers(0, 5, (3, 1)))
+    x = cross_join(f, c)
+    assert x.sort_order == f.sort_order
+
+
+def test_single_node_table_is_sorted():
+    t = single_node_table(4, 10, 30, None)
+    assert t.sort_order == (4,)
+
+
+def test_chained_joins_avoid_resort():
+    """Joining a sorted-join output again on the same key must not re-sort
+    the carried side; cached runs make repeat joins sort-free."""
+    rng = np.random.default_rng(2)
+    a = mk_table((0, 1), rng.integers(0, 50, (500, 2)))
+    b = mk_table((1, 2), rng.integers(0, 50, (400, 2)))
+    c = mk_table((1, 3), rng.integers(0, 50, (300, 2)))
+    tel = JoinTelemetry()
+    t1 = join_tables(a, b, impl="sorted", telemetry=tel)
+    assert tel == JoinTelemetry(sorts_performed=2, sorts_avoided=0)
+    join_tables(t1, c, impl="sorted", telemetry=tel)
+    assert tel.sorts_avoided == 1           # t1 arrived ordered by (1,)
+    # a, b and c now hold cached runs for key (1,): repeating both joins
+    # performs zero new sorts
+    before = tel.sorts_performed
+    join_tables(a, b, impl="sorted", telemetry=tel)
+    join_tables(t1, c, impl="sorted", telemetry=tel)
+    assert tel.sorts_performed == before
+    assert tel.sorts_avoided == 5
+    # parity with fresh tables (no caches)
+    fresh = join_tables(mk_table((0, 1), a.numpy()),
+                        mk_table((1, 2), b.numpy()), impl="sorted")
+    assert rows_multiset(fresh) == rows_multiset(t1)
+
+
+def test_multi_col_key_order_permutes_to_reuse_run():
+    """A table sorted by (1, 0) joined on shared cols {0, 1} should flip
+    the key order to (1, 0) and skip its sort."""
+    rng = np.random.default_rng(3)
+    a = mk_table((0, 1), rng.integers(0, 6, (400, 2)))
+    d = mk_table((1, 0), rng.integers(0, 6, (300, 2)))
+    tel = JoinTelemetry()
+    x1 = join_tables(a, d, impl="sorted", telemetry=tel)
+    assert tel.sorts_performed == 2
+    # both sides now carry cached runs for the chosen key order
+    x2 = join_tables(a, d, impl="sorted", telemetry=tel)
+    assert tel.sorts_performed == 2 and tel.sorts_avoided == 2
+    assert rows_multiset(x1) == rows_multiset(x2)
+
+
+def test_overflow_resume_skips_rework():
+    """planned_join's exact-size retry must reuse the first attempt's
+    sort+probe (carried on CapacityOverflow.resume): same result, no
+    additional sorts."""
+    a = mk_table((0,), np.zeros((400, 1)))
+    b = mk_table((0, 1), np.column_stack([np.zeros(400), np.arange(400)]))
+    tel = JoinTelemetry()
+    out = planned_join(a, b, est=10, impl="sorted", telemetry=tel)
+    assert out.count == 160_000
+    assert tel.sorts_performed == 2         # retry performed zero sorts
+    err = None
+    try:
+        join_tables(mk_table((0,), np.zeros((300, 1))),
+                    mk_table((0, 1), np.column_stack(
+                        [np.zeros(300), np.arange(300)])),
+                    impl="sorted", cap=64)
+    except CapacityOverflow as e:
+        err = e
+    assert err is not None and err.resume is not None
+    assert err.needed == 90_000
+
+
+def test_cross_expand_xla_remainder_regression():
+    """The seed's `t % bc` index math miscompiled under XLA CPU at some
+    shape combinations (every output row gathered b-row 0).  Pin the
+    failing shapes: |A|=10 cap 16, |B|=200 cap 256."""
+    a = mk_table((0, 1), np.column_stack([np.arange(10),
+                                          100 + np.arange(10)]))
+    b_dat = np.column_stack([200 + np.arange(200), 400 + np.arange(200),
+                             600 + np.arange(200), 800 + np.arange(200)])
+    b = mk_table((2, 3, 4, 5), b_dat)
+    out = cross_join(a, b)
+    assert out.count == 2000
+    arr = out.numpy()
+    assert len({tuple(r) for r in arr}) == 2000
+    # spot-check the exact pairing semantics (a-major)
+    np.testing.assert_array_equal(arr[1], [0, 100, 201, 401, 601, 801])
+    np.testing.assert_array_equal(arr[201], [1, 101, 201, 401, 601, 801])
+
+
+# ----------------------- canonical result sets ------------------------ #
+def test_result_set_canonical_across_join_orders():
+    """a JOIN b and b JOIN a produce permuted column layouts; result_set
+    must canonicalize so both compare equal (regression: it used raw row
+    order before)."""
+    rng = np.random.default_rng(4)
+    a = mk_table((0, 1), rng.integers(0, 10, (60, 2)))
+    b = mk_table((1, 2), rng.integers(0, 10, (50, 2)))
+    ab = join_tables(a, b)
+    ba = join_tables(b, a)
+    assert ab.cols != ba.cols
+    assert ab.result_set() == ba.result_set()
+
+
+# ------------------------- cost-based plans --------------------------- #
+def test_plan_table_joins_is_permutation_and_never_worse():
+    rng = np.random.default_rng(5)
+    for trial in range(6):
+        n = int(rng.integers(2, 6))
+        node_sets = []
+        for i in range(n):                      # chain-ish overlap
+            node_sets.append({i, i + 1, int(rng.integers(0, n + 1))})
+        counts = [int(rng.integers(1, 10_000)) for _ in range(n)]
+        cand = {q: int(rng.integers(1, 500)) for q in range(n + 2)}
+        est = JoinEstimator(None, cand)
+        plan = plan_table_joins(node_sets, counts, est, nested_max=256)
+        assert sorted(plan.order) == list(range(n))
+        assert plan.est_cost <= plan.greedy_cost + 1e-6
+        # DP result is no worse than random sampled orders
+        for _ in range(5):
+            perm = list(rng.permutation(n))
+            c, _steps = simulate_join_order(perm, node_sets, counts, est,
+                                            256)
+            assert plan.est_cost <= c + 1e-6
+
+
+def test_plan_table_joins_beats_greedy_on_skew():
+    """Small-table-first (the seed heuristic) explodes when the small
+    table joins through a low-V(key) node; the DP must route around it."""
+    node_sets = [{0, 1}, {1, 2}, {2, 3}]
+    counts = [500, 1000, 1000]
+    est = JoinEstimator(None, {0: 100, 1: 1, 2: 1000, 3: 100})
+    greedy = [0, 1, 2]                       # smallest-count-first
+    plan = plan_table_joins(node_sets, counts, est, nested_max=16,
+                            greedy_order=greedy)
+    assert plan.est_cost < plan.greedy_cost
+    assert plan.order[0] != 0                # starts with the cheap pair
+    assert all(s.est_rows >= 0 for s in plan.steps)
+
+
+def test_plan_models_sort_reuse():
+    """With identical cardinalities, an order that can reuse a side's
+    existing sort order must cost less."""
+    node_sets = [{0, 1}, {1, 2}]
+    counts = [5000, 5000]
+    est = JoinEstimator(None, {0: 10, 1: 10, 2: 10})
+    c_sorted, _ = simulate_join_order([0, 1], node_sets, counts, est, 256,
+                                      sort_orders=[(1,), (1,)])
+    c_unsorted, _ = simulate_join_order([0, 1], node_sets, counts, est, 256,
+                                        sort_orders=[None, None])
+    assert c_sorted < c_unsorted
+    assert _reusable((1, 0), (0, 1)) and not _reusable((0,), (0, 1))
+
+
+def test_plan_connections_orders_by_selectivity():
+    """Greedy smallest-product first is wrong when a bigger product has a
+    far more selective connection; the planner must reorder."""
+    sizes = [10, 1000, 1000]
+    endpoints = [(0, 1), (1, 2)]
+    sels = [0.9, 1e-4]
+    plan = plan_connections(sizes, endpoints, sels)
+    assert sorted(plan.order) == [0, 1]
+    assert plan.order == [1, 0]
+    assert plan.est_cost < plan.greedy_cost
+
+
+def test_plan_connections_single_edge_trivial():
+    plan = plan_connections([5, 7], [(0, 1)], [0.5])
+    assert plan.order == [0]
+    assert plan.est_cost == plan.greedy_cost
+
+
+# ----------------------- engine integration --------------------------- #
+def test_engine_sorts_avoided_on_multi_join_template():
+    g = DATASETS["lubm"](scale=0.03, seed=1)
+    eng = make_engine(g, "stwig+", impl="ref")
+    eng.cfg.join_impl = "sorted"            # all joins on the merge path
+    r = eng.execute(random_query(g, size=6, seed=31))
+    assert r.stats.sorts_performed > 0
+    assert r.stats.sorts_avoided > 0
+    assert r.stats.plan_mode == "cost"
+
+
+def test_engine_plan_modes_identical_results():
+    g = DATASETS["lubm"](scale=0.03, seed=1)
+    q = random_query(g, size=6, seed=7)
+    rs = {}
+    for pm in ("cost", "greedy"):
+        eng = make_engine(g, "stwig+", impl="ref")
+        eng.cfg.plan_mode = pm
+        r = eng.execute(q)
+        rs[pm] = r.result_set()
+        assert r.stats.plan_mode == pm
+    assert rs["cost"] == rs["greedy"]
+
+
+def test_engine_plan_modes_identical_with_connections():
+    for seed in range(3):
+        g = random_graph(n_nodes=70, n_edges=220, n_preds=3,
+                         n_literals=18, seed=seed)
+        q = random_query(g, size=5, seed=seed + 1, n_connection=2, d_c=3)
+        rs = []
+        for pm in ("cost", "greedy"):
+            eng = make_engine(g, "h2", impl="ref")
+            eng.cfg.plan_mode = pm
+            rs.append(eng.execute(q).result_set())
+        assert rs[0] == rs[1], seed
+
+
+def test_engine_records_plan_costs():
+    g = DATASETS["lubm"](scale=0.03, seed=1)
+    eng = make_engine(g, "stwig+", impl="ref")
+    r = eng.execute(random_query(g, size=6, seed=7))
+    qs = r.stats
+    assert qs.plan_cost >= 0.0
+    assert qs.greedy_plan_cost >= qs.plan_cost - 1e-6
