@@ -1,0 +1,167 @@
+"""Connection-edge micro-benchmark: reach-join vs cross+filter.
+
+Sweeps one connection edge between two candidate tables over table sizes,
+distinct-endpoint ratios, and distance constraints d_c (including
+d_c > d_max, the exact-BFS fallback regime).  The baseline is the seed
+cross-product + per-pair connectivity_mask path; the contender is the
+device-resident reach-join (distinct endpoints -> reach-set pair tables ->
+one sort-merge join on reach_id -> output-bounded equi-joins).
+
+Result-set identity is asserted at every point where both impls run —
+including the flagship 1e4x1e4-row edge with 1e3 distinct endpoints per
+side — and across the engine-level connection_impl x plan_mode grid.
+Emits BENCH_conn.json.
+
+REPRO_BENCH_CONN_SMOKE=1 restricts to CI-sized tables (no flagship).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (build_ni_index, connectivity_mask, cross_join,
+                        filter_rows, make_engine, reach_join, ReachCache,
+                        ReachJoinInfo)
+from repro.core.matching import Table, _pow2
+from repro.data import random_graph, random_query
+
+REPEATS = 3
+CROSS_MAX_PAIRS = 1_200_000     # repeat-timed cross baseline up to here
+SMOKE = bool(int(os.environ.get("REPRO_BENCH_CONN_SMOKE", "0")))
+# (rows per side, distinct endpoints per side)
+POINTS = ([(1_000, 100), (1_000, 1_000)] if SMOKE else
+          [(1_000, 100), (1_000, 1_000), (10_000, 100), (10_000, 10_000)])
+DCS = (2, 5)                    # covered by d_max=2 / BFS-fallback regime
+FLAGSHIP = (10_000, 1_000, 2)   # rows, distinct, d_c — acceptance point
+
+
+def _mk(col, vals):
+    vals = np.asarray(vals, np.int32)
+    rows = np.full((_pow2(len(vals)), 1), -1, np.int32)
+    rows[: len(vals), 0] = vals
+    return Table(cols=(col,), rows=jnp.asarray(rows), count=len(vals))
+
+
+def _time(fn, repeats=REPEATS, warm=True):
+    """(best us, last output).  warm=False skips the warm-up call — used
+    for the minutes-slow flagship cross baseline so it executes exactly
+    once (jit compile time is noise at that scale)."""
+    if warm:
+        fn()                                    # warm: jit + first shapes
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        out.rows.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out                      # us
+
+
+def _cross_filter(g, ni, ta, tb, d_c):
+    x = cross_join(ta, tb)
+    rows = np.asarray(x.rows[: x.count])
+    keep = connectivity_mask(g, ni, rows[:, 0], rows[:, 1], d_c)
+    return filter_rows(x, keep)
+
+
+def _sweep_point(g, ni, rng, rows, distinct, d_c, run_cross, repeats):
+    pa = rng.choice(g.num_nodes, distinct, replace=False)
+    pb = rng.choice(g.num_nodes, distinct, replace=False)
+    ta = _mk(0, rng.choice(pa, rows))
+    tb = _mk(1, rng.choice(pb, rows))
+    cell = {}
+
+    def run_reach():
+        info = ReachJoinInfo()                  # fresh per call: the info
+        out = reach_join(g, ni, ta, tb, 0, 1, d_c,  # fields accumulate
+                         cache=ReachCache(), info=info)
+        cell["info"] = info
+        return out
+    reach_us, out = _time(run_reach, repeats)
+    info = cell["info"]
+    rec = {"rows": rows, "distinct": distinct, "d_c": d_c,
+           "reach_us": reach_us, "cross_us": None, "speedup": None,
+           "matches": out.count, "reach_pairs": info.reach_pairs,
+           "connected_pairs": info.connected_pairs,
+           "peak_cap": info.peak_cap, "identity": None}
+    if run_cross:
+        # the timed run's output doubles as the identity oracle; no
+        # warm-up when repeats == 1 so the flagship baseline runs once
+        cross_us, want = _time(lambda: _cross_filter(g, ni, ta, tb, d_c),
+                               repeats, warm=repeats > 1)
+        rec["identity"] = out.result_set() == want.result_set()
+        assert rec["identity"], f"result mismatch at {rows}x{distinct}"
+        rec["cross_us"] = cross_us
+        rec["speedup"] = cross_us / reach_us
+    return rec
+
+
+def _engine_identity_grid():
+    """connection_impl x plan_mode grid on a query with connection edges:
+    identical result sets across all four configurations."""
+    g = random_graph(n_nodes=400, n_edges=1400, n_preds=3, seed=77)
+    q = random_query(g, size=5, seed=5, n_connection=2, d_c=3)
+    results = {}
+    for ci in ("reach", "cross"):
+        for pm in ("cost", "greedy"):
+            eng = make_engine(g, "h2")
+            eng.cfg.connection_impl = ci
+            eng.cfg.plan_mode = pm
+            results[f"{ci}/{pm}"] = eng.execute(q).result_set()
+    vals = list(results.values())
+    ok = all(v == vals[0] for v in vals)
+    assert ok, "engine connection_impl x plan_mode results diverge"
+    return ok, len(vals[0])
+
+
+def run():
+    n_nodes = 4_000 if SMOKE else 20_000
+    g = random_graph(n_nodes=n_nodes, n_edges=2 * n_nodes, n_preds=2,
+                     seed=42)
+    ni = build_ni_index(g, d_max=2)
+    rng = np.random.default_rng(0)
+    results = {"graph": {"nodes": g.num_nodes, "edges": g.num_edges,
+                         "d_max": ni.d_max},
+               "smoke": SMOKE, "sweep": [], "flagship": None}
+
+    for rows, distinct in POINTS:
+        for d_c in DCS:
+            run_cross = rows * rows <= CROSS_MAX_PAIRS
+            rec = _sweep_point(g, ni, rng, rows, distinct, d_c,
+                               run_cross, REPEATS)
+            results["sweep"].append(rec)
+            tag = f"conn.reach.{rows}x{distinct}.d{d_c}"
+            if rec["speedup"] is not None:
+                yield (tag, rec["reach_us"],
+                       f"speedup={rec['speedup']:.1f}x")
+            else:
+                yield (tag, rec["reach_us"], f"matches={rec['matches']}")
+
+    if not SMOKE:
+        # acceptance point: 1e4x1e4-row edge, 1e3 distinct per side; the
+        # cross baseline materializes the 1e8-pair product and filters it
+        # with the per-pair host loop — timed once (it is minutes-slow)
+        rows, distinct, d_c = FLAGSHIP
+        rec = _sweep_point(g, ni, rng, rows, distinct, d_c,
+                           run_cross=True, repeats=1)
+        results["flagship"] = rec
+        yield (f"conn.flagship.{rows}x{distinct}.d{d_c}", rec["reach_us"],
+               f"speedup={rec['speedup']:.1f}x")
+
+    ok, n = _engine_identity_grid()
+    results["engine_identity"] = {"ok": ok, "matches": n}
+    yield ("conn.engine_identity", 0.0, f"ok={ok} matches={n}")
+
+    out_path = os.environ.get("REPRO_BENCH_CONN_JSON", "BENCH_conn.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

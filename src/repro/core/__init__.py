@@ -7,16 +7,19 @@ from .decompose import DTree, decompose, join_order
 from .matching import Table, CandidateTable, SortedRun, JoinTelemetry, \
     join_tables, cross_join, edge_pairs, \
     dtree_candidates, CapacityOverflow, resolve_join_impl, filter_rows, \
-    injective_filter
+    injective_filter, dedup_project, empty_table
 from .connectivity import (connectivity_mask, reach_sets,
     connectivity_mask_vectorized, enumerate_shortest_paths,
-    instantiate_connections)
+    instantiate_connections, ReachCache, ReachJoinInfo, reach_pairs,
+    connected_pair_table, reach_join, reach_filter,
+    distinct_column_values, REACH_ID_COL)
 from .stats import DatasetStats, compute_stats, predicate_selectivity, \
     literal_selectivity, coherence, relationship_specialty, \
-    literal_diversity, connection_selectivity
+    literal_diversity, connection_selectivity, expected_reach
 from .planner import Thresholds, PlanDecision, decide, \
     neighborhood_selectivity, tune_thresholds, JoinEstimator, \
     JoinPlan, PlannedStep, plan_table_joins, simulate_join_order, \
-    ConnectionPlan, plan_connections
+    ConnectionPlan, plan_connections, ConnFeatures, \
+    connection_edge_cost, choose_connection_impl
 from .engine import Engine, EngineConfig, MatchResult, make_engine
 from .distributed import shard_check, gather_candidates

@@ -13,8 +13,27 @@ entries — this is exactly the expensive path the paper measures in §6.3
 Exactness: unlike the neighborhood *check*, connectivity decides final
 results, so truncation cannot be tolerated — any overflowed row falls back
 to an exact host-side BFS.
+
+Two evaluation forms for a connection edge over candidate tables A, B:
+
+  * cross+filter (the seed path): materialize A x B, then decide each pair
+    with per-pair reach-set intersections (`connectivity_mask`) —
+    O(|A|*|B|) in both work and peak memory.
+  * reach-join (`reach_join` / `reach_filter`): extract the *distinct*
+    endpoint nodes of each side (typically << row count), gather their
+    exact reach sets once into flat (node, reach_id) pair tables, compute
+    connected (a, b) endpoint pairs with ONE sort-merge join on reach_id
+    (reusing the merge-probe machinery of matching.py), and equi-join the
+    deduplicated pair table back against A and B — output work O(matches),
+    no intermediate proportional to |A|*|B|.
+
+Both are exact: reach gathering falls back to per-node BFS for NI-overflow
+nodes and for hops beyond the index's d_max.  A `ReachCache` (engine-owned,
+per query) memoizes reach sets across connection edges sharing endpoints.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass, field
 
 import numpy as np
 import jax
@@ -22,7 +41,23 @@ import jax.numpy as jnp
 
 from .graph import RDFGraph
 from .ni_index import NIIndex
+from .matching import (Table, DEFAULT_NESTED_MAX, join_tables, planned_join,
+                       dedup_project, empty_table, filter_rows, _pow2)
 from ..kernels import ops
+
+
+# Synthetic column id for the reach-id column of (node, reach_id) pair
+# tables — must never collide with a query-node id (those are >= 0).
+REACH_ID_COL = -2
+
+
+def hop_split(d_c: int) -> tuple[int, int]:
+    """Algorithm 3's split of a distance constraint: forward reach within
+    ceil(d_c/2) hops must intersect backward reach within the remainder.
+    The single source of the split — execution (mask + reach-join), the
+    cost model, and the selectivity estimate must all agree on it."""
+    h_fwd = -(-d_c // 2)
+    return h_fwd, d_c - h_fwd
 
 
 def _gather_reach(ni: NIIndex, nodes: np.ndarray, hops: int, sign: int):
@@ -106,61 +141,96 @@ def _bfs_within(graph: RDFGraph, start: int, hops: int, forward: bool) -> set:
     return seen
 
 
+@dataclass
+class ReachCache:
+    """Per-query memo of exact reach sets, keyed (node, hops, sign).
+
+    Engine-owned and shared across every connection edge of one query, so
+    edges with common endpoints never recompute a reach set — the caches
+    `connectivity_mask` used to rebuild per call, hoisted.  Two mirrored
+    stores (python sets for per-pair intersections, np arrays for the
+    reach-join pair tables) convert lazily between each other."""
+    sets: dict = field(default_factory=dict)
+    arrays: dict = field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    def get_set(self, node: int, hops: int, sign: int) -> set | None:
+        key = (node, hops, sign)
+        s = self.sets.get(key)
+        if s is None and key in self.arrays:
+            s = self.sets[key] = set(int(x) for x in self.arrays[key])
+        self.hits += s is not None
+        self.misses += s is None
+        return s
+
+    def put_set(self, node: int, hops: int, sign: int, s: set) -> None:
+        self.sets[(node, hops, sign)] = s
+
+    def get_array(self, node: int, hops: int, sign: int) -> np.ndarray | None:
+        key = (node, hops, sign)
+        a = self.arrays.get(key)
+        if a is None and key in self.sets:
+            s = self.sets[key]
+            a = self.arrays[key] = np.fromiter(s, np.int32, len(s))
+        self.hits += a is not None
+        self.misses += a is None
+        return a
+
+    def put_array(self, node: int, hops: int, sign: int,
+                  arr: np.ndarray) -> None:
+        self.arrays[(node, hops, sign)] = arr
+
+
+def _exact_reach(graph: RDFGraph, ni: NIIndex, node: int, hops: int,
+                 sign: int, cache: ReachCache | None = None) -> set:
+    """Exact reach set of one node: pure index reads when the NI index
+    covers `hops` and the node's entries did not overflow (the paper's
+    fast case), else exact BFS (the expensive case §6.3 measures)."""
+    if cache is not None:
+        s = cache.get_set(node, hops, sign)
+        if s is not None:
+            return s
+    s = None
+    if hops <= ni.d_max:
+        s = {node}
+        for d in range(1, hops + 1):
+            e = ni.entries[sign * d]
+            if e.overflow[node]:
+                s = None
+                break
+            row = e.ids[node]
+            s.update(int(x) for x in row[row >= 0])
+    if s is None:
+        s = _bfs_within(graph, node, hops, sign > 0)
+    if cache is not None:
+        cache.put_set(node, hops, sign, s)
+    return s
+
+
 def connectivity_mask(graph: RDFGraph, ni: NIIndex,
                       a_nodes: np.ndarray, b_nodes: np.ndarray,
                       d_c: int, bidirectional: bool = False,
-                      *, impl: str = "auto", chunk: int = 1024) -> np.ndarray:
+                      *, impl: str = "auto", chunk: int = 1024,
+                      cache: ReachCache | None = None) -> np.ndarray:
     """Exact mask[i] = exists directed path a->b (or b->a if bidirectional)
-    of length <= d_c."""
+    of length <= d_c.
+
+    Per-pair decision over memoized exact reach sets (`cache`; a local one
+    is created when the caller does not pass an engine-owned cache).  Index
+    reads where the NI index covers the hop split, per-node BFS beyond."""
     p = len(a_nodes)
     out = np.zeros(p, dtype=bool)
-    h_fwd = -(-d_c // 2)            # ceil
-    h_bwd = d_c - h_fwd
-    if max(h_fwd, h_bwd) > ni.d_max:
-        # Index does not cover the needed hops (the paper's expensive
-        # case, §6.3).  On CPU the exact per-node BFS (memoized across
-        # pairs) beats the dense frontier expansion, which exists for the
-        # TPU-target path; cost is still dominated by traversal — exactly
-        # the effect the paper measures.
-        fwd_memo: dict[int, set] = {}
-        bwd_memo: dict[int, set] = {}
-        for i in range(p):
-            ai, bi = int(a_nodes[i]), int(b_nodes[i])
-            if ai not in fwd_memo:
-                fwd_memo[ai] = _bfs_within(graph, ai, h_fwd, True)
-            if bi not in bwd_memo:
-                bwd_memo[bi] = _bfs_within(graph, bi, h_bwd, False)
-            out[i] = bool(fwd_memo[ai] & bwd_memo[bi])
-        if bidirectional:
-            out |= connectivity_mask(graph, ni, b_nodes, a_nodes, d_c,
-                                     False, impl=impl, chunk=chunk)
-        return out
-
-    # Index covers the hops: reach sets are pure INDEX READS (no graph
-    # traversal) — the paper's fast case.  Memoized per node across pairs.
-    def reach_from_index(n: int, hops: int, sign: int) -> set:
-        s = {n}
-        for d in range(1, hops + 1):
-            e = ni.entries[sign * d]
-            if e.overflow[n]:
-                return _bfs_within(graph, n, hops, sign > 0)
-            row = e.ids[n]
-            s.update(int(x) for x in row[row >= 0])
-        return s
-
-    fwd_memo: dict[int, set] = {}
-    bwd_memo: dict[int, set] = {}
+    h_fwd, h_bwd = hop_split(d_c)
+    if cache is None:
+        cache = ReachCache()
     for i in range(p):
-        ai, bi = int(a_nodes[i]), int(b_nodes[i])
-        if ai not in fwd_memo:
-            fwd_memo[ai] = reach_from_index(ai, h_fwd, +1)
-        if bi not in bwd_memo:
-            bwd_memo[bi] = reach_from_index(bi, h_bwd, -1)
-        out[i] = bool(fwd_memo[ai] & bwd_memo[bi])
+        fs = _exact_reach(graph, ni, int(a_nodes[i]), h_fwd, +1, cache)
+        bs = _exact_reach(graph, ni, int(b_nodes[i]), h_bwd, -1, cache)
+        out[i] = not fs.isdisjoint(bs)
     if bidirectional:
-        rev = connectivity_mask(graph, ni, b_nodes, a_nodes, d_c,
-                                False, impl=impl, chunk=chunk)
-        out |= rev
+        out |= connectivity_mask(graph, ni, b_nodes, a_nodes, d_c,
+                                 False, impl=impl, chunk=chunk, cache=cache)
     return out
 
 
@@ -179,8 +249,7 @@ def connectivity_mask_vectorized(graph: RDFGraph, ni: NIIndex,
         return fwd | rev
     p = len(a_nodes)
     out = np.zeros(p, dtype=bool)
-    h_fwd = -(-d_c // 2)
-    h_bwd = d_c - h_fwd
+    h_fwd, h_bwd = hop_split(d_c)
     for s in range(0, p, chunk):
         e = min(s + chunk, p)
         a, b = a_nodes[s:e], b_nodes[s:e]
@@ -193,6 +262,227 @@ def connectivity_mask_vectorized(graph: RDFGraph, ni: NIIndex,
             bs = _bfs_within(graph, b[i], h_bwd, False)
             hit[i] = bool(fs & bs)
         out[s:e] = hit
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Reach-join: connection edges as set-at-a-time joins (no cross product).
+# ---------------------------------------------------------------------- #
+@dataclass
+class ReachJoinInfo:
+    """Execution telemetry of one reach-join / reach-filter (feeds
+    QueryStats.conn_* via the engine)."""
+    rows_a: int = 0                 # input table rows (side holding src)
+    rows_b: int = 0
+    distinct_a: int = 0             # distinct endpoint nodes per side
+    distinct_b: int = 0
+    reach_pairs: int = 0            # flat (node, reach_id) pairs gathered
+    connected_pairs: int = 0        # deduped connected endpoint pairs
+    peak_cap: int = 0               # largest intermediate table capacity
+
+
+def reach_pairs(graph: RDFGraph, ni: NIIndex, nodes: np.ndarray, hops: int,
+                sign: int, cap: int = 4096,
+                cache: ReachCache | None = None
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Exact flat (node, reach_id) pairs for the given distinct nodes.
+
+    Set-at-a-time NI gathers (`reach_sets`) where the index covers `hops`;
+    per-node exact BFS for overflow rows and for hops > d_max.  Returns
+    (pair_nodes [M], pair_reach [M]) int32 — every node contributes its
+    full reach set including itself (distance 0)."""
+    nodes = np.asarray(nodes)
+    if nodes.size == 0:
+        return np.empty(0, np.int32), np.empty(0, np.int32)
+    per_node: dict[int, np.ndarray] = {}
+    misses: list[int] = []
+    for v in nodes:
+        v = int(v)
+        arr = None if cache is None else cache.get_array(v, hops, sign)
+        if arr is not None:
+            per_node[v] = arr
+        else:
+            misses.append(v)
+    if misses:
+        ids = overflow = None
+        if hops <= ni.d_max:
+            ids, overflow = reach_sets(ni, np.asarray(misses), hops, sign,
+                                       cap=cap)
+        for i, v in enumerate(misses):
+            if ids is not None and not overflow[i]:
+                row = ids[i]
+                arr = row[row >= 0].astype(np.int32)
+            else:                       # NI overflow or hops > d_max
+                s = _bfs_within(graph, v, hops, sign > 0)
+                arr = np.fromiter(s, np.int32, len(s))
+            per_node[v] = arr
+            if cache is not None:
+                cache.put_array(v, hops, sign, arr)
+    arrs = [per_node[int(v)] for v in nodes]
+    counts = [a.shape[0] for a in arrs]
+    pair_nodes = np.repeat(nodes.astype(np.int32), counts)
+    pair_reach = (np.concatenate(arrs) if pair_nodes.size
+                  else np.empty(0, np.int32))
+    return pair_nodes, pair_reach
+
+
+def _pair_table(pair_reach: np.ndarray, pair_nodes: np.ndarray,
+                node_col: int) -> Table:
+    """(node, reach_id) pairs as a 2-column device table keyed by the
+    reach id.  Pre-sorted on host by reach id and tagged, so the
+    sort-merge join on REACH_ID_COL skips both device sorts."""
+    m = int(pair_reach.shape[0])
+    order = np.argsort(pair_reach, kind="stable")
+    rows = np.full((_pow2(m), 2), -1, np.int32)
+    rows[:m, 0] = pair_reach[order]
+    rows[:m, 1] = pair_nodes[order]
+    return Table(cols=(REACH_ID_COL, node_col), rows=jnp.asarray(rows),
+                 count=m, sort_order=(REACH_ID_COL,))
+
+
+def distinct_column_values(table: Table, col: int) -> np.ndarray:
+    """Sorted distinct valid values of one table column (host array —
+    these drive the host-side NI gathers)."""
+    if table.count == 0:
+        return np.empty(0, np.int32)
+    vals = np.asarray(table.rows[: table.count, table.cols.index(col)])
+    u = np.unique(vals)
+    return u[u >= 0].astype(np.int32)
+
+
+def _directed_pairs(graph: RDFGraph, ni: NIIndex, a_vals, b_vals,
+                    h_fwd: int, h_bwd: int, src_col: int, dst_col: int,
+                    cap: int, impl: str, probe_impl: str, nested_max: int,
+                    cache, telemetry, info: ReachJoinInfo) -> Table:
+    """Connected (a, b) pairs for one direction: fwd(a) x bwd(b) joined on
+    the shared reach id, deduplicated to distinct endpoint pairs."""
+    fn, fr = reach_pairs(graph, ni, a_vals, h_fwd, +1, cap=cap, cache=cache)
+    bn, br = reach_pairs(graph, ni, b_vals, h_bwd, -1, cap=cap, cache=cache)
+    info.reach_pairs += int(fn.shape[0] + bn.shape[0])
+    ta = _pair_table(fr, fn, src_col)
+    tb = _pair_table(br, bn, dst_col)
+    j = join_tables(ta, tb, impl=impl, nested_max=nested_max,
+                    probe_impl=probe_impl, telemetry=telemetry)
+    out = dedup_project(j, (src_col, dst_col))
+    info.peak_cap = max(info.peak_cap, ta.cap, tb.cap, j.cap, out.cap)
+    return out
+
+
+def connected_pair_table(graph: RDFGraph, ni: NIIndex,
+                         a_vals: np.ndarray, b_vals: np.ndarray,
+                         d_c: int, bidirectional: bool,
+                         cols: tuple[int, int], *, cap: int = 4096,
+                         impl: str = "auto", probe_impl: str = "auto",
+                         nested_max: int = DEFAULT_NESTED_MAX,
+                         cache: ReachCache | None = None,
+                         telemetry=None,
+                         info: ReachJoinInfo | None = None) -> Table:
+    """Distinct (a, b) node pairs with a directed path a->b of length
+    <= d_c (plus b->a when bidirectional), as a 2-column table over
+    `cols` = (src_col, dst_col), sorted by it.
+
+    This is Alg. 3 evaluated set-at-a-time: one sort-merge join on the
+    shared reach id replaces the per-pair set intersections."""
+    info = info if info is not None else ReachJoinInfo()
+    src_col, dst_col = cols
+    h_fwd, h_bwd = hop_split(d_c)
+    cp = _directed_pairs(graph, ni, a_vals, b_vals, h_fwd, h_bwd,
+                         src_col, dst_col, cap, impl, probe_impl,
+                         nested_max, cache, telemetry, info)
+    if bidirectional:
+        rev = _directed_pairs(graph, ni, b_vals, a_vals, h_fwd, h_bwd,
+                              dst_col, src_col, cap, impl, probe_impl,
+                              nested_max, cache, telemetry, info)
+        # union: concat the padded buffers (valid rows need not form a
+        # prefix — dedup_project tolerates that) and re-dedup
+        perm = np.asarray([rev.cols.index(c) for c in cp.cols])
+        both = Table(cols=cp.cols,
+                     rows=jnp.concatenate([cp.rows, rev.rows[:, perm]]),
+                     count=cp.count + rev.count)
+        cp = dedup_project(both, cp.cols)
+        info.peak_cap = max(info.peak_cap, cp.cap)
+    info.connected_pairs = cp.count
+    return cp
+
+
+def reach_join(graph: RDFGraph, ni: NIIndex, ta: Table, tb: Table,
+               src_col: int, dst_col: int, d_c: int,
+               bidirectional: bool = False, *,
+               a_vals: np.ndarray | None = None,
+               b_vals: np.ndarray | None = None,
+               row_limit: int | None = None, cap: int = 4096,
+               impl: str = "auto", nested_max: int = DEFAULT_NESTED_MAX,
+               probe_impl: str = "auto", cache: ReachCache | None = None,
+               telemetry=None, record=None,
+               info: ReachJoinInfo | None = None) -> Table:
+    """Join tables `ta` and `tb` on the connection constraint
+    dist(ta.src_col -> tb.dst_col) <= d_c, WITHOUT materializing the
+    cross product: equivalent to
+    filter(cross_join(ta, tb), connectivity_mask) but with output work
+    O(matches) and peak intermediate capacity bounded by the match count
+    (plus the pair tables), never by |A|*|B|."""
+    info = info if info is not None else ReachJoinInfo()
+    info.rows_a, info.rows_b = ta.count, tb.count
+    if ta.count == 0 or tb.count == 0:
+        return empty_table(ta.cols + tb.cols)
+    if a_vals is None:
+        a_vals = distinct_column_values(ta, src_col)
+    if b_vals is None:
+        b_vals = distinct_column_values(tb, dst_col)
+    info.distinct_a, info.distinct_b = len(a_vals), len(b_vals)
+    cp = connected_pair_table(graph, ni, a_vals, b_vals, d_c, bidirectional,
+                              (src_col, dst_col), cap=cap, impl=impl,
+                              probe_impl=probe_impl, nested_max=nested_max,
+                              cache=cache, telemetry=telemetry, info=info)
+    # A |x| pairs on src_col, then |x| B on dst_col: both sized exactly
+    # (no estimate: counts are known after each probe, so planned_join
+    # allocates the exact pow2 capacity).
+    t1 = planned_join(ta, cp, None, row_limit=row_limit, impl=impl,
+                      nested_max=nested_max, probe_impl=probe_impl,
+                      record=record, telemetry=telemetry)
+    out = planned_join(t1, tb, None, row_limit=row_limit, impl=impl,
+                       nested_max=nested_max, probe_impl=probe_impl,
+                       record=record, telemetry=telemetry)
+    out.truncated |= t1.truncated
+    info.peak_cap = max(info.peak_cap, t1.cap, out.cap)
+    return out
+
+
+def reach_filter(graph: RDFGraph, ni: NIIndex, table: Table,
+                 src_col: int, dst_col: int, d_c: int,
+                 bidirectional: bool = False, *,
+                 a_vals: np.ndarray | None = None,
+                 b_vals: np.ndarray | None = None, cap: int = 4096,
+                 impl: str = "auto", nested_max: int = DEFAULT_NESTED_MAX,
+                 probe_impl: str = "auto", cache: ReachCache | None = None,
+                 telemetry=None, record=None,
+                 info: ReachJoinInfo | None = None) -> Table:
+    """Intra-table connection filter as a reach-SEMI-join: keep rows whose
+    (src_col, dst_col) values appear in the connected-pair table.
+    Equivalent to filter_rows(table, connectivity_mask(...)) without the
+    per-row host loop."""
+    info = info if info is not None else ReachJoinInfo()
+    info.rows_a = info.rows_b = table.count
+    if table.count == 0:
+        return table
+    if a_vals is None:
+        a_vals = distinct_column_values(table, src_col)
+    if b_vals is None:
+        b_vals = distinct_column_values(table, dst_col)
+    info.distinct_a, info.distinct_b = len(a_vals), len(b_vals)
+    cp = connected_pair_table(graph, ni, a_vals, b_vals, d_c, bidirectional,
+                              (src_col, dst_col), cap=cap, impl=impl,
+                              probe_impl=probe_impl, nested_max=nested_max,
+                              cache=cache, telemetry=telemetry, info=info)
+    if cp.count == 0:
+        return filter_rows(table, np.zeros(table.count, bool), kept=0)
+    # shared cols = both endpoint cols, no new cols: the equi-join IS the
+    # semi-join (cp rows are distinct, so each table row matches at most
+    # one pair).
+    out = planned_join(table, cp, None, impl=impl, nested_max=nested_max,
+                       probe_impl=probe_impl, record=record,
+                       telemetry=telemetry)
+    info.peak_cap = max(info.peak_cap, out.cap)
     return out
 
 

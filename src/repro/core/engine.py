@@ -35,10 +35,14 @@ from .matching import (Table, CapacityOverflow, dtree_candidates,
                        cross_join, single_node_table, filter_rows,
                        injective_filter, planned_join, _pow2,
                        JoinTelemetry)
-from .connectivity import connectivity_mask
+from .connectivity import (connectivity_mask, reach_join, reach_filter,
+                           ReachCache, ReachJoinInfo,
+                           distinct_column_values, hop_split)
 from .planner import (Thresholds, PlanDecision, decide, JoinEstimator,
-                      plan_table_joins, plan_connections)
-from .stats import DatasetStats, compute_stats, connection_selectivity
+                      plan_table_joins, plan_connections, ConnFeatures,
+                      choose_connection_impl)
+from .stats import (DatasetStats, compute_stats, connection_selectivity,
+                    expected_reach)
 
 
 @dataclass
@@ -52,6 +56,12 @@ class EngineConfig:
     use_bloom: bool = False          # gStore-style 1-hop bitstring prefilter
     join_impl: str = "auto"          # auto (planner per-join) | sorted | nested
     plan_mode: str = "cost"          # whole-query join order: cost | greedy
+    # connection-edge strategy: 'reach' = device-resident reach-join
+    # (distinct endpoints -> reach-set pair tables -> one sort-merge join
+    # on reach_id -> equi-joins back; O(matches) output work), 'cross' =
+    # the seed cross-product + per-pair connectivity_mask filter
+    # (O(|A|*|B|), kept for A/B), 'auto' = per-edge cost-model choice.
+    connection_impl: str = "auto"    # auto | reach | cross
 
 
 @dataclass
@@ -80,6 +90,12 @@ class QueryStats:
     sorts_avoided: int = 0              # skipped via sort-order/cached runs
     plan_cost: float = 0.0              # Σ est cost of executed join plans
     greedy_plan_cost: float = 0.0       # same cost model, greedy order
+    # connection-edge telemetry (reach-join subsystem)
+    conn_strategies: dict = field(default_factory=dict)  # impl -> #edges
+    conn_reach_pairs: int = 0           # Σ (node, reach_id) pairs gathered
+    conn_connected_pairs: int = 0       # Σ deduped connected endpoint pairs
+    conn_endpoint_rows: int = 0         # Σ endpoint-column rows seen
+    conn_endpoint_distinct: int = 0     # Σ distinct endpoint nodes seen
 
 
 @dataclass
@@ -135,15 +151,20 @@ class Engine:
         qs.used_check = use_check
 
         # ---- candidate masks ------------------------------------------
+        # With the check on, each node gets a [N] bool mask.  Without it
+        # the candidate set IS the IDMap interval — represented as a
+        # (lo, hi) pair instead of materializing an all-true [N] mask per
+        # query node (edge_pairs and single_node_table consume both
+        # forms), so the wildcard path allocates nothing per node.
         t1 = time.perf_counter()
-        pass_masks: dict[int, jnp.ndarray] = {}
-        pass_np: dict[int, np.ndarray] = {}
+        pass_masks: dict[int, object] = {}
+        pass_np: dict[int, np.ndarray | None] = {}
         after = 0
         for comp in comps:
             for q in comp:
                 lo, hi = int(iv[q, 0]), int(iv[q, 1])
-                mask = np.zeros(n, dtype=bool)
                 if use_check:
+                    mask = np.zeros(n, dtype=bool)
                     reqs = build_requirements(query, comp, q,
                                               min(cfg.d_check, self.ni.d_max), iv)
                     ok = np.ones(hi - lo, dtype=bool)
@@ -160,11 +181,13 @@ class Engine:
                             impl=cfg.impl, chunk=cfg.chunk,
                             device_cache=self._dev_cache)
                     mask[lo:hi] = ok
+                    pass_np[q] = mask
+                    pass_masks[q] = jnp.asarray(mask)
+                    after += int(mask.sum())
                 else:
-                    mask[lo:hi] = True
-                pass_np[q] = mask
-                pass_masks[q] = jnp.asarray(mask)
-                after += int(mask.sum())
+                    pass_np[q] = None
+                    pass_masks[q] = (jnp.int32(lo), jnp.int32(hi))
+                    after += hi - lo
         qs.candidates_after = after
         qs.check_time = time.perf_counter() - t1
 
@@ -235,7 +258,8 @@ class Engine:
 
         # ---- connection edges ------------------------------------------
         t3 = time.perf_counter()
-        final = self._process_connections(query, comps, comp_tables, qs)
+        final = self._process_connections(query, comps, comp_tables, qs,
+                                          record_join, tel)
         qs.conn_time = time.perf_counter() - t3
         qs.sorts_performed = tel.sorts_performed
         qs.sorts_avoided = tel.sorts_avoided
@@ -278,19 +302,26 @@ class Engine:
 
     def _process_connections(self, query: QueryTemplate, comps,
                              comp_tables: list[Table],
-                             qs: QueryStats) -> Table:
+                             qs: QueryStats, record_join=None,
+                             tel: JoinTelemetry | None = None) -> Table:
         """Connection-edge evaluation (Alg. 3): intra filters first (linear
         in table size), then cross-component merges.  The merge order comes
-        from planner.plan_connections (cost-based over the estimated
-        cross-product work with connection-selectivity estimates) under
-        plan_mode='cost'; plan_mode='greedy' keeps the seed's dynamic
-        smallest-current-product rule as an A/B baseline."""
+        from planner.plan_connections (cost-based with per-edge
+        reach-vs-cross pricing) under plan_mode='cost'; plan_mode='greedy'
+        keeps the seed's dynamic smallest-current-product rule as an A/B
+        baseline.  Each edge is evaluated either by the reach-join (no
+        cross product, O(matches) output work) or the seed cross+filter
+        path, per EngineConfig.connection_impl / the cost model."""
         tables = list(comp_tables)
         owner = {}
         for i, comp in enumerate(comps):
             for q in comp:
                 owner[q] = i
         group = list(range(len(tables)))       # table index per original comp
+        # per-query reach cache: connection edges sharing endpoint nodes
+        # (or re-filtered after merges) reuse each other's reach sets
+        rcache = ReachCache()
+        n = self.graph.num_nodes
 
         def find(i):
             while group[i] != i:
@@ -298,16 +329,69 @@ class Engine:
                 i = group[i]
             return i
 
+        # distinct endpoint values per (group root, column): one
+        # device-to-host column sync + unique each, shared between the
+        # plan-time feature pass and execution, invalidated when a
+        # group's table is replaced (filter or merge)
+        dvals: dict[tuple[int, int], np.ndarray] = {}
+
+        def distinct_of(gi: int, col: int) -> np.ndarray:
+            key = (gi, col)
+            if key not in dvals:
+                dvals[key] = distinct_column_values(tables[gi], col)
+            return dvals[key]
+
+        def invalidate(*groups: int) -> None:
+            for k in [k for k in dvals if k[0] in groups]:
+                del dvals[k]
+
+        def conn_feat(d_a: int, d_b: int, c) -> ConnFeatures:
+            h_fwd, h_bwd = hop_split(c.max_dist)
+            return ConnFeatures(d_a, d_b,
+                                expected_reach(self.stats, n, h_fwd),
+                                expected_reach(self.stats, n, h_bwd))
+
+        def record_conn(impl: str, info: ReachJoinInfo) -> None:
+            qs.conn_strategies[impl] = qs.conn_strategies.get(impl, 0) + 1
+            qs.conn_reach_pairs += info.reach_pairs
+            qs.conn_connected_pairs += info.connected_pairs
+            qs.conn_endpoint_rows += info.rows_a + info.rows_b
+            qs.conn_endpoint_distinct += info.distinct_a + info.distinct_b
+
+        def sel_of(c) -> float:
+            return connection_selectivity(self.stats, n, c.max_dist,
+                                          c.bidirectional)
+
         def intra_filter(gi: int, c) -> None:
+            # no early-out on an empty table: both impls handle it, and
+            # conn_strategies must count every connection edge processed
             tab = tables[gi]
-            if tab.count == 0:
-                return
-            rows = np.asarray(tab.rows[: tab.count])
-            a = rows[:, tab.cols.index(c.src)]
-            b = rows[:, tab.cols.index(c.dst)]
-            keep = connectivity_mask(self.graph, self.ni, a, b, c.max_dist,
-                                     c.bidirectional, impl=self.cfg.impl)
-            tables[gi] = filter_rows(tab, keep)
+            a_vals = distinct_of(gi, c.src)
+            b_vals = distinct_of(gi, c.dst)
+            info = ReachJoinInfo(rows_a=tab.count, rows_b=tab.count,
+                                 distinct_a=len(a_vals),
+                                 distinct_b=len(b_vals))
+            impl = choose_connection_impl(
+                tab.count, tab.count, conn_feat(len(a_vals), len(b_vals), c),
+                sel_of(c), n, impl=self.cfg.connection_impl, intra=True)
+            if impl == "reach":
+                tables[gi] = reach_filter(
+                    self.graph, self.ni, tab, c.src, c.dst, c.max_dist,
+                    c.bidirectional, a_vals=a_vals, b_vals=b_vals,
+                    impl=self.cfg.join_impl,
+                    nested_max=self.cfg.thresholds.nested_join_max,
+                    probe_impl=self._probe_impl(), cache=rcache,
+                    telemetry=tel, record=record_join, info=info)
+            else:
+                rows = np.asarray(tab.rows[: tab.count])
+                a = rows[:, tab.cols.index(c.src)]
+                b = rows[:, tab.cols.index(c.dst)]
+                keep = connectivity_mask(self.graph, self.ni, a, b,
+                                         c.max_dist, c.bidirectional,
+                                         impl=self.cfg.impl, cache=rcache)
+                tables[gi] = filter_rows(tab, keep)
+            invalidate(gi)
+            record_conn(impl, info)
 
         def apply_connection(c) -> None:
             gi, gj = find(owner[c.src]), find(owner[c.dst])
@@ -316,18 +400,40 @@ class Engine:
                 intra_filter(gi, c)
                 return
             ta, tb = tables[gi], tables[gj]
-            qs.join_work += max(ta.count, 1) * max(tb.count, 1)
-            joined = injective_filter(self._retry(
-                cross_join, ta, tb, row_limit=self.cfg.max_rows))
-            qs.truncated |= joined.truncated
-            if joined.count:
-                rows = np.asarray(joined.rows[: joined.count])
-                a = rows[:, joined.cols.index(c.src)]
-                b = rows[:, joined.cols.index(c.dst)]
-                keep = connectivity_mask(self.graph, self.ni, a, b,
-                                         c.max_dist, c.bidirectional,
-                                         impl=self.cfg.impl)
-                joined = filter_rows(joined, keep)
+            a_vals = distinct_of(gi, c.src)
+            b_vals = distinct_of(gj, c.dst)
+            info = ReachJoinInfo(rows_a=ta.count, rows_b=tb.count,
+                                 distinct_a=len(a_vals),
+                                 distinct_b=len(b_vals))
+            impl = choose_connection_impl(
+                ta.count, tb.count, conn_feat(len(a_vals), len(b_vals), c),
+                sel_of(c), n, impl=self.cfg.connection_impl)
+            if impl == "reach":
+                joined = injective_filter(reach_join(
+                    self.graph, self.ni, ta, tb, c.src, c.dst, c.max_dist,
+                    c.bidirectional, a_vals=a_vals, b_vals=b_vals,
+                    row_limit=self.cfg.max_rows, impl=self.cfg.join_impl,
+                    nested_max=self.cfg.thresholds.nested_join_max,
+                    probe_impl=self._probe_impl(), cache=rcache,
+                    telemetry=tel, record=record_join, info=info))
+                qs.join_work += info.reach_pairs + joined.count
+                qs.truncated |= joined.truncated
+            else:
+                qs.join_work += max(ta.count, 1) * max(tb.count, 1)
+                joined = injective_filter(self._retry(
+                    cross_join, ta, tb, row_limit=self.cfg.max_rows))
+                qs.truncated |= joined.truncated
+                if joined.count:
+                    rows = np.asarray(joined.rows[: joined.count])
+                    a = rows[:, joined.cols.index(c.src)]
+                    b = rows[:, joined.cols.index(c.dst)]
+                    keep = connectivity_mask(self.graph, self.ni, a, b,
+                                             c.max_dist, c.bidirectional,
+                                             impl=self.cfg.impl,
+                                             cache=rcache)
+                    joined = filter_rows(joined, keep)
+            invalidate(gi, gj)
+            record_conn(impl, info)
             group[gj] = gi
             tables[gi] = joined
 
@@ -341,12 +447,14 @@ class Engine:
         if inter and self.cfg.plan_mode == "cost":
             endpoints = [(find(owner[c.src]), find(owner[c.dst]))
                          for c in inter]
-            sels = [connection_selectivity(self.stats,
-                                           self.graph.num_nodes,
-                                           c.max_dist, c.bidirectional)
-                    for c in inter]
+            sels = [sel_of(c) for c in inter]
+            feats = [conn_feat(len(distinct_of(gi, c.src)),
+                               len(distinct_of(gj, c.dst)), c)
+                     for c, (gi, gj) in zip(inter, endpoints)]
             plan = plan_connections([t.count for t in tables],
-                                    endpoints, sels)
+                                    endpoints, sels, feats=feats,
+                                    num_nodes=n,
+                                    impl=self.cfg.connection_impl)
             qs.plan_cost += plan.est_cost
             qs.greedy_plan_cost += plan.greedy_cost
             for k in plan.order:

@@ -167,11 +167,21 @@ def _pow2(x: int, lo: int = 64) -> int:
 
 
 # ---------------------------------------------------------------------- #
-@jax.jit
-def _edge_pairs_mask(src, dst, pred, pred_id, pass_src, pass_dst):
-    mask = pass_src[src] & pass_dst[dst]
-    mask = mask & jnp.where(pred_id < 0, True, pred == pred_id)
-    return mask
+@functools.partial(jax.jit, static_argnames=("src_iv", "dst_iv"))
+def _edge_pairs_mask(src, dst, pred, pred_id, pass_src, pass_dst,
+                     src_iv=False, dst_iv=False):
+    """Endpoint pass specs are either full-[N] bool masks or (lo, hi)
+    interval pairs — wildcard candidate sets (check off) stay intervals
+    so no [N] mask is ever materialized for them."""
+    if src_iv:
+        m = (src >= pass_src[0]) & (src < pass_src[1])
+    else:
+        m = pass_src[src]
+    if dst_iv:
+        m = m & (dst >= pass_dst[0]) & (dst < pass_dst[1])
+    else:
+        m = m & pass_dst[dst]
+    return m & jnp.where(pred_id < 0, True, pred == pred_id)
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
@@ -196,15 +206,18 @@ def _join_gather(eq, a_rows, b_rows, new_sel, size, has_new):
 
 
 def edge_pairs(graph: RDFGraph, pred_id: int | None,
-               pass_src: jax.Array, pass_dst: jax.Array,
+               pass_src, pass_dst,
                cols: tuple[int, int], cap: int | None = None) -> Table:
     """All edges (s, d) with pred==pred_id (None = any) and both endpoint
-    masks true.  Returns a 2-column table."""
+    specs satisfied.  A spec is a full-[N] bool mask or a (lo, hi)
+    interval pair (wildcard candidates).  Returns a 2-column table."""
     src = jnp.asarray(graph.src)
     dst = jnp.asarray(graph.dst)
     pred = jnp.asarray(graph.pred)
     p = jnp.int32(-1 if pred_id is None else pred_id)
-    mask = _edge_pairs_mask(src, dst, pred, p, pass_src, pass_dst)
+    mask = _edge_pairs_mask(src, dst, pred, p, pass_src, pass_dst,
+                            src_iv=isinstance(pass_src, tuple),
+                            dst_iv=isinstance(pass_dst, tuple))
     if cols[0] == cols[1]:      # query self-loop: s == d, single column
         mask = mask & (src == dst)
         count = int(mask.sum())
@@ -646,7 +659,7 @@ def single_node_table(node: int, lo: int, hi: int,
 
 
 def dtree_candidates(graph: RDFGraph, tree: DTree,
-                     pass_masks: dict[int, jax.Array],
+                     pass_masks: dict,   # node -> [N] bool mask | (lo, hi)
                      row_limit: int | None = None,
                      join_impl: str = "auto",
                      nested_max: int = DEFAULT_NESTED_MAX,
@@ -717,6 +730,44 @@ def _filter_gather(rows, keep, cap_out):
     idx = jnp.nonzero(keep, size=cap_out, fill_value=cap_in)[0]
     safe = jnp.minimum(idx, cap_in - 1)
     return jnp.where((idx < cap_in)[:, None], rows[safe], -1)
+
+
+def empty_table(cols: tuple[int, ...], cap: int = 64) -> Table:
+    """An empty capacity-padded table over `cols`."""
+    return Table(cols=tuple(cols),
+                 rows=jnp.full((cap, len(cols)), -1, jnp.int32), count=0)
+
+
+@functools.partial(jax.jit, static_argnames=("sel",))
+def _project_lexsorted(rows, sel):
+    """Project `sel` columns and lexsort the projection (primary key =
+    sel[0]).  Invalid rows map every projected value to the a-side
+    invalid sentinel, so they sort last and are recognizable."""
+    valid = rows[:, 0] >= 0
+    cols = tuple(jnp.where(valid, rows[:, s], _A_INVALID).astype(jnp.int32)
+                 for s in sel)
+    order = jnp.lexsort(tuple(reversed(cols)))
+    return jnp.stack(cols, axis=1)[order]
+
+
+def dedup_project(table: Table, cols: tuple[int, ...],
+                  impl: str = "auto") -> Table:
+    """Distinct rows of `table` over the column subset `cols`.
+
+    Device-resident: lexsort of the projection, first-of-group mask
+    (kernels.distinct_mask), compaction gather — one host sync for the
+    output count.  Unlike every other table op this tolerates valid rows
+    anywhere in the capacity (not just a prefix), so callers may feed it
+    a raw concatenation of padded row buffers.  Output is sorted by (and
+    tagged with) `cols`."""
+    cols = tuple(cols)
+    sel = tuple(table.cols.index(c) for c in cols)
+    proj = _project_lexsorted(table.rows, sel)
+    keep = kops.distinct_mask(proj, impl=impl) & (proj[:, 0] != _A_INVALID)
+    kept = int(keep.sum())
+    rows = _filter_gather(proj, keep, _pow2(kept))
+    return Table(cols=cols, rows=rows, count=kept, truncated=table.truncated,
+                 sort_order=cols)
 
 
 def filter_rows(table: Table, keep, kept: int | None = None) -> Table:

@@ -353,6 +353,64 @@ def plan_table_joins(node_sets: list[set[int]], counts: list[int],
 
 
 @dataclass
+class ConnFeatures:
+    """Cardinality features of one connection edge for the reach-join
+    cost model: distinct endpoint nodes per side and expected reach-set
+    sizes (stats.expected_reach) for the hop split of its d_c."""
+    distinct_a: int
+    distinct_b: int
+    reach_fwd: float
+    reach_bwd: float
+
+
+def connection_edge_cost(size_a: float, size_b: float, feat: ConnFeatures,
+                         sel: float, num_nodes: int,
+                         intra: bool = False) -> tuple[float, float]:
+    """(cross_cost, reach_cost) work proxies for one connection edge.
+
+    Both strategies build the reach sets of the distinct endpoints once
+    (connectivity_mask memoizes per node), so that term (pa + pb) is
+    billed to both.  On top of it, cross+filter pays one set
+    intersection per PAIR — the full product |A|x|B| (an intra edge
+    degenerates to a linear scan); reach-join instead pays sorting the
+    pair tables, the merge on reach_id (expected key matches ~
+    |Pa|*|Pb|/n for independent uniform reach sets), the dedup sort of
+    the match stream, and the two output-bounded equi-joins
+    (sort + merge + expand)."""
+    sa, sb = max(float(size_a), 1.0), max(float(size_b), 1.0)
+    if intra:
+        pairs = sa
+        out = sa * sel
+        joins = _sort_cost(sa) + sa + out       # ONE semi-join of the table
+    else:
+        pairs = sa * sb
+        out = sa * sb * sel
+        joins = (_sort_cost(sa) + _sort_cost(sb)    # equi-join sorts
+                 + sa + sb + 2.0 * out)             # merges + expands
+    pa = max(feat.distinct_a, 1) * max(feat.reach_fwd, 1.0)
+    pb = max(feat.distinct_b, 1) * max(feat.reach_bwd, 1.0)
+    matches = pa * pb / max(num_nodes, 1)
+    cross = pa + pb + pairs
+    reach = (pa + pb + _sort_cost(pa) + _sort_cost(pb)     # pair tables
+             + matches + _sort_cost(max(matches, 1.0))     # merge + dedup
+             + joins)
+    return cross, reach
+
+
+def choose_connection_impl(size_a: float, size_b: float, feat: ConnFeatures,
+                           sel: float, num_nodes: int, impl: str = "auto",
+                           intra: bool = False) -> str:
+    """Per-edge strategy choice mirroring matching.resolve_join_impl:
+    'auto' picks the cheaper of cross+filter and reach-join under the
+    shared work-proxy model; explicit impls force the strategy (A/B)."""
+    if impl in ("cross", "reach"):
+        return impl
+    cross, reach = connection_edge_cost(size_a, size_b, feat, sel,
+                                        num_nodes, intra=intra)
+    return "reach" if reach < cross else "cross"
+
+
+@dataclass
 class ConnectionPlan:
     """Cost-based processing order for inter-component connection edges
     (indices into the engine's `inter` list), with the greedy
@@ -397,14 +455,36 @@ class _GroupSim:
         return prod
 
 
-def _simulate_conn_order(order, sizes, endpoints, sels):
-    """Total cross-product + filter work for processing connection edges in
-    `order`.  Each inter merge pays |A|x|B| (cross join + connectivity
-    filter over the product); a connection whose endpoints were already
-    merged becomes a linear intra filter.  Estimated group size after a
-    connection is product * selectivity."""
+def _sim_edge_cost(sim: _GroupSim, i, j, sel, feat, num_nodes, impl):
+    """Cost of processing one connection edge at the sim's current group
+    sizes, under the engine's strategy rule: cross+filter work when no
+    features are given (legacy model / forced cross), reach-join work when
+    forced, min of both under 'auto' (mirroring the execution choice)."""
+    gi, gj = sim.find(i), sim.find(j)
+    intra = gi == gj
+    sa, sb = sim.size[gi], sim.size[gj]
+    cross = sa if intra else max(sa, 1.0) * max(sb, 1.0)
+    if feat is None or impl == "cross":
+        return cross
+    c, r = connection_edge_cost(sa, sb, feat, sel, num_nodes, intra=intra)
+    return r if impl == "reach" else min(c, r)
+
+
+def _simulate_conn_order(order, sizes, endpoints, sels, feats=None,
+                         num_nodes: int = 0, impl: str = "cross"):
+    """Total estimated work for processing connection edges in `order`
+    under the per-edge strategy rule (_sim_edge_cost).  Estimated group
+    size after a connection is product * selectivity regardless of the
+    strategy (both produce the same result set)."""
     sim = _GroupSim(sizes)
-    return sum(sim.apply(*endpoints[idx], sels[idx]) for idx in order)
+    total = 0.0
+    for idx in order:
+        i, j = endpoints[idx]
+        total += _sim_edge_cost(sim, i, j, sels[idx],
+                                None if feats is None else feats[idx],
+                                num_nodes, impl)
+        sim.apply(i, j, sels[idx])
+    return total
 
 
 def _greedy_conn_order(sizes, endpoints, sels):
@@ -422,23 +502,34 @@ def _greedy_conn_order(sizes, endpoints, sels):
 
 
 def plan_connections(sizes: list[int], endpoints: list[tuple[int, int]],
-                     sels: list[float]) -> ConnectionPlan:
+                     sels: list[float], feats: list[ConnFeatures] | None = None,
+                     num_nodes: int = 0,
+                     impl: str = "auto") -> ConnectionPlan:
     """Order the inter-component connection edges to minimize estimated
-    cross-product work.  endpoints[k] are group indices into `sizes`;
-    sels[k] the connection's estimated selectivity (see
-    stats.connection_selectivity).  Exhaustive over permutations for up to
-    _CONN_PERM_MAX edges (connection counts are tiny), else greedy by
-    marginal simulated cost."""
+    work.  endpoints[k] are group indices into `sizes`; sels[k] the
+    connection's estimated selectivity (stats.connection_selectivity);
+    feats[k] (optional) the reach-join cardinality features — when given,
+    each edge is priced at the cheaper of cross+filter and reach-join
+    under `impl` ('auto'/'reach'/'cross'), mirroring the engine's per-edge
+    strategy choice; without them the legacy cross-product model applies.
+    Exhaustive over permutations for up to _CONN_PERM_MAX edges
+    (connection counts are tiny), else greedy by marginal simulated
+    cost."""
     m = len(endpoints)
+
+    def cost(order):
+        return _simulate_conn_order(order, sizes, endpoints, sels,
+                                    feats, num_nodes, impl)
+
     greedy = _greedy_conn_order(sizes, endpoints, sels)
-    greedy_cost = _simulate_conn_order(greedy, sizes, endpoints, sels)
+    greedy_cost = cost(greedy)
     if m <= 1:
         return ConnectionPlan(order=greedy, est_cost=greedy_cost,
                               greedy_cost=greedy_cost)
     if m <= _CONN_PERM_MAX:
         best, best_cost = greedy, greedy_cost
         for perm in itertools.permutations(range(m)):
-            c = _simulate_conn_order(perm, sizes, endpoints, sels)
+            c = cost(perm)
             if c < best_cost:
                 best, best_cost = list(perm), c
         return ConnectionPlan(order=list(best), est_cost=best_cost,
@@ -447,14 +538,10 @@ def plan_connections(sizes: list[int], endpoints: list[tuple[int, int]],
     remaining = set(range(m))
     order: list[int] = []
     while remaining:
-        k = min(remaining,
-                key=lambda k: _simulate_conn_order(order + [k], sizes,
-                                                   endpoints, sels))
+        k = min(remaining, key=lambda k: cost(order + [k]))
         order.append(k)
         remaining.discard(k)
-    return ConnectionPlan(order=order,
-                          est_cost=_simulate_conn_order(order, sizes,
-                                                        endpoints, sels),
+    return ConnectionPlan(order=order, est_cost=cost(order),
                           greedy_cost=greedy_cost)
 
 

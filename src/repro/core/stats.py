@@ -42,6 +42,16 @@ class DatasetStats:
         return table[ks[-1]]
 
 
+def expected_reach(stats: DatasetStats, num_nodes: int, hops: int) -> float:
+    """Expected reach-set size within `hops` hops of a random node: the
+    geometric fanout series sum_{i<=h} avg_fanout^i, capped at |N|.
+    Shared by connection_selectivity and the planner's reach-join cost
+    model (pair-table sizes ~= distinct_endpoints * expected_reach)."""
+    fan = max(float(stats.avg_fanout), 1.0)
+    n = float(max(num_nodes, 1))
+    return min(n, float(sum(fan ** i for i in range(max(hops, 0) + 1))))
+
+
 def connection_selectivity(stats: DatasetStats, num_nodes: int, d_c: int,
                            bidirectional: bool = False) -> float:
     """P(random node pair is connected within d_c hops) — the cardinality
@@ -49,19 +59,14 @@ def connection_selectivity(stats: DatasetStats, num_nodes: int, d_c: int,
 
     Mirrors Algorithm 3's split: a forward reach set within ceil(d_c/2)
     hops must intersect a backward reach set within the remaining hops.
-    Expected reach-set size is the geometric fanout series
-    sum_{i<=h} avg_fanout^i (capped at |N|), and two independent uniform
-    sets of sizes R_f, R_b over n nodes intersect with probability
-    ~= R_f * R_b / n."""
-    h_fwd = -(-d_c // 2)
-    h_bwd = d_c - h_fwd
-    fan = max(float(stats.avg_fanout), 1.0)
+    Expected reach-set size is expected_reach (geometric fanout series),
+    and two independent uniform sets of sizes R_f, R_b over n nodes
+    intersect with probability ~= R_f * R_b / n."""
+    from .connectivity import hop_split
+    h_fwd, h_bwd = hop_split(d_c)
     n = max(num_nodes, 1)
-
-    def reach(h: int) -> float:
-        return min(float(n), sum(fan ** i for i in range(h + 1)))
-
-    sel = min(1.0, reach(h_fwd) * reach(h_bwd) / n)
+    sel = min(1.0, expected_reach(stats, n, h_fwd)
+              * expected_reach(stats, n, h_bwd) / n)
     if bidirectional:
         sel = min(1.0, 2.0 * sel)
     return max(sel, 1.0 / (float(n) * n))

@@ -71,6 +71,20 @@ def merge_probe(a_keys, b_keys, *, impl: str = "auto"):
     return merge_probe_pallas(a_keys, b_keys, interpret=(impl == "interpret"))
 
 
+_distinct_mask_jit = jax.jit(_ref.distinct_mask_sorted)
+
+
+def distinct_mask(rows, *, impl: str = "auto"):
+    """First-of-group mask over lexicographically sorted rows [N, K].
+
+    All impls share the jnp form: the op is a memory-bound elementwise
+    compare that XLA already fuses optimally on TPU, so there is no
+    separate Pallas kernel — `impl` is validated for API uniformity."""
+    if impl not in ("auto", "pallas", "interpret", "ref", "sorted"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return _distinct_mask_jit(jnp.asarray(rows, jnp.int32))
+
+
 def intersect_any(a, b, *, impl: str = "auto"):
     impl = _resolve(impl, cpu_default="sorted")
     a = jnp.asarray(a, jnp.int32)

@@ -84,6 +84,19 @@ def merge_probe_sorted(a_keys: jax.Array,
     return start.astype(jnp.int32), (end - start).astype(jnp.int32)
 
 
+def distinct_mask_sorted(rows: jax.Array) -> jax.Array:
+    """mask[i] = 1 iff rows[i] differs from rows[i-1] (row 0 always 1).
+
+    rows: [N, K] int32, lexicographically sorted.  On sorted input this
+    marks exactly the first row of every duplicate group — the dedup
+    primitive of the reach-join's connected-pair table.  Memory-bound
+    elementwise compare: XLA fuses it optimally on every backend, so the
+    reference form IS the kernel (no Pallas variant needed)."""
+    neq = jnp.any(rows[1:] != rows[:-1], axis=1)
+    head = jnp.ones((min(rows.shape[0], 1),), bool)   # [] for 0-row input
+    return jnp.concatenate([head, neq])
+
+
 def intersect_any_sorted(a: jax.Array, b: jax.Array) -> jax.Array:
     """Membership-test formulation of intersect_any_ref: sort each a-row,
     binary-search every b element — O(P*B log A) time and O(P*B) memory

@@ -1,0 +1,292 @@
+"""Reach-join subsystem: connection edges evaluated as set-at-a-time
+joins (connectivity.reach_join / reach_filter) must be exactly equivalent
+to the cross-product + connectivity_mask path, with peak intermediate
+capacity bounded by matches (never |A|*|B|), plus the engine-owned reach
+cache, the interval (wildcard) candidate representation, and the planner's
+reach-vs-cross strategy choice."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (build_ni_index, connectivity_mask, make_engine,
+                        cross_join, filter_rows, ReachCache, ReachJoinInfo,
+                        connected_pair_table, reach_join, reach_filter,
+                        distinct_column_values, dedup_project, empty_table,
+                        ConnFeatures, choose_connection_impl,
+                        connection_edge_cost, plan_connections,
+                        expected_reach, compute_stats)
+from repro.core import connectivity as conn_mod
+from repro.core.matching import Table, _pow2, edge_pairs
+from repro.data import random_graph, random_query
+
+
+def mk_table(cols, vals):
+    vals = np.asarray(vals, np.int32).reshape(-1, len(cols))
+    cap = _pow2(len(vals))
+    rows = np.full((cap, len(cols)), -1, np.int32)
+    rows[: len(vals)] = vals
+    return Table(cols=tuple(cols), rows=jnp.asarray(rows), count=len(vals))
+
+
+def oracle_join(g, ni, ta, tb, src_col, dst_col, d_c, bidir):
+    x = cross_join(ta, tb)
+    rows = np.asarray(x.rows[: x.count])
+    keep = connectivity_mask(g, ni, rows[:, x.cols.index(src_col)],
+                             rows[:, x.cols.index(dst_col)], d_c, bidir)
+    return filter_rows(x, keep)
+
+
+# --------------------------- direct parity ---------------------------- #
+@pytest.mark.parametrize("d_max,d_c,bidir", [
+    (1, 2, False), (2, 2, False), (2, 3, True), (2, 4, False),
+    (1, 3, True), (2, 5, False), (3, 5, True)])
+def test_reach_join_matches_cross_filter(d_max, d_c, bidir):
+    g = random_graph(n_nodes=90, n_edges=280, n_preds=2,
+                     seed=d_max * 7 + d_c)
+    ni = build_ni_index(g, d_max=d_max)
+    rng = np.random.default_rng(d_c)
+    ta = mk_table((0,), rng.integers(0, g.num_nodes, 60))
+    tb = mk_table((1,), rng.integers(0, g.num_nodes, 45))
+    info = ReachJoinInfo()
+    out = reach_join(g, ni, ta, tb, 0, 1, d_c, bidir, info=info)
+    want = oracle_join(g, ni, ta, tb, 0, 1, d_c, bidir)
+    assert out.result_set() == want.result_set()
+    assert info.connected_pairs >= 0 and info.reach_pairs > 0
+
+
+@pytest.mark.parametrize("d_max,d_c,bidir", [
+    (2, 3, False), (2, 4, True), (1, 4, False)])
+def test_reach_filter_matches_mask(d_max, d_c, bidir):
+    g = random_graph(n_nodes=70, n_edges=220, n_preds=2, seed=d_c + 40)
+    ni = build_ni_index(g, d_max=d_max)
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, g.num_nodes, 64)
+    b = rng.integers(0, g.num_nodes, 64)
+    t = mk_table((2, 5), np.stack([a, b], axis=1))
+    got = reach_filter(g, ni, t, 2, 5, d_c, bidir)
+    want = filter_rows(t, connectivity_mask(g, ni, a, b, d_c, bidir))
+    assert got.result_set() == want.result_set()
+
+
+def test_reach_join_multi_column_tables():
+    """Endpoint columns embedded in wider tables (the engine case)."""
+    g = random_graph(n_nodes=80, n_edges=260, n_preds=2, seed=3)
+    ni = build_ni_index(g, d_max=2)
+    rng = np.random.default_rng(9)
+    ta = mk_table((0, 1), rng.integers(0, g.num_nodes, (40, 2)))
+    tb = mk_table((2, 3), rng.integers(0, g.num_nodes, (35, 2)))
+    out = reach_join(g, ni, ta, tb, 1, 2, 3, False)
+    want = oracle_join(g, ni, ta, tb, 1, 2, 3, False)
+    assert out.cols == want.cols
+    assert out.result_set() == want.result_set()
+
+
+def test_reach_join_empty_sides():
+    g = random_graph(n_nodes=40, n_edges=100, n_preds=2, seed=1)
+    ni = build_ni_index(g, d_max=2)
+    ta = mk_table((0,), np.arange(5))
+    out = reach_join(g, ni, ta, empty_table((1,)), 0, 1, 2)
+    assert out.count == 0 and out.cols == (0, 1)
+    out = reach_join(g, ni, empty_table((0,)), ta, 0, 0, 2)
+    assert out.count == 0
+
+
+def test_connected_pair_table_is_exact_and_distinct():
+    """The connected-pair table holds exactly the distinct endpoint pairs
+    the per-pair oracle accepts — nothing more, nothing less."""
+    g = random_graph(n_nodes=60, n_edges=200, n_preds=2, seed=12)
+    ni = build_ni_index(g, d_max=2)
+    rng = np.random.default_rng(1)
+    ta = mk_table((0,), rng.integers(0, g.num_nodes, 30))
+    tb = mk_table((1,), rng.integers(0, g.num_nodes, 30))
+    a_vals = distinct_column_values(ta, 0)
+    b_vals = distinct_column_values(tb, 1)
+    assert (np.diff(a_vals) > 0).all()          # sorted distinct
+    cp = connected_pair_table(g, ni, a_vals, b_vals, 3, False, (0, 1))
+    got = {tuple(r) for r in cp.numpy()}
+    want = set()
+    for a in a_vals:
+        keep = connectivity_mask(g, ni, np.full(len(b_vals), a), b_vals, 3)
+        want |= {(int(a), int(b)) for b, k in zip(b_vals, keep) if k}
+    assert got == want
+    assert cp.count == len(got)                 # deduplicated
+
+
+# ----------------------- capacity boundedness ------------------------- #
+def test_reach_join_capacity_bounded_by_matches():
+    """The acceptance property: with the reach impl no intermediate is
+    proportional to |A|*|B| — peak table capacity tracks matches + pair
+    tables.  4096x4096 rows (16.7M-pair product) over a sparse graph
+    where only a handful of endpoint pairs connect."""
+    g = random_graph(n_nodes=20_000, n_edges=40_000, n_preds=2, seed=8)
+    ni = build_ni_index(g, d_max=1)
+    rng = np.random.default_rng(2)
+    pa = rng.choice(g.num_nodes, 1024, replace=False)
+    pb = rng.choice(g.num_nodes, 1024, replace=False)
+    ta = mk_table((0,), rng.choice(pa, 4096))
+    tb = mk_table((1,), rng.choice(pb, 4096))
+    info = ReachJoinInfo()
+    out = reach_join(g, ni, ta, tb, 0, 1, 2, info=info)
+    product = ta.count * tb.count                  # 16.7M
+    # peak capacity is bounded by matches + pair-table sizes, and every
+    # intermediate stays orders of magnitude below the cross product
+    assert info.peak_cap <= max(_pow2(out.count), _pow2(info.reach_pairs))
+    assert info.peak_cap < product // 64
+    assert out.cap == _pow2(out.count)
+    # spot-check correctness on a slice against the per-pair oracle
+    sub_a, sub_b = mk_table((0,), ta.numpy()[:256]), \
+        mk_table((1,), tb.numpy()[:256])
+    sub = reach_join(g, ni, sub_a, sub_b, 0, 1, 2)
+    want = oracle_join(g, ni, sub_a, sub_b, 0, 1, 2, False)
+    assert sub.result_set() == want.result_set()
+
+
+# --------------------------- reach cache ------------------------------ #
+def test_reach_cache_shared_across_edges(monkeypatch):
+    """Satellite: reach sets computed for one connection edge are reused
+    by later edges sharing endpoints (per-query engine-owned cache), for
+    both the per-pair mask path and the reach-join path."""
+    g = random_graph(n_nodes=60, n_edges=180, n_preds=2, seed=4)
+    ni = build_ni_index(g, d_max=1)
+    calls = {"n": 0}
+    real = conn_mod._bfs_within
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+    monkeypatch.setattr(conn_mod, "_bfs_within", counting)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, g.num_nodes, 32)
+    b = rng.integers(0, g.num_nodes, 32)
+    cache = ReachCache()
+    connectivity_mask(g, ni, a, b, 5, cache=cache)   # d_c=5 > d_max: BFS
+    first = calls["n"]
+    assert first > 0
+    connectivity_mask(g, ni, a, b, 5, cache=cache)   # all memoized
+    assert calls["n"] == first
+    # the array-side consumer hits the same cache entries
+    ta, tb = mk_table((0,), a), mk_table((1,), b)
+    out = reach_join(g, ni, ta, tb, 0, 1, 5, cache=cache)
+    assert calls["n"] == first
+    assert out.result_set() == oracle_join(g, ni, ta, tb, 0, 1, 5,
+                                           False).result_set()
+
+
+def test_engine_conn_telemetry_and_parity():
+    """connection_impl x plan_mode A/B grid: identical result sets, and
+    QueryStats.conn_strategies records the executed strategy."""
+    g = random_graph(n_nodes=120, n_edges=400, n_preds=3, seed=11)
+    q = random_query(g, size=5, seed=23, n_connection=2, d_c=3)
+    if not q.connections:
+        pytest.skip("sampled query has no connection edges")
+    results = {}
+    for ci in ("reach", "cross", "auto"):
+        for pm in ("cost", "greedy"):
+            eng = make_engine(g, "h2", impl="ref")
+            eng.cfg.connection_impl = ci
+            eng.cfg.plan_mode = pm
+            r = eng.execute(q)
+            results[(ci, pm)] = r.result_set()
+            n_edges = sum(r.stats.conn_strategies.values())
+            assert n_edges == len(q.connections)
+            if ci != "auto":
+                assert set(r.stats.conn_strategies) == {ci}
+            if ci == "reach":
+                assert r.stats.conn_reach_pairs > 0
+                assert r.stats.conn_endpoint_distinct > 0
+    first = next(iter(results.values()))
+    assert all(v == first for v in results.values())
+
+
+# ------------------- wildcard interval candidates --------------------- #
+def test_edge_pairs_interval_spec_matches_mask():
+    g = random_graph(n_nodes=80, n_edges=250, n_preds=3, seed=6)
+    n = g.num_nodes
+    lo_s, hi_s, lo_d, hi_d = 10, 50, 20, 70
+    m_s = np.zeros(n, bool); m_s[lo_s:hi_s] = True
+    m_d = np.zeros(n, bool); m_d[lo_d:hi_d] = True
+    t_mask = edge_pairs(g, 1, jnp.asarray(m_s), jnp.asarray(m_d), (0, 1))
+    t_iv = edge_pairs(g, 1, (jnp.int32(lo_s), jnp.int32(hi_s)),
+                      (jnp.int32(lo_d), jnp.int32(hi_d)), (0, 1))
+    assert t_mask.result_set() == t_iv.result_set()
+    # mixed specs too
+    t_mix = edge_pairs(g, 1, jnp.asarray(m_s),
+                       (jnp.int32(lo_d), jnp.int32(hi_d)), (0, 1))
+    assert t_mix.result_set() == t_mask.result_set()
+
+
+def test_engine_wildcard_candidates_need_no_masks():
+    """check_policy='never' (interval representation) must agree with
+    'always' (materialized masks) end to end."""
+    g = random_graph(n_nodes=100, n_edges=350, n_preds=3, seed=15)
+    q = random_query(g, size=4, seed=31, n_connection=1, d_c=3)
+    r_never = make_engine(g, "stwig+", impl="ref").execute(q)
+    eng = make_engine(g, "h2", impl="ref")
+    eng.cfg.check_policy = "always"
+    r_always = eng.execute(q)
+    assert r_never.result_set() == r_always.result_set()
+    assert not r_never.stats.used_check
+
+
+# ------------------------ dedup_project ------------------------------- #
+def test_dedup_project_distinct_sorted():
+    rng = np.random.default_rng(0)
+    t = mk_table((3, 1, 2), rng.integers(0, 6, (200, 3)))
+    d = dedup_project(t, (1, 2))
+    rows = d.numpy()
+    want = sorted({(int(r[1]), int(r[2])) for r in t.numpy()})
+    assert [tuple(r) for r in rows] == want
+    assert d.sort_order == (1, 2)
+    assert d.cols == (1, 2)
+
+
+def test_dedup_project_tolerates_scattered_padding():
+    """Valid rows need not form a prefix (union-of-buffers input)."""
+    rows = np.full((16, 2), -1, np.int32)
+    rows[3] = (5, 2)
+    rows[9] = (5, 2)
+    rows[12] = (1, 7)
+    t = Table(cols=(0, 1), rows=jnp.asarray(rows), count=3)
+    d = dedup_project(t, (0, 1))
+    assert d.count == 2
+    assert {tuple(r) for r in d.numpy()} == {(5, 2), (1, 7)}
+
+
+# ------------------------ planner choice ------------------------------ #
+def test_choose_connection_impl_regimes():
+    feat_few = ConnFeatures(distinct_a=20, distinct_b=20,
+                            reach_fwd=8.0, reach_bwd=4.0)
+    # big tables, few distinct endpoints: reach-join wins
+    assert choose_connection_impl(20_000, 20_000, feat_few, 1e-3,
+                                  100_000) == "reach"
+    # tiny tables: the cross product is cheaper than pair-table setup
+    assert choose_connection_impl(4, 4, feat_few, 1e-3, 100_000) == "cross"
+    # forcing wins over the model
+    assert choose_connection_impl(4, 4, feat_few, 1e-3, 100_000,
+                                  impl="reach") == "reach"
+    cross, reach = connection_edge_cost(20_000, 20_000, feat_few, 1e-3,
+                                        100_000)
+    assert reach < cross
+
+
+def test_plan_connections_with_features():
+    """The feature-aware model still produces a valid plan and never
+    prices an edge above its cross cost under 'auto'."""
+    sizes = [1000, 2000, 50]
+    endpoints = [(0, 1), (1, 2)]
+    sels = [1e-3, 1e-2]
+    feats = [ConnFeatures(10, 10, 4.0, 4.0), ConnFeatures(50, 5, 4.0, 4.0)]
+    plan = plan_connections(sizes, endpoints, sels, feats=feats,
+                            num_nodes=10_000, impl="auto")
+    legacy = plan_connections(sizes, endpoints, sels)
+    assert sorted(plan.order) == [0, 1]
+    assert plan.est_cost <= legacy.est_cost + 1e-9
+
+
+def test_expected_reach_monotone_capped():
+    g = random_graph(n_nodes=60, n_edges=300, n_preds=2, seed=2)
+    st_ = compute_stats(g)
+    vals = [expected_reach(st_, g.num_nodes, h) for h in range(6)]
+    assert vals[0] == 1.0
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert vals[-1] <= g.num_nodes

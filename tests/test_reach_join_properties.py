@@ -1,0 +1,63 @@
+"""Property-based parity (hypothesis): reach_join must equal the
+cross_join + connectivity_mask oracle on randomized graphs, distance
+constraints (including d_c > ni.d_max -> exact BFS fallback), empty and
+skewed tables, and bidirectional edges."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (build_ni_index, connectivity_mask, cross_join,
+                        filter_rows, ReachCache, reach_join, reach_filter,
+                        empty_table)
+from repro.core.matching import Table, _pow2
+from repro.data import random_graph
+
+
+def mk_table(cols, vals):
+    vals = np.asarray(vals, np.int32).reshape(-1, len(cols))
+    cap = _pow2(len(vals))
+    rows = np.full((cap, len(cols)), -1, np.int32)
+    rows[: len(vals)] = vals
+    return Table(cols=tuple(cols), rows=jnp.asarray(rows), count=len(vals))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), d_max=st.integers(1, 3),
+       d_c=st.integers(1, 5), bidir=st.booleans(),
+       rows_a=st.integers(0, 70), rows_b=st.integers(1, 70))
+def test_reach_join_parity_randomized(seed, d_max, d_c, bidir,
+                                      rows_a, rows_b):
+    rng = np.random.default_rng(seed)
+    g = random_graph(n_nodes=int(rng.integers(30, 90)),
+                     n_edges=int(rng.integers(80, 300)),
+                     n_preds=2, seed=seed)
+    ni = build_ni_index(g, d_max=d_max)
+    pool = rng.integers(0, g.num_nodes, max(g.num_nodes // 4, 2))
+    ta = mk_table((0,), rng.choice(pool, rows_a)) if rows_a else \
+        empty_table((0,))
+    tb = mk_table((1,), rng.choice(pool, rows_b))
+    out = reach_join(g, ni, ta, tb, 0, 1, d_c, bidir, cache=ReachCache())
+    x = cross_join(ta, tb)
+    rows = np.asarray(x.rows[: x.count])
+    keep = connectivity_mask(g, ni, rows[:, 0], rows[:, 1], d_c, bidir)
+    assert out.result_set() == filter_rows(x, keep).result_set()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d_max=st.integers(1, 2),
+       d_c=st.integers(1, 4), bidir=st.booleans())
+def test_reach_filter_parity_randomized(seed, d_max, d_c, bidir):
+    rng = np.random.default_rng(seed)
+    g = random_graph(n_nodes=int(rng.integers(30, 80)),
+                     n_edges=int(rng.integers(80, 240)),
+                     n_preds=2, seed=seed + 1)
+    ni = build_ni_index(g, d_max=d_max)
+    a = rng.integers(0, g.num_nodes, 40)
+    b = rng.integers(0, g.num_nodes, 40)
+    t = mk_table((0, 1), np.stack([a, b], axis=1))
+    got = reach_filter(g, ni, t, 0, 1, d_c, bidir)
+    want = filter_rows(t, connectivity_mask(g, ni, a, b, d_c, bidir))
+    assert got.result_set() == want.result_set()
