@@ -83,13 +83,12 @@ def _conn3():
         r = eng.execute(q)
         result_sets[pm] = r.result_set()
         out[f"{pm}_ms"] = _best(lambda: eng.execute(q))
-        out[f"{pm}_stats"] = {
-            "sorts_performed": r.stats.sorts_performed,
-            "sorts_avoided": r.stats.sorts_avoided,
-            "plan_cost": r.stats.plan_cost,
-            "greedy_plan_cost": r.stats.greedy_plan_cost,
-            "join_work": r.stats.join_work,
-        }
+        # stable telemetry schema (QueryStats.to_dict) instead of
+        # re-plucking fields ad hoc
+        d = r.stats.to_dict()
+        out[f"{pm}_stats"] = {k: d[k] for k in (
+            "sorts_performed", "sorts_avoided", "plan_cost",
+            "greedy_plan_cost", "join_work")}
         out[f"{pm}_rows"] = r.count
     out["identical_result_sets"] = result_sets["cost"] == result_sets["greedy"]
     out["speedup"] = out["greedy_ms"] / out["cost_ms"]

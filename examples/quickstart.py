@@ -7,6 +7,7 @@ import time
 
 from repro.core import compute_stats, make_engine
 from repro.data import dblp_like, random_query
+from repro.serve import QueryServer
 
 
 def main():
@@ -44,6 +45,18 @@ def main():
               f"(iters={plan.est_iterations:.0f}, joins={plan.est_join_product:.2g})")
         print(f"   max neighborhood selectivity={plan.max_selectivity:.2f} "
               f"-> use_check={plan.use_check}")
+
+    print("== 5. serving: plan cache makes repeat templates cheap ==")
+    srv = QueryServer(g, stats=st)
+    for label in ("cold", "warm", "warm"):
+        t0 = time.perf_counter()
+        r = srv.query(q)
+        print(f"   {label}: {r.count} matches in "
+              f"{(time.perf_counter() - t0)*1e3:8.1f} ms  "
+              f"plan_cache_hit={r.stats.cache_hit}")
+    pc = srv.telemetry()["plan_cache"]
+    print(f"   plan cache: {pc['hits']} hits / {pc['misses']} misses")
+    print("   (full repeat-template workload: examples/serve_queries.py)")
 
 
 if __name__ == "__main__":

@@ -15,11 +15,13 @@ from .connectivity import (connectivity_mask, reach_sets,
     distinct_column_values, REACH_ID_COL)
 from .stats import DatasetStats, compute_stats, predicate_selectivity, \
     literal_selectivity, coherence, relationship_specialty, \
-    literal_diversity, connection_selectivity, expected_reach
-from .planner import Thresholds, PlanDecision, decide, \
+    literal_diversity, connection_selectivity, expected_reach, \
+    endpoint_reach, node_degrees
+from .planner import Thresholds, CostModel, PlanDecision, decide, \
     neighborhood_selectivity, tune_thresholds, JoinEstimator, \
-    JoinPlan, PlannedStep, plan_table_joins, simulate_join_order, \
-    ConnectionPlan, plan_connections, ConnFeatures, \
+    ReplayEstimator, JoinPlan, PlannedStep, plan_table_joins, \
+    simulate_join_order, ConnectionPlan, plan_connections, ConnFeatures, \
     connection_edge_cost, choose_connection_impl
-from .engine import Engine, EngineConfig, MatchResult, make_engine
+from .engine import Engine, EngineConfig, MatchResult, PreparedQuery, \
+    QueryStats, make_engine
 from .distributed import shard_check, gather_candidates

@@ -33,6 +33,7 @@ per query) memoizes reach sets across connection edges sharing endpoints.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -143,17 +144,41 @@ def _bfs_within(graph: RDFGraph, start: int, hops: int, forward: bool) -> set:
 
 @dataclass
 class ReachCache:
-    """Per-query memo of exact reach sets, keyed (node, hops, sign).
+    """Memo of exact reach sets, keyed (node, hops, sign).
 
-    Engine-owned and shared across every connection edge of one query, so
-    edges with common endpoints never recompute a reach set — the caches
-    `connectivity_mask` used to rebuild per call, hoisted.  Two mirrored
-    stores (python sets for per-pair intersections, np arrays for the
-    reach-join pair tables) convert lazily between each other."""
+    Engine-owned per query by default (shared across every connection edge
+    of one query, so edges with common endpoints never recompute a reach
+    set — the caches `connectivity_mask` used to rebuild per call,
+    hoisted).  The serving layer instead installs one server-owned cache
+    with `max_entries` set, extending the reuse across queries (the
+    dataset is immutable, so entries never go stale) with LRU eviction
+    bounding the footprint.  The bound is an ENTRY count, not bytes: one
+    entry is a reach set of up to |N| ids, so hub-heavy graphs at large
+    |N| want a smaller max_entries (a byte-budget bound is an open
+    item).  Two mirrored stores (python sets for per-pair
+    intersections, np arrays for the reach-join pair tables) convert
+    lazily between each other; both stores of an evicted key go
+    together."""
     sets: dict = field(default_factory=dict)
     arrays: dict = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
+    max_entries: int | None = None      # LRU bound on distinct keys
+    _lru: OrderedDict = field(default_factory=OrderedDict, repr=False)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def _touch(self, key) -> None:
+        self._lru[key] = None
+        self._lru.move_to_end(key)
+        if self.max_entries is not None:
+            while len(self._lru) > self.max_entries:
+                old, _ = self._lru.popitem(last=False)
+                self.sets.pop(old, None)
+                self.arrays.pop(old, None)
+                self.evictions += 1
 
     def get_set(self, node: int, hops: int, sign: int) -> set | None:
         key = (node, hops, sign)
@@ -162,10 +187,13 @@ class ReachCache:
             s = self.sets[key] = set(int(x) for x in self.arrays[key])
         self.hits += s is not None
         self.misses += s is None
+        if s is not None:
+            self._touch(key)
         return s
 
     def put_set(self, node: int, hops: int, sign: int, s: set) -> None:
         self.sets[(node, hops, sign)] = s
+        self._touch((node, hops, sign))
 
     def get_array(self, node: int, hops: int, sign: int) -> np.ndarray | None:
         key = (node, hops, sign)
@@ -175,11 +203,14 @@ class ReachCache:
             a = self.arrays[key] = np.fromiter(s, np.int32, len(s))
         self.hits += a is not None
         self.misses += a is None
+        if a is not None:
+            self._touch(key)
         return a
 
     def put_array(self, node: int, hops: int, sign: int,
                   arr: np.ndarray) -> None:
         self.arrays[(node, hops, sign)] = arr
+        self._touch((node, hops, sign))
 
 
 def _exact_reach(graph: RDFGraph, ni: NIIndex, node: int, hops: int,

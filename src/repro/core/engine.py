@@ -1,4 +1,5 @@
-"""RDF-ℏ query engine (paper Fig. 2 pipeline).
+"""RDF-ℏ query engine (paper Fig. 2 pipeline), split into prepare/execute
+phases for the serving layer.
 
 Pipeline per query: separate connection edges → IDMap candidate intervals →
 (policy-dependent) neighborhood check → per-component D-tree decomposition →
@@ -8,6 +9,19 @@ connection-edge evaluation (intra-table filters first, then cross-component
 connectivity joins in planner.plan_connections order) → final match table.
 EngineConfig.plan_mode='greedy' keeps the seed's smallest-first heuristics
 for A/B comparison.
+
+Prepare/execute split (`Engine.prepare` / `Engine.execute_prepared`):
+everything that depends only on (dataset, template) — candidate intervals,
+D-tree decomposition, the §4.3 check decision — is computed once into a
+`PreparedQuery`.  The first execution additionally *learns* the
+data-determined parts of the plan into it: per-component join orders, the
+connection-edge order, the candidate masks, and the exact join output
+sizes (`join_seq`).  Repeat executions replay all of that — no planning
+DP, no signature check, no capacity-overflow retries, and byte-identical
+jit shapes (so XLA's compilation cache always hits).  The serving layer
+(`repro.serve`) caches PreparedQuery objects keyed by canonical template
+fingerprint; `Engine.execute` keeps the one-shot behavior by preparing
+fresh per call.
 
 Engine variants (paper §6):
   STWIG+      check_policy='never',     any index (1-hop suffices)
@@ -38,11 +52,12 @@ from .matching import (Table, CapacityOverflow, dtree_candidates,
 from .connectivity import (connectivity_mask, reach_join, reach_filter,
                            ReachCache, ReachJoinInfo,
                            distinct_column_values, hop_split)
-from .planner import (Thresholds, PlanDecision, decide, JoinEstimator,
+from .planner import (Thresholds, CostModel, PlanDecision, decide,
+                      JoinEstimator, ReplayEstimator,
                       plan_table_joins, plan_connections, ConnFeatures,
                       choose_connection_impl)
 from .stats import (DatasetStats, compute_stats, connection_selectivity,
-                    expected_reach)
+                    endpoint_reach)
 
 
 @dataclass
@@ -62,6 +77,9 @@ class EngineConfig:
     # the seed cross-product + per-pair connectivity_mask filter
     # (O(|A|*|B|), kept for A/B), 'auto' = per-edge cost-model choice.
     connection_impl: str = "auto"    # auto | reach | cross
+    # calibrated multiplicative corrections to the analytic cost model
+    # (serve.Calibrator learns these online; defaults = hardcoded model)
+    cost_model: CostModel = field(default_factory=CostModel)
 
 
 @dataclass
@@ -71,10 +89,12 @@ class QueryStats:
     plan: PlanDecision | None = None
     candidates_before: int = 0
     candidates_after: int = 0
+    prepare_time: float = 0.0           # template planning (0 on cache hits)
     check_time: float = 0.0
     match_time: float = 0.0
     conn_time: float = 0.0
     total_time: float = 0.0
+    cache_hit: bool = False             # executed from a warm PreparedQuery
     join_work: int = 0                  # Σ |A|*|B| over joins (work proxy)
     dtree_work: int = 0                 # Σ D-tree candidate rows generated
     # join planner telemetry
@@ -84,6 +104,7 @@ class QueryStats:
     join_est_rows: int = 0              # Σ estimated output rows
     join_actual_rows: int = 0           # Σ actual output rows
     join_est_log_err: float = 0.0       # Σ |ln(est/actual)| (accuracy)
+    join_est_log_bias: float = 0.0      # Σ ln(est/actual) (signed bias)
     # whole-query plan telemetry
     plan_mode: str = "cost"             # join order used (cost | greedy)
     sorts_performed: int = 0            # sort-merge sorts actually run
@@ -96,6 +117,53 @@ class QueryStats:
     conn_connected_pairs: int = 0       # Σ deduped connected endpoint pairs
     conn_endpoint_rows: int = 0         # Σ endpoint-column rows seen
     conn_endpoint_distinct: int = 0     # Σ distinct endpoint nodes seen
+    conn_est_pairs: float = 0.0         # Σ predicted connected pairs
+    conn_est_reach_pairs: float = 0.0   # Σ predicted pair-table rows
+
+    # Stable flat schema: scalar counters first, then the two strategy
+    # dicts and a plan summary.  Server telemetry rollups and benchmarks
+    # consume this instead of re-plucking fields ad hoc; a schema test
+    # pins the key set, so extend it deliberately.
+    _SCALAR_FIELDS = (
+        "used_check", "truncated", "cache_hit",
+        "candidates_before", "candidates_after",
+        "prepare_time", "check_time", "match_time", "conn_time",
+        "total_time",
+        "join_work", "dtree_work",
+        "join_retries", "n_estimated_joins",
+        "join_est_rows", "join_actual_rows",
+        "join_est_log_err", "join_est_log_bias",
+        "plan_mode", "sorts_performed", "sorts_avoided",
+        "plan_cost", "greedy_plan_cost",
+        "conn_reach_pairs", "conn_connected_pairs",
+        "conn_endpoint_rows", "conn_endpoint_distinct",
+        "conn_est_pairs", "conn_est_reach_pairs",
+    )
+
+    def to_dict(self) -> dict:
+        """JSON-serializable snapshot with a stable key set."""
+        out = {}
+        for k in self._SCALAR_FIELDS:
+            v = getattr(self, k)
+            if isinstance(v, (bool, str)):
+                out[k] = v
+            elif isinstance(v, float):
+                out[k] = float(v)
+            else:
+                out[k] = int(v)
+        out["join_strategies"] = {str(k): int(v)
+                                  for k, v in self.join_strategies.items()}
+        out["conn_strategies"] = {str(k): int(v)
+                                  for k, v in self.conn_strategies.items()}
+        p = self.plan
+        out["plan"] = None if p is None else {
+            "use_check": bool(p.use_check),
+            "complex_query": bool(p.complex_query),
+            "max_selectivity": float(p.max_selectivity),
+            "est_iterations": float(p.est_iterations),
+            "est_join_product": float(p.est_join_product),
+        }
+        return out
 
 
 @dataclass
@@ -113,6 +181,52 @@ class MatchResult:
         return {tuple(int(r[i]) for i in order) for r in self.rows}
 
 
+@dataclass
+class PreparedQuery:
+    """Template-level execution state: computed once by `Engine.prepare`,
+    enriched by the first `execute_prepared` run, replayed by every later
+    one.  `repro.serve.plan_cache.PlanCache` LRU-caches these keyed by
+    (dataset id, canonical template fingerprint).
+
+    prepare() fills the template-dependent fields: candidate intervals,
+    component split, D-tree decomposition, and the §4.3 pruning decision.
+    The first execution learns the data-determined plan — per-component
+    join orders (`comp_orders`, from the Selinger DP over *actual* table
+    counts), the connection-edge order (`conn_order`), the candidate pass
+    masks (`masks`, device-resident), and the exact output size of every
+    estimator-sized join in engine call order (`join_seq`).  Execution of
+    a fixed template against an immutable dataset is deterministic, so
+    replaying them is exact: warm runs skip the planning DP, the
+    signature check, and all capacity-overflow retries, and touch only
+    jit shapes already compiled."""
+    query: QueryTemplate
+    iv: np.ndarray                      # [Q, 2] candidate intervals
+    cand_sizes: dict[int, int]
+    comps: list[list[int]]
+    trees_per_comp: list[list[DTree]]
+    decision: PlanDecision | None
+    use_check: bool
+    fingerprint: str | None = None
+    version: int = 0                    # calibration version at prepare time
+    prepare_time: float = 0.0
+    # learned on first execution ------------------------------------- #
+    executions: int = 0
+    masks: tuple | None = None          # (pass_masks, pass_np, after)
+    comp_orders: dict = field(default_factory=dict)   # comp idx -> order
+    comp_costs: dict = field(default_factory=dict)    # comp idx -> (c, g)
+    conn_order: list[int] | None = None
+    conn_costs: tuple[float, float] = (0.0, 0.0)
+    # per-edge strategy choices in processing order: replayed on warm
+    # runs so a calibrator-moved cost model cannot flip a strategy
+    # mid-replay and desync the recorded join_seq
+    conn_impls: list[str] | None = None
+    join_seq: list[int] = field(default_factory=list)
+
+    @property
+    def warm(self) -> bool:
+        return self.executions > 0
+
+
 class Engine:
     def __init__(self, graph: RDFGraph, ni: NIIndex,
                  cfg: EngineConfig | None = None,
@@ -124,46 +238,96 @@ class Engine:
         self.stats = stats if stats is not None else compute_stats(graph)
         self._dev_cache: dict = {}      # device-resident NI tensors
         self._bloom = None              # lazy 1-hop bloom signatures
+        # optional server-owned reach cache shared across queries (the
+        # dataset is immutable, so reach sets never go stale); when None
+        # each execution gets its own per-query cache as before
+        self.reach_cache: ReachCache | None = None
 
     # -------------------------------------------------------------- #
-    def execute(self, query: QueryTemplate) -> MatchResult:
+    def prepare(self, query: QueryTemplate,
+                fingerprint: str | None = None,
+                version: int = 0) -> PreparedQuery:
+        """Template-dependent planning: intervals, decomposition, and the
+        §4.3 check decision.  No candidate data is touched."""
         t0 = time.perf_counter()
-        qs = QueryStats()
         cfg = self.cfg
-        n = self.graph.num_nodes
         iv = query.intervals(self.idmap)
-        cand_sizes = {q: int(iv[q, 1] - iv[q, 0]) for q in range(query.num_nodes)}
-        qs.candidates_before = sum(cand_sizes.values())
-
+        cand_sizes = {q: int(iv[q, 1] - iv[q, 0])
+                      for q in range(query.num_nodes)}
         comps = query.components()
-        trees_per_comp = [decompose(query, comp, cand_sizes) for comp in comps]
-
-        # ---- planner -------------------------------------------------
+        trees_per_comp = [decompose(query, comp, cand_sizes)
+                          for comp in comps]
+        decision = None
         if cfg.check_policy == "always":
             use_check = True
         elif cfg.check_policy == "never":
             use_check = False
         else:
-            plan = decide(query, trees_per_comp, cand_sizes, self.stats,
-                          cfg.thresholds, k=cfg.d_check)
-            qs.plan = plan
-            use_check = plan.use_check
-        qs.used_check = use_check
+            decision = decide(query, trees_per_comp, cand_sizes, self.stats,
+                              cfg.thresholds, k=cfg.d_check)
+            use_check = decision.use_check
+        return PreparedQuery(
+            query=query, iv=iv, cand_sizes=cand_sizes, comps=comps,
+            trees_per_comp=trees_per_comp, decision=decision,
+            use_check=use_check, fingerprint=fingerprint, version=version,
+            prepare_time=time.perf_counter() - t0)
 
-        # ---- candidate masks ------------------------------------------
-        # With the check on, each node gets a [N] bool mask.  Without it
-        # the candidate set IS the IDMap interval — represented as a
-        # (lo, hi) pair instead of materializing an all-true [N] mask per
-        # query node (edge_pairs and single_node_table consume both
-        # forms), so the wildcard path allocates nothing per node.
-        t1 = time.perf_counter()
+    def execute(self, query: QueryTemplate) -> MatchResult:
+        return self.execute_prepared(self.prepare(query))
+
+    def revalidate(self, pq: PreparedQuery, version: int) -> bool:
+        """Refresh a PreparedQuery after the calibrated thresholds moved.
+
+        Only the §4.3 check decision depends on the thresholds, and
+        re-deciding is cheap (pure template arithmetic) — so instead of
+        discarding the plan, re-run `decide` and keep everything learned
+        (masks, join orders, join_seq) whenever the decision is stable.
+        A flipped decision changes the candidate masks and hence every
+        downstream table, so then the learned execution state is reset
+        (the template-level fields stay valid).  Returns True iff the
+        learned state survived."""
+        cfg = self.cfg
+        kept = True
+        if cfg.check_policy == "selective":
+            decision = decide(pq.query, pq.trees_per_comp, pq.cand_sizes,
+                              self.stats, cfg.thresholds, k=cfg.d_check)
+            if decision.use_check != pq.use_check:
+                pq.masks = None
+                pq.comp_orders = {}
+                pq.comp_costs = {}
+                pq.conn_order = None
+                pq.conn_costs = (0.0, 0.0)
+                pq.conn_impls = None
+                pq.join_seq = []
+                pq.executions = 0
+                kept = False
+            pq.decision = decision
+            pq.use_check = decision.use_check
+        pq.version = version
+        return kept
+
+    # -------------------------------------------------------------- #
+    def _candidate_masks(self, pq: PreparedQuery) -> tuple:
+        """Per-node candidate pass specs.  With the check on, each node
+        gets a [N] bool mask.  Without it the candidate set IS the IDMap
+        interval — represented as a (lo, hi) pair instead of materializing
+        an all-true [N] mask per query node (edge_pairs and
+        single_node_table consume both forms), so the wildcard path
+        allocates nothing per node.  Deterministic per (dataset,
+        template): cached on the PreparedQuery, so warm executions skip
+        the whole signature check."""
+        if pq.masks is not None:
+            return pq.masks
+        cfg = self.cfg
+        query, iv = pq.query, pq.iv
+        n = self.graph.num_nodes
         pass_masks: dict[int, object] = {}
         pass_np: dict[int, np.ndarray | None] = {}
         after = 0
-        for comp in comps:
+        for comp in pq.comps:
             for q in comp:
                 lo, hi = int(iv[q, 0]), int(iv[q, 1])
-                if use_check:
+                if pq.use_check:
                     mask = np.zeros(n, dtype=bool)
                     reqs = build_requirements(query, comp, q,
                                               min(cfg.d_check, self.ni.d_max), iv)
@@ -188,12 +352,38 @@ class Engine:
                     pass_np[q] = None
                     pass_masks[q] = (jnp.int32(lo), jnp.int32(hi))
                     after += hi - lo
+        pq.masks = (pass_masks, pass_np, after)
+        return pq.masks
+
+    def execute_prepared(self, pq: PreparedQuery) -> MatchResult:
+        t0 = time.perf_counter()
+        qs = QueryStats()
+        cfg = self.cfg
+        query, iv, cand_sizes = pq.query, pq.iv, pq.cand_sizes
+        qs.candidates_before = sum(cand_sizes.values())
+        qs.plan = pq.decision
+        qs.used_check = pq.use_check
+        qs.cache_hit = pq.warm
+        qs.prepare_time = 0.0 if pq.warm else pq.prepare_time
+
+        # ---- candidate masks ------------------------------------------
+        t1 = time.perf_counter()
+        pass_masks, pass_np, after = self._candidate_masks(pq)
         qs.candidates_after = after
         qs.check_time = time.perf_counter() - t1
 
         # ---- per-component matching -----------------------------------
         t2 = time.perf_counter()
-        estimator = JoinEstimator(self.stats, cand_sizes)
+        base_est = JoinEstimator(self.stats, cand_sizes,
+                                 scale=cfg.cost_model.join_est_scale)
+        # warm runs replay the exact join sizes observed on the first
+        # execution; cold runs record them as they happen (restarting the
+        # recording, so a previously failed partial run can't corrupt it)
+        warm_replay = pq.warm and bool(pq.join_seq)
+        if not warm_replay:
+            pq.join_seq = []
+        estimator = (ReplayEstimator(base_est, pq.join_seq)
+                     if warm_replay else base_est)
         qs.plan_mode = cfg.plan_mode
         tel = JoinTelemetry()
 
@@ -204,11 +394,15 @@ class Engine:
                 qs.n_estimated_joins += 1
                 qs.join_est_rows += int(est)
                 qs.join_actual_rows += int(actual)
-                qs.join_est_log_err += abs(math.log((est + 1)
-                                                    / (actual + 1)))
+                err = math.log((est + 1) / (actual + 1))
+                qs.join_est_log_err += abs(err)
+                qs.join_est_log_bias += err
+                if not warm_replay:
+                    pq.join_seq.append(int(actual))
 
         comp_tables: list[Table] = []
-        for comp, trees in zip(comps, trees_per_comp):
+        for ci, (comp, trees) in enumerate(zip(pq.comps,
+                                               pq.trees_per_comp)):
             if not query.component_edges(comp):
                 # isolated node(s)
                 tab = None
@@ -233,18 +427,25 @@ class Engine:
                 qs.dtree_work += tab.count
                 cand_tables.append(injective_filter(tab))
             counts = [t.count for t in cand_tables]
-            greedy = join_order(trees, counts)
             if cfg.plan_mode == "cost" and len(cand_tables) > 1:
-                plan = plan_table_joins(
-                    [set(tr.nodes) for tr in trees], counts, estimator,
-                    cfg.thresholds.nested_join_max,
-                    sort_orders=[t.sort_order for t in cand_tables],
-                    greedy_order=greedy)
-                order = plan.order
-                qs.plan_cost += plan.est_cost
-                qs.greedy_plan_cost += plan.greedy_cost
+                if ci in pq.comp_orders:
+                    order = pq.comp_orders[ci]
+                    pc, gc = pq.comp_costs[ci]
+                else:
+                    greedy = join_order(trees, counts)
+                    plan = plan_table_joins(
+                        [set(tr.nodes) for tr in trees], counts, base_est,
+                        cfg.thresholds.nested_join_max,
+                        sort_orders=[t.sort_order for t in cand_tables],
+                        greedy_order=greedy)
+                    order = plan.order
+                    pc, gc = plan.est_cost, plan.greedy_cost
+                    pq.comp_orders[ci] = order
+                    pq.comp_costs[ci] = (pc, gc)
+                qs.plan_cost += pc
+                qs.greedy_plan_cost += gc
             else:
-                order = greedy
+                order = join_order(trees, counts)
             tab = cand_tables[order[0]]
             for i in order[1:]:
                 qs.join_work += max(tab.count, 1) * max(cand_tables[i].count, 1)
@@ -258,12 +459,13 @@ class Engine:
 
         # ---- connection edges ------------------------------------------
         t3 = time.perf_counter()
-        final = self._process_connections(query, comps, comp_tables, qs,
-                                          record_join, tel)
+        final = self._process_connections(query, pq.comps, comp_tables, qs,
+                                          record_join, tel, pq=pq)
         qs.conn_time = time.perf_counter() - t3
         qs.sorts_performed = tel.sorts_performed
         qs.sorts_avoided = tel.sorts_avoided
 
+        pq.executions += 1
         qs.total_time = time.perf_counter() - t0
         rows = np.asarray(final.rows[: final.count])
         return MatchResult(cols=final.cols, rows=rows, stats=qs)
@@ -277,7 +479,7 @@ class Engine:
         impl = self.cfg.impl
         return "sorted" if impl == "ref" else impl
 
-    def _join(self, a: Table, b: Table, estimator: JoinEstimator,
+    def _join(self, a: Table, b: Table, estimator,
               row_limit: int | None = None, record=None,
               telemetry: JoinTelemetry | None = None) -> Table:
         """Planned equi-join: strategy by table size, capacity pre-sized
@@ -303,7 +505,8 @@ class Engine:
     def _process_connections(self, query: QueryTemplate, comps,
                              comp_tables: list[Table],
                              qs: QueryStats, record_join=None,
-                             tel: JoinTelemetry | None = None) -> Table:
+                             tel: JoinTelemetry | None = None,
+                             pq: PreparedQuery | None = None) -> Table:
         """Connection-edge evaluation (Alg. 3): intra filters first (linear
         in table size), then cross-component merges.  The merge order comes
         from planner.plan_connections (cost-based with per-edge
@@ -311,17 +514,21 @@ class Engine:
         keeps the seed's dynamic smallest-current-product rule as an A/B
         baseline.  Each edge is evaluated either by the reach-join (no
         cross product, O(matches) output work) or the seed cross+filter
-        path, per EngineConfig.connection_impl / the cost model."""
+        path, per EngineConfig.connection_impl / the cost model.  A warm
+        PreparedQuery supplies the cached edge order directly."""
         tables = list(comp_tables)
         owner = {}
         for i, comp in enumerate(comps):
             for q in comp:
                 owner[q] = i
         group = list(range(len(tables)))       # table index per original comp
-        # per-query reach cache: connection edges sharing endpoint nodes
-        # (or re-filtered after merges) reuse each other's reach sets
-        rcache = ReachCache()
+        # reach cache: connection edges sharing endpoint nodes (or
+        # re-filtered after merges) reuse each other's reach sets; a
+        # server-owned bounded cache extends the reuse across queries
+        rcache = (self.reach_cache if self.reach_cache is not None
+                  else ReachCache())
         n = self.graph.num_nodes
+        cost_model = self.cfg.cost_model
 
         def find(i):
             while group[i] != i:
@@ -335,6 +542,39 @@ class Engine:
         # group's table is replaced (filter or merge)
         dvals: dict[tuple[int, int], np.ndarray] = {}
 
+        # per-edge strategy: warm runs replay the choices recorded by the
+        # first execution (same reason as join_seq — the live calibrated
+        # cost model may have moved since, and a flipped strategy would
+        # change the join call sequence the replay depends on)
+        replay_impls = (pq.conn_impls
+                        if pq is not None and pq.executions > 0
+                        and pq.conn_impls else None)
+        impl_cursor = [0]
+        record_impls = ([] if pq is not None and replay_impls is None
+                        else None)
+
+        def edge_choice(count_a, count_b, a_vals, b_vals, c, intra):
+            """(impl, sel, feat) for one connection edge.  Warm replays
+            return the recorded impl without evaluating the cost model at
+            all (sel/feat None) — both consumers of those values, the
+            strategy choice and the calibration accrual, are disabled on
+            the warm path, so computing endpoint_reach per edge there
+            would be pure warm-latency overhead."""
+            if replay_impls is not None \
+                    and impl_cursor[0] < len(replay_impls):
+                impl = replay_impls[impl_cursor[0]]
+                impl_cursor[0] += 1
+                return impl, None, None
+            feat = conn_feat(a_vals, b_vals, c)
+            sel = sel_of(c, a_vals, b_vals)
+            impl = choose_connection_impl(
+                count_a, count_b, feat, sel, n,
+                impl=self.cfg.connection_impl, intra=intra,
+                model=cost_model)
+            if record_impls is not None:
+                record_impls.append(impl)
+            return impl, sel, feat
+
         def distinct_of(gi: int, col: int) -> np.ndarray:
             key = (gi, col)
             if key not in dvals:
@@ -345,22 +585,42 @@ class Engine:
             for k in [k for k in dvals if k[0] in groups]:
                 del dvals[k]
 
-        def conn_feat(d_a: int, d_b: int, c) -> ConnFeatures:
+        def conn_feat(a_vals: np.ndarray, b_vals: np.ndarray,
+                      c) -> ConnFeatures:
+            # candidate-aware reach: the first expansion hop uses the
+            # actual degrees of the distinct endpoint candidates
             h_fwd, h_bwd = hop_split(c.max_dist)
-            return ConnFeatures(d_a, d_b,
-                                expected_reach(self.stats, n, h_fwd),
-                                expected_reach(self.stats, n, h_bwd))
+            return ConnFeatures(len(a_vals), len(b_vals),
+                                endpoint_reach(self.stats, n, h_fwd,
+                                               a_vals, +1),
+                                endpoint_reach(self.stats, n, h_bwd,
+                                               b_vals, -1))
 
-        def record_conn(impl: str, info: ReachJoinInfo) -> None:
+        def record_conn(impl: str, info: ReachJoinInfo,
+                        sel: float | None,
+                        feat: ConnFeatures | None) -> None:
             qs.conn_strategies[impl] = qs.conn_strategies.get(impl, 0) + 1
             qs.conn_reach_pairs += info.reach_pairs
             qs.conn_connected_pairs += info.connected_pairs
             qs.conn_endpoint_rows += info.rows_a + info.rows_b
             qs.conn_endpoint_distinct += info.distinct_a + info.distinct_b
+            # predictions are accrued only for edges whose impl measures
+            # the observed side (the cross path never fills
+            # connected_pairs/reach_pairs) — otherwise every cross edge
+            # would look like "predicted N, observed 0" to the Calibrator
+            # and drag conn_sel_scale/reach_scale to the floor.  Warm
+            # replays skip the cost model entirely (sel/feat None); the
+            # Calibrator ignores warm stats anyway.
+            if impl == "reach" and sel is not None:
+                qs.conn_est_pairs += sel * info.distinct_a * info.distinct_b
+                qs.conn_est_reach_pairs += (
+                    info.distinct_a * feat.reach_fwd
+                    + info.distinct_b * feat.reach_bwd)
 
-        def sel_of(c) -> float:
+        def sel_of(c, a_vals=None, b_vals=None) -> float:
             return connection_selectivity(self.stats, n, c.max_dist,
-                                          c.bidirectional)
+                                          c.bidirectional,
+                                          a_nodes=a_vals, b_nodes=b_vals)
 
         def intra_filter(gi: int, c) -> None:
             # no early-out on an empty table: both impls handle it, and
@@ -371,9 +631,8 @@ class Engine:
             info = ReachJoinInfo(rows_a=tab.count, rows_b=tab.count,
                                  distinct_a=len(a_vals),
                                  distinct_b=len(b_vals))
-            impl = choose_connection_impl(
-                tab.count, tab.count, conn_feat(len(a_vals), len(b_vals), c),
-                sel_of(c), n, impl=self.cfg.connection_impl, intra=True)
+            impl, sel, feat = edge_choice(tab.count, tab.count,
+                                          a_vals, b_vals, c, intra=True)
             if impl == "reach":
                 tables[gi] = reach_filter(
                     self.graph, self.ni, tab, c.src, c.dst, c.max_dist,
@@ -391,7 +650,7 @@ class Engine:
                                          impl=self.cfg.impl, cache=rcache)
                 tables[gi] = filter_rows(tab, keep)
             invalidate(gi)
-            record_conn(impl, info)
+            record_conn(impl, info, sel, feat)
 
         def apply_connection(c) -> None:
             gi, gj = find(owner[c.src]), find(owner[c.dst])
@@ -405,9 +664,8 @@ class Engine:
             info = ReachJoinInfo(rows_a=ta.count, rows_b=tb.count,
                                  distinct_a=len(a_vals),
                                  distinct_b=len(b_vals))
-            impl = choose_connection_impl(
-                ta.count, tb.count, conn_feat(len(a_vals), len(b_vals), c),
-                sel_of(c), n, impl=self.cfg.connection_impl)
+            impl, sel, feat = edge_choice(ta.count, tb.count,
+                                          a_vals, b_vals, c, intra=False)
             if impl == "reach":
                 joined = injective_filter(reach_join(
                     self.graph, self.ni, ta, tb, c.src, c.dst, c.max_dist,
@@ -433,7 +691,7 @@ class Engine:
                                              cache=rcache)
                     joined = filter_rows(joined, keep)
             invalidate(gi, gj)
-            record_conn(impl, info)
+            record_conn(impl, info, sel, feat)
             group[gj] = gi
             tables[gi] = joined
 
@@ -445,19 +703,29 @@ class Engine:
             intra_filter(find(owner[c.src]), c)
 
         if inter and self.cfg.plan_mode == "cost":
-            endpoints = [(find(owner[c.src]), find(owner[c.dst]))
-                         for c in inter]
-            sels = [sel_of(c) for c in inter]
-            feats = [conn_feat(len(distinct_of(gi, c.src)),
-                               len(distinct_of(gj, c.dst)), c)
-                     for c, (gi, gj) in zip(inter, endpoints)]
-            plan = plan_connections([t.count for t in tables],
-                                    endpoints, sels, feats=feats,
-                                    num_nodes=n,
-                                    impl=self.cfg.connection_impl)
-            qs.plan_cost += plan.est_cost
-            qs.greedy_plan_cost += plan.greedy_cost
-            for k in plan.order:
+            if pq is not None and pq.conn_order is not None:
+                order, (pc, gc) = pq.conn_order, pq.conn_costs
+            else:
+                endpoints = [(find(owner[c.src]), find(owner[c.dst]))
+                             for c in inter]
+                sels = [sel_of(c, distinct_of(gi, c.src),
+                               distinct_of(gj, c.dst))
+                        for c, (gi, gj) in zip(inter, endpoints)]
+                feats = [conn_feat(distinct_of(gi, c.src),
+                                   distinct_of(gj, c.dst), c)
+                         for c, (gi, gj) in zip(inter, endpoints)]
+                plan = plan_connections([t.count for t in tables],
+                                        endpoints, sels, feats=feats,
+                                        num_nodes=n,
+                                        impl=self.cfg.connection_impl,
+                                        model=cost_model)
+                order, pc, gc = plan.order, plan.est_cost, plan.greedy_cost
+                if pq is not None:
+                    pq.conn_order = list(order)
+                    pq.conn_costs = (pc, gc)
+            qs.plan_cost += pc
+            qs.greedy_plan_cost += gc
+            for k in order:
                 apply_connection(inter[k])
         else:
             # seed baseline: smallest current candidate product first
@@ -465,6 +733,9 @@ class Engine:
                 inter.sort(key=lambda c: tables[find(owner[c.src])].count
                            * tables[find(owner[c.dst])].count)
                 apply_connection(inter.pop(0))
+
+        if record_impls is not None:
+            pq.conn_impls = record_impls
 
         # cross-join any remaining disconnected groups
         roots = sorted({find(i) for i in range(len(tables))})

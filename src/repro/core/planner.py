@@ -36,6 +36,34 @@ class Thresholds:
 
 
 @dataclass
+class CostModel:
+    """Multiplicative corrections to the planner's analytic cost model.
+
+    All factors default to 1.0 (the hardcoded model); the serving layer's
+    Calibrator learns them online from per-query QueryStats telemetry —
+    the paper's 'when to use pruning' decision, adapted to the observed
+    dataset instead of fixed constants.  Every factor only rescales an
+    *estimate*, so any value yields identical query results.
+
+      join_est_scale  multiplies JoinEstimator cardinalities (learned from
+                      the signed join-estimate log error)
+      conn_sel_scale  multiplies connection_selectivity estimates (learned
+                      from observed vs. predicted connected-pair counts)
+      reach_scale     scales the reach-join side of connection_edge_cost
+      cross_scale     scales the cross+filter side — a MANUAL A/B knob
+                      only: the cross path measures no observed
+                      counterpart, so the Calibrator never learns it
+    """
+    join_est_scale: float = 1.0
+    conn_sel_scale: float = 1.0
+    reach_scale: float = 1.0
+    cross_scale: float = 1.0
+
+
+DEFAULT_COST_MODEL = CostModel()
+
+
+@dataclass
 class PlanDecision:
     use_check: bool
     complex_query: bool
@@ -124,9 +152,11 @@ class JoinEstimator:
     CapacityOverflow -> recompile retry loop becomes the exception;
     estimator accuracy is recorded in QueryStats per query."""
 
-    def __init__(self, stats: DatasetStats, cand_sizes: dict[int, int]):
+    def __init__(self, stats: DatasetStats, cand_sizes: dict[int, int],
+                 scale: float = 1.0):
         self.stats = stats
         self.cand_sizes = cand_sizes
+        self.scale = float(scale)      # calibrated correction (CostModel)
 
     def edge_join(self, left_count: int, pred: int | None, outgoing: bool,
                   pair_count: int) -> int:
@@ -137,7 +167,7 @@ class JoinEstimator:
             fan = st.avg_fanout if st is not None else 1.0
         else:
             fan = float((st.src_fanout if outgoing else st.dst_fanout)[pred])
-        return int(left_count * max(fan, 1.0)) + 1
+        return int(left_count * max(fan, 1.0) * self.scale) + 1
 
     def table_join(self, a_count: int, b_count: int,
                    shared_cols: tuple[int, ...]) -> int:
@@ -148,7 +178,42 @@ class JoinEstimator:
             return a_count * b_count
         v = min(self.cand_sizes.get(q, 1) for q in shared_cols)
         v = max(1, min(v, max(a_count, 1), max(b_count, 1)))
-        return int(a_count * b_count / v) + 1
+        return int(a_count * b_count * self.scale / v) + 1
+
+
+class ReplayEstimator:
+    """Exact 'estimates' for warm plan-cache executions.
+
+    A query template run against an immutable dataset is deterministic, so
+    the join sizes observed on the first execution (PreparedQuery.join_seq,
+    recorded in engine call order) ARE the cardinalities of every later
+    execution.  Replaying them pre-sizes each join capacity exactly — no
+    CapacityOverflow retries and byte-identical jit shapes, which is what
+    makes the warm path recompile-free.  Falls back to the analytic
+    estimator if the call sequence ever diverges (e.g. a row_limit change).
+    """
+
+    def __init__(self, base: JoinEstimator, recorded: list[int]):
+        self.base = base
+        self.recorded = recorded
+        self.cursor = 0
+
+    def _next(self, fallback: int) -> int:
+        if self.cursor < len(self.recorded):
+            out = self.recorded[self.cursor]
+            self.cursor += 1
+            return out
+        return fallback
+
+    def edge_join(self, left_count: int, pred: int | None, outgoing: bool,
+                  pair_count: int) -> int:
+        return self._next(self.base.edge_join(left_count, pred, outgoing,
+                                              pair_count))
+
+    def table_join(self, a_count: int, b_count: int,
+                   shared_cols: tuple[int, ...]) -> int:
+        return self._next(self.base.table_join(a_count, b_count,
+                                               shared_cols))
 
 
 # ---------------------------------------------------------------------- #
@@ -365,7 +430,8 @@ class ConnFeatures:
 
 def connection_edge_cost(size_a: float, size_b: float, feat: ConnFeatures,
                          sel: float, num_nodes: int,
-                         intra: bool = False) -> tuple[float, float]:
+                         intra: bool = False,
+                         model: CostModel | None = None) -> tuple[float, float]:
     """(cross_cost, reach_cost) work proxies for one connection edge.
 
     Both strategies build the reach sets of the distinct endpoints once
@@ -376,7 +442,13 @@ def connection_edge_cost(size_a: float, size_b: float, feat: ConnFeatures,
     pair tables, the merge on reach_id (expected key matches ~
     |Pa|*|Pb|/n for independent uniform reach sets), the dedup sort of
     the match stream, and the two output-bounded equi-joins
-    (sort + merge + expand)."""
+    (sort + merge + expand).
+
+    `model` (CostModel) applies the calibrated corrections: sel is scaled
+    by conn_sel_scale, and the returned (cross, reach) costs by
+    cross_scale / reach_scale respectively."""
+    model = model if model is not None else DEFAULT_COST_MODEL
+    sel = min(1.0, sel * model.conn_sel_scale)
     sa, sb = max(float(size_a), 1.0), max(float(size_b), 1.0)
     if intra:
         pairs = sa
@@ -394,19 +466,20 @@ def connection_edge_cost(size_a: float, size_b: float, feat: ConnFeatures,
     reach = (pa + pb + _sort_cost(pa) + _sort_cost(pb)     # pair tables
              + matches + _sort_cost(max(matches, 1.0))     # merge + dedup
              + joins)
-    return cross, reach
+    return cross * model.cross_scale, reach * model.reach_scale
 
 
 def choose_connection_impl(size_a: float, size_b: float, feat: ConnFeatures,
                            sel: float, num_nodes: int, impl: str = "auto",
-                           intra: bool = False) -> str:
+                           intra: bool = False,
+                           model: CostModel | None = None) -> str:
     """Per-edge strategy choice mirroring matching.resolve_join_impl:
     'auto' picks the cheaper of cross+filter and reach-join under the
     shared work-proxy model; explicit impls force the strategy (A/B)."""
     if impl in ("cross", "reach"):
         return impl
     cross, reach = connection_edge_cost(size_a, size_b, feat, sel,
-                                        num_nodes, intra=intra)
+                                        num_nodes, intra=intra, model=model)
     return "reach" if reach < cross else "cross"
 
 
@@ -455,7 +528,8 @@ class _GroupSim:
         return prod
 
 
-def _sim_edge_cost(sim: _GroupSim, i, j, sel, feat, num_nodes, impl):
+def _sim_edge_cost(sim: _GroupSim, i, j, sel, feat, num_nodes, impl,
+                   model: CostModel | None = None):
     """Cost of processing one connection edge at the sim's current group
     sizes, under the engine's strategy rule: cross+filter work when no
     features are given (legacy model / forced cross), reach-join work when
@@ -466,12 +540,14 @@ def _sim_edge_cost(sim: _GroupSim, i, j, sel, feat, num_nodes, impl):
     cross = sa if intra else max(sa, 1.0) * max(sb, 1.0)
     if feat is None or impl == "cross":
         return cross
-    c, r = connection_edge_cost(sa, sb, feat, sel, num_nodes, intra=intra)
+    c, r = connection_edge_cost(sa, sb, feat, sel, num_nodes, intra=intra,
+                                model=model)
     return r if impl == "reach" else min(c, r)
 
 
 def _simulate_conn_order(order, sizes, endpoints, sels, feats=None,
-                         num_nodes: int = 0, impl: str = "cross"):
+                         num_nodes: int = 0, impl: str = "cross",
+                         model: CostModel | None = None):
     """Total estimated work for processing connection edges in `order`
     under the per-edge strategy rule (_sim_edge_cost).  Estimated group
     size after a connection is product * selectivity regardless of the
@@ -482,7 +558,7 @@ def _simulate_conn_order(order, sizes, endpoints, sels, feats=None,
         i, j = endpoints[idx]
         total += _sim_edge_cost(sim, i, j, sels[idx],
                                 None if feats is None else feats[idx],
-                                num_nodes, impl)
+                                num_nodes, impl, model)
         sim.apply(i, j, sels[idx])
     return total
 
@@ -504,7 +580,8 @@ def _greedy_conn_order(sizes, endpoints, sels):
 def plan_connections(sizes: list[int], endpoints: list[tuple[int, int]],
                      sels: list[float], feats: list[ConnFeatures] | None = None,
                      num_nodes: int = 0,
-                     impl: str = "auto") -> ConnectionPlan:
+                     impl: str = "auto",
+                     model: CostModel | None = None) -> ConnectionPlan:
     """Order the inter-component connection edges to minimize estimated
     work.  endpoints[k] are group indices into `sizes`; sels[k] the
     connection's estimated selectivity (stats.connection_selectivity);
@@ -519,7 +596,7 @@ def plan_connections(sizes: list[int], endpoints: list[tuple[int, int]],
 
     def cost(order):
         return _simulate_conn_order(order, sizes, endpoints, sels,
-                                    feats, num_nodes, impl)
+                                    feats, num_nodes, impl, model)
 
     greedy = _greedy_conn_order(sizes, endpoints, sels)
     greedy_cost = cost(greedy)

@@ -29,6 +29,12 @@ class DatasetStats:
     src_fanout: np.ndarray | None = None      # [P] float64
     dst_fanout: np.ndarray | None = None      # [P] float64
     avg_fanout: float = 1.0                   # fallback for wildcard preds
+    # per-node degrees: the first hop of a reach expansion from a known
+    # candidate set uses the candidates' actual degrees instead of the
+    # global average — on hub-heavy graphs the two differ by orders of
+    # magnitude, and connection-edge cost estimates inherit the gap.
+    out_degree: np.ndarray | None = None      # [N] float64
+    in_degree: np.ndarray | None = None       # [N] float64
 
     def lit_sel(self, pa: int, n: int) -> float:
         table = self.literal_selectivity.get(pa)
@@ -52,21 +58,54 @@ def expected_reach(stats: DatasetStats, num_nodes: int, hops: int) -> float:
     return min(n, float(sum(fan ** i for i in range(max(hops, 0) + 1))))
 
 
+def endpoint_reach(stats: DatasetStats, num_nodes: int, hops: int,
+                   nodes: np.ndarray | None = None,
+                   sign: int = +1) -> float:
+    """Candidate-aware expected reach-set size: the first expansion hop
+    uses the *actual* mean out-degree (sign=+1) or in-degree (sign=-1) of
+    the given endpoint candidate nodes; later hops fall back to the global
+    average fanout.
+
+      R(h) = 1 + d1 * sum_{i<h} fan^i      (capped at |N|)
+
+    With d1 == avg_fanout this collapses to expected_reach exactly, so
+    callers without candidate values lose nothing.  On hub-heavy graphs a
+    hub endpoint (d1 >> avg) gets the large reach estimate it deserves and
+    a leaf endpoint a small one — which is what lets ConnectionPlan order
+    hub edges after selective ones."""
+    n = float(max(num_nodes, 1))
+    if hops <= 0:
+        return 1.0
+    fan = max(float(stats.avg_fanout), 1.0)
+    deg = stats.out_degree if sign > 0 else stats.in_degree
+    if nodes is None or deg is None or len(nodes) == 0:
+        d1 = fan
+    else:
+        d1 = float(np.mean(deg[np.asarray(nodes, dtype=np.int64)]))
+    d1 = max(d1, 0.0)
+    series = float(sum(fan ** i for i in range(hops)))   # 1 + fan + ...
+    return min(n, 1.0 + d1 * series)
+
+
 def connection_selectivity(stats: DatasetStats, num_nodes: int, d_c: int,
-                           bidirectional: bool = False) -> float:
+                           bidirectional: bool = False,
+                           a_nodes: np.ndarray | None = None,
+                           b_nodes: np.ndarray | None = None) -> float:
     """P(random node pair is connected within d_c hops) — the cardinality
     feature the whole-query join plan uses to order connection edges.
 
     Mirrors Algorithm 3's split: a forward reach set within ceil(d_c/2)
     hops must intersect a backward reach set within the remaining hops.
-    Expected reach-set size is expected_reach (geometric fanout series),
-    and two independent uniform sets of sizes R_f, R_b over n nodes
-    intersect with probability ~= R_f * R_b / n."""
+    Expected reach-set sizes come from endpoint_reach: candidate-aware
+    (mean degree of the actual endpoint candidates for the first hop) when
+    a_nodes/b_nodes are given, the global geometric fanout series
+    otherwise.  Two independent uniform sets of sizes R_f, R_b over n
+    nodes intersect with probability ~= R_f * R_b / n."""
     from .connectivity import hop_split
     h_fwd, h_bwd = hop_split(d_c)
     n = max(num_nodes, 1)
-    sel = min(1.0, expected_reach(stats, n, h_fwd)
-              * expected_reach(stats, n, h_bwd) / n)
+    sel = min(1.0, endpoint_reach(stats, n, h_fwd, a_nodes, +1)
+              * endpoint_reach(stats, n, h_bwd, b_nodes, -1) / n)
     if bidirectional:
         sel = min(1.0, 2.0 * sel)
     return max(sel, 1.0 / (float(n) * n))
@@ -96,6 +135,14 @@ def predicate_fanout(graph: RDFGraph) -> tuple[np.ndarray, np.ndarray, float]:
                   where=counts > 0)
     avg = float(graph.num_edges / max(graph.num_nodes, 1))
     return src_fan, dst_fan, max(avg, 1.0)
+
+
+def node_degrees(graph: RDFGraph) -> tuple[np.ndarray, np.ndarray]:
+    """Per-node (out_degree, in_degree) over all edges — the first-hop
+    branching factors endpoint_reach uses for candidate-aware reach."""
+    out_deg = np.bincount(graph.src, minlength=graph.num_nodes)
+    in_deg = np.bincount(graph.dst, minlength=graph.num_nodes)
+    return out_deg.astype(np.float64), in_deg.astype(np.float64)
 
 
 def literal_selectivity(graph: RDFGraph, ns=(1, 2, 3, 4, 5, 6, 8),
@@ -226,6 +273,7 @@ def literal_diversity(graph: RDFGraph, m_sample: int = 100_000,
 def compute_stats(graph: RDFGraph, m_sample: int = 100_000) -> DatasetStats:
     tp = _find_type_predicate(graph)
     src_fan, dst_fan, avg_fan = predicate_fanout(graph)
+    out_deg, in_deg = node_degrees(graph)
     return DatasetStats(
         pred_selectivity=predicate_selectivity(graph),
         literal_selectivity=literal_selectivity(graph),
@@ -236,4 +284,6 @@ def compute_stats(graph: RDFGraph, m_sample: int = 100_000) -> DatasetStats:
         src_fanout=src_fan,
         dst_fanout=dst_fan,
         avg_fanout=avg_fan,
+        out_degree=out_deg,
+        in_degree=in_deg,
     )

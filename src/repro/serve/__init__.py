@@ -1,0 +1,33 @@
+"""Query serving subsystem: template plan cache, shape-batched execution,
+and self-calibrating pruning decisions.
+
+RDF-ℏ's thesis — signature pruning should be applied *selectively* per
+dataset and per query template (§4.3) — only pays off in a serving
+setting where the same templates arrive repeatedly and the system can
+learn from its own executions.  This package is that setting:
+
+  * `plan_cache`  — canonical template fingerprints and an LRU cache of
+                    `PreparedQuery` objects (the engine's prepare/execute
+                    split), so repeat templates skip planning and
+                    recompilation entirely.
+  * `batching`    — shape-batched execution: queries bucketed by template
+                    fingerprint and pow2 capacity class, each bucket
+                    executed once through shared padded shapes.
+  * `calibrate`   — online calibration of the τ1–τ3 pruning thresholds
+                    and the planner cost-model constants from per-query
+                    QueryStats telemetry.
+  * `server`      — the user-facing `QueryServer` (submit / submit_many,
+                    sync + async result futures, LRU-bounded plan and
+                    reach caches, p50/p99 latency + cache-hit telemetry).
+"""
+from .plan_cache import (PreparedQuery, PlanCache, template_fingerprint,
+                         canonicalize, prepare_cached, dataset_key)
+from .batching import ShapeBatcher, BatchTelemetry
+from .calibrate import Calibrator, Ewma
+from .server import QueryServer, ResultFuture
+
+__all__ = [
+    "PreparedQuery", "PlanCache", "template_fingerprint", "canonicalize",
+    "prepare_cached", "dataset_key", "ShapeBatcher", "BatchTelemetry",
+    "Calibrator", "Ewma", "QueryServer", "ResultFuture",
+]

@@ -1,0 +1,256 @@
+"""QueryServer: the user-facing serving API.
+
+Wraps one Engine over one immutable dataset with:
+
+  * a plan cache (`plan_cache.PlanCache`, LRU) of PreparedQuery objects
+    keyed by canonical template fingerprint — repeat templates skip
+    planning and recompilation;
+  * a server-owned LRU-bounded reach cache installed on the engine, so
+    connection edges of *different* queries sharing endpoint nodes reuse
+    reach sets;
+  * shape-batched execution (`batching.ShapeBatcher`): submitted queries
+    are bucketed by (fingerprint, pow2 capacity class) at flush time,
+    each bucket executed once, results fanned out (renumbered clients get
+    their own column mapping);
+  * online calibration (`calibrate.Calibrator`) of the τ thresholds and
+    cost-model constants from the executed queries' own stats;
+  * latency/cache telemetry: p50/p99 overall and split cold vs. warm,
+    plan/reach cache hit rates, batch dedup factor, and a rollup of
+    QueryStats.to_dict() sums.
+
+Submission is future-based: `submit` enqueues and returns a
+`ResultFuture`; execution happens at `flush()` (called explicitly, by
+`submit_many(..., wait=True)`, or lazily by the first `.result()`).
+`query()` is the synchronous one-call convenience.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import replace
+
+import numpy as np
+
+from ..core.engine import Engine, EngineConfig, MatchResult, make_engine
+from ..core.connectivity import ReachCache
+from ..core.matching import _pow2
+from ..core.query import QueryTemplate
+from .plan_cache import PlanCache, dataset_key, prepare_cached, remap_result
+from .batching import ShapeBatcher
+from .calibrate import Calibrator
+
+
+class ResultFuture:
+    """Handle for one submitted query.  `result()` drains the server's
+    pending batch if this future is still unresolved (lazy flush), so
+    async submission needs no background thread.  An execution failure
+    resolves the future with the error (re-raised by `result()`) instead
+    of aborting the flush — one poisoned bucket cannot orphan the rest
+    of the batch."""
+
+    def __init__(self, server: "QueryServer", query: QueryTemplate):
+        self._server = server
+        self.query = query
+        self._result: MatchResult | None = None
+        self._error: BaseException | None = None
+        self.latency: float | None = None   # seconds, set at resolution
+        self.cache_hit: bool = False        # plan-cache hit at flush time
+
+    def done(self) -> bool:
+        return self._result is not None or self._error is not None
+
+    def result(self) -> MatchResult:
+        if not self.done():
+            self._server.flush()
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None, "flush did not resolve future"
+        return self._result
+
+    def _resolve(self, result: MatchResult, latency: float) -> None:
+        self._result = result
+        self.latency = latency
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+
+
+class QueryServer:
+    """Serve template queries over one RDF graph.
+
+    calibrate=False freezes the thresholds/cost model at their configured
+    values (A/B baseline); batching=False executes submissions one at a
+    time in arrival order (still through the plan cache).  `cfg`, when
+    given, is the complete engine configuration — `variant` is then
+    ignored and passing thresholds/impl alongside raises."""
+
+    def __init__(self, graph, variant: str = "rdf_h", ni=None, stats=None,
+                 thresholds=None, cfg: EngineConfig | None = None,
+                 impl: str = "auto",
+                 plan_cache_size: int = 64,
+                 reach_cache_size: int = 200_000,
+                 calibrate: bool = True, batching: bool = True,
+                 latency_window: int = 4096):
+        if cfg is not None:
+            # cfg is the complete engine configuration: silently dropping
+            # a tuned thresholds/impl next to it would corrupt A/B runs
+            if thresholds is not None or impl != "auto":
+                raise ValueError("pass either cfg or thresholds/impl, "
+                                 "not both (cfg already carries them)")
+            if ni is None:
+                from ..core.ni_index import build_ni_index
+                ni = build_ni_index(graph, d_max=cfg.d_check)
+            self.engine = Engine(graph, ni, cfg, stats=stats)
+        else:
+            self.engine = make_engine(graph, variant, ni=ni, stats=stats,
+                                      thresholds=thresholds, impl=impl)
+        # the calibrator mutates Thresholds/CostModel in place so every
+        # later plan sees calibrated values — give the engine private
+        # copies first, so a caller-supplied (possibly shared or tuned)
+        # object is never corrupted by this server's online calibration
+        if calibrate:
+            self.engine.cfg.thresholds = replace(self.engine.cfg.thresholds)
+            self.engine.cfg.cost_model = replace(self.engine.cfg.cost_model)
+        self.calibrator = (Calibrator(self.engine.cfg.thresholds,
+                                      self.engine.cfg.cost_model)
+                           if calibrate else None)
+        self.plan_cache = PlanCache(plan_cache_size)
+        self.engine.reach_cache = ReachCache(max_entries=reach_cache_size)
+        self.batcher = ShapeBatcher()
+        self.batching = batching
+        self.dataset_id = dataset_key(graph)
+        self._pending: list[ResultFuture] = []
+        self._lat_all: deque = deque(maxlen=latency_window)
+        self._lat_cold: deque = deque(maxlen=latency_window)
+        self._lat_warm: deque = deque(maxlen=latency_window)
+        self._rollup: dict = {}
+        self.queries_served = 0
+        self.query_errors = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, query: QueryTemplate) -> ResultFuture:
+        f = ResultFuture(self, query)
+        self._pending.append(f)
+        return f
+
+    def submit_many(self, queries, wait: bool = False) -> list[ResultFuture]:
+        futures = [self.submit(q) for q in queries]
+        if wait:
+            self.flush()
+        return futures
+
+    def query(self, query: QueryTemplate) -> MatchResult:
+        """Synchronous single-query convenience."""
+        return self.submit(query).result()
+
+    # ------------------------------------------------------------------ #
+    def _version(self) -> int:
+        return self.calibrator.version if self.calibrator is not None else 0
+
+    def flush(self) -> None:
+        """Execute every pending submission (batched or serial)."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return
+        # canonicalize + plan-cache lookup per future; a failure here
+        # resolves that future with the error and spares the rest
+        prepped = []
+        for f in pending:
+            t0 = time.perf_counter()
+            try:
+                pq, order, hit = prepare_cached(self.engine, f.query,
+                                                self.plan_cache,
+                                                self.dataset_id,
+                                                self._version())
+            except Exception as e:           # noqa: BLE001
+                f._fail(e)
+                self.query_errors += 1
+                continue
+            f.cache_hit = hit
+            prepped.append((f, pq, order, time.perf_counter() - t0))
+        if self.batching:
+            for f, pq, order, prep_s in prepped:
+                cap_class = _pow2(sum(pq.cand_sizes.values()))
+                self.batcher.add((f, pq, order, prep_s),
+                                 pq.fingerprint, cap_class)
+            for (f, pq, order, prep_s), (res, lat) in \
+                    self.batcher.flush(self._execute_item):
+                self._finish(f, res, order, prep_s + lat)
+        else:
+            for f, pq, order, prep_s in prepped:
+                res, lat = self._execute_item((f, pq, order, prep_s))
+                self._finish(f, res, order, prep_s + lat)
+
+    def _execute_item(self, item):
+        """Execute one bucket representative.  Returns (MatchResult |
+        exception, latency) — failures are values so that one bad bucket
+        resolves only its own futures with the error."""
+        _, pq, _, _ = item
+        t0 = time.perf_counter()
+        try:
+            res = self.engine.execute_prepared(pq)
+        except Exception as e:               # noqa: BLE001
+            return e, time.perf_counter() - t0
+        lat = time.perf_counter() - t0
+        if self.calibrator is not None:
+            self.calibrator.observe(res.stats)
+        self._observe_stats(res.stats)
+        return res, lat
+
+    def _finish(self, f: ResultFuture, res, order, latency: float) -> None:
+        if isinstance(res, BaseException):
+            f._fail(res)
+            self.query_errors += 1
+            return
+        f._resolve(remap_result(res, order), latency)
+        self.queries_served += 1
+        self._lat_all.append(latency)
+        (self._lat_warm if res.stats.cache_hit
+         else self._lat_cold).append(latency)
+
+    def _observe_stats(self, qs) -> None:
+        for k, v in qs.to_dict().items():
+            if isinstance(v, bool):
+                self._rollup[k] = self._rollup.get(k, 0) + int(v)
+            elif isinstance(v, (int, float)):
+                self._rollup[k] = self._rollup.get(k, 0) + v
+            elif isinstance(v, dict) and k in ("join_strategies",
+                                               "conn_strategies"):
+                d = self._rollup.setdefault(k, {})
+                for kk, vv in v.items():
+                    d[kk] = d.get(kk, 0) + vv
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _pct(lat, q) -> float:
+        return float(np.percentile(np.asarray(lat), q)) if lat else 0.0
+
+    def telemetry(self) -> dict:
+        """One JSON-serializable snapshot of everything the server knows
+        about itself: latency percentiles (seconds), cache hit rates,
+        batching dedup, calibration state, and the QueryStats rollup."""
+        rc = self.engine.reach_cache
+        out = {
+            "queries_served": self.queries_served,
+            "query_errors": self.query_errors,
+            "latency": {
+                "p50": self._pct(self._lat_all, 50),
+                "p99": self._pct(self._lat_all, 99),
+                "cold_p50": self._pct(self._lat_cold, 50),
+                "cold_p99": self._pct(self._lat_cold, 99),
+                "warm_p50": self._pct(self._lat_warm, 50),
+                "warm_p99": self._pct(self._lat_warm, 99),
+                "n_cold": len(self._lat_cold),
+                "n_warm": len(self._lat_warm),
+            },
+            "plan_cache": self.plan_cache.snapshot(),
+            "reach_cache": {
+                "entries": len(rc), "hits": rc.hits, "misses": rc.misses,
+                "evictions": rc.evictions,
+            },
+            "batch": self.batcher.telemetry.snapshot(),
+            "calibration": (None if self.calibrator is None
+                            else self.calibrator.snapshot()),
+            "stats_rollup": dict(self._rollup),
+        }
+        return out

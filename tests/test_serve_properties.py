@@ -1,0 +1,79 @@
+"""Property-based serving identity (hypothesis): any randomized
+interleaved stream of repeated / renumbered templates, under any
+combination of batching and calibration, returns result sets identical to
+a fresh single-query engine — and the canonical fingerprint is invariant
+under arbitrary node renumbering."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import make_engine, Thresholds  # noqa: E402
+from repro.core.query import (QueryTemplate, QueryEdge,  # noqa: E402
+                              ConnectionEdge)
+from repro.data import random_graph, random_query  # noqa: E402
+from repro.serve import QueryServer, template_fingerprint  # noqa: E402
+
+_GRAPH = random_graph(n_nodes=80, n_edges=220, n_preds=3,
+                      n_literals=20, seed=9)
+_POOL = [random_query(_GRAPH, size=4, seed=40 + i, n_connection=i % 2,
+                      d_c=2) for i in range(4)]
+_FRESH = make_engine(_GRAPH, "rdf_h", impl="ref")
+_ORACLE = [_FRESH.execute(q).result_set() for q in _POOL]
+
+
+def _permute(query, perm):
+    inv = {p: i for i, p in enumerate(perm)}
+    return QueryTemplate(
+        keywords=[query.keywords[inv[j]] for j in range(len(perm))],
+        edges=[QueryEdge(perm[e.src], perm[e.dst], e.pred)
+               for e in query.edges],
+        connections=[ConnectionEdge(perm[c.src], perm[c.dst], c.max_dist,
+                                    c.bidirectional)
+                     for c in query.connections])
+
+
+@settings(max_examples=12, deadline=None)
+@given(stream=st.lists(st.integers(0, len(_POOL) - 1), min_size=1,
+                       max_size=10),
+       chunks=st.integers(1, 4),
+       batching=st.booleans(), calibrate=st.booleans(),
+       miscalibrated=st.booleans())
+def test_interleaved_stream_identity(stream, chunks, batching, calibrate,
+                                     miscalibrated):
+    th = (Thresholds(tau_iter=0.5, tau_join=0.5, tau_sel=0.01)
+          if miscalibrated else None)
+    srv = QueryServer(_GRAPH, impl="ref", batching=batching,
+                      calibrate=calibrate, thresholds=th)
+    queries = [_POOL[i] for i in stream]
+    step = max(1, len(queries) // chunks)
+    futs = []
+    for s in range(0, len(queries), step):
+        futs.extend(srv.submit_many(queries[s:s + step], wait=True))
+    for i, f in zip(stream, futs):
+        assert f.result().result_set() == _ORACLE[i]
+    assert srv.queries_served == len(stream)
+
+
+@settings(max_examples=20, deadline=None)
+@given(idx=st.integers(0, len(_POOL) - 1), seed=st.integers(0, 1000))
+def test_fingerprint_renumbering_invariance(idx, seed):
+    q = _POOL[idx]
+    perm = np.random.default_rng(seed).permutation(q.num_nodes).tolist()
+    qp = _permute(q, perm)
+    assert template_fingerprint(qp) == template_fingerprint(q)
+
+
+@settings(max_examples=8, deadline=None)
+@given(idx=st.integers(0, len(_POOL) - 1), seed=st.integers(0, 1000))
+def test_renumbered_submission_identity(idx, seed):
+    """A renumbered template served through a cache warmed by the
+    original numbering still returns its own correctly-labeled rows."""
+    q = _POOL[idx]
+    perm = np.random.default_rng(seed).permutation(q.num_nodes).tolist()
+    qp = _permute(q, perm)
+    srv = QueryServer(_GRAPH, impl="ref")
+    srv.query(q)                          # warm the cache entry
+    assert srv.query(qp).result_set() == _FRESH.execute(qp).result_set()
+    assert srv.telemetry()["plan_cache"]["entries"] == 1

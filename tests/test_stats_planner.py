@@ -2,7 +2,9 @@
 import numpy as np
 
 from repro.core import (compute_stats, make_engine, Thresholds,
-                        neighborhood_selectivity)
+                        neighborhood_selectivity, connection_selectivity,
+                        expected_reach, endpoint_reach, plan_connections,
+                        ConnFeatures, RDFGraph)
 from repro.core.planner import decide
 from repro.core.decompose import decompose
 from repro.data import DATASETS, random_query
@@ -86,6 +88,95 @@ def test_bloom_prefilter_engine_equality():
         eng = make_engine(g, "spath_ni2", impl="ref")
         eng.cfg.use_bloom = True
         assert eng.execute(q).result_set() == want
+
+
+# ------------------- candidate-aware reach estimates ------------------- #
+def _hub_graph(n_hub_edges=400, n_chain=400, n_mid=100, mid_deg=10):
+    """Skewed fixture: one hub with out-degree n_hub_edges, a sparse
+    degree-1 chain, and mid-degree filler nodes that pull the global
+    average fanout to ~2 — so the hub sits far above the average and the
+    chain below it, which is exactly what the global geometric estimate
+    flattens away."""
+    triples = [("hub/0", "pH", f"leaf/{i:04d}") for i in range(n_hub_edges)]
+    triples += [(f"chain/{i:04d}", "pC", f"chain/{(i + 1) % n_chain:04d}")
+                for i in range(n_chain)]
+    triples += [(f"mid/{i:04d}", "pM", f"mid/{(i * mid_deg + k) % n_mid:04d}")
+                for i in range(n_mid) for k in range(1, mid_deg + 1)]
+    return RDFGraph.from_triples(triples, literal_objects=set())
+
+
+def test_endpoint_reach_defaults_to_expected_reach():
+    """Without candidate nodes the two estimates agree exactly (the
+    candidate-aware formula collapses to the geometric series)."""
+    st = _stats("dblp", scale=0.03)
+    n = 10_000
+    for hops in range(5):
+        assert np.isclose(endpoint_reach(st, n, hops),
+                          expected_reach(st, n, hops))
+
+
+def test_endpoint_reach_separates_hubs_from_leaves():
+    g = _hub_graph()
+    st = compute_stats(g)
+    idmap = make_engine(g, "stwig+").idmap
+    hub = np.asarray([idmap.interval("hub/")[0]])
+    lo, hi = idmap.interval("chain/")
+    chain = np.arange(lo, lo + 50)
+    n = g.num_nodes
+    r_hub = endpoint_reach(st, n, 1, hub, +1)
+    r_chain = endpoint_reach(st, n, 1, chain, +1)
+    r_global = expected_reach(st, n, 1)
+    # the hub's one-hop reach is ~400, a chain node's ~2; the global
+    # average estimate cannot tell them apart
+    assert r_hub > 100 * r_chain
+    assert r_chain < r_global < r_hub
+
+
+def test_connection_selectivity_candidate_aware():
+    g = _hub_graph()
+    st = compute_stats(g)
+    idmap = make_engine(g, "stwig+").idmap
+    hub = np.asarray([idmap.interval("hub/")[0]])
+    lo, _ = idmap.interval("chain/")
+    chain = np.arange(lo, lo + 50)
+    n = g.num_nodes
+    sel_global = connection_selectivity(st, n, 2)
+    sel_hub = connection_selectivity(st, n, 2, a_nodes=hub, b_nodes=hub)
+    sel_chain = connection_selectivity(st, n, 2, a_nodes=chain,
+                                       b_nodes=chain)
+    assert sel_hub > sel_global > sel_chain
+
+
+def test_connection_plan_orders_selective_edge_first_on_hub_graph():
+    """Two connection edges with identical d_c and group sizes: one
+    between hub-heavy endpoint sets (non-selective: huge reach), one
+    between leaf sets (selective).  The global estimate cannot rank them;
+    candidate-aware features put the selective edge first, so the
+    expensive hub merge runs on the already-shrunk tables."""
+    g = _hub_graph()
+    st = compute_stats(g)
+    idmap = make_engine(g, "stwig+").idmap
+    hub = np.asarray([idmap.interval("hub/")[0]])
+    lo, _ = idmap.interval("chain/")
+    chain = np.arange(lo, lo + 50)
+    n = g.num_nodes
+    sizes = [1000, 1000, 1000]
+    # a chain of merges sharing group 1: edge 0 = hub-hub (non-selective,
+    # its merge barely shrinks), edge 1 = leaf-leaf (selective)
+    endpoints = [(0, 1), (1, 2)]
+    sels = [connection_selectivity(st, n, 2, a_nodes=hub, b_nodes=hub),
+            connection_selectivity(st, n, 2, a_nodes=chain, b_nodes=chain)]
+    feats = [ConnFeatures(50, 50, endpoint_reach(st, n, 1, hub, +1),
+                          endpoint_reach(st, n, 1, hub, -1)),
+             ConnFeatures(50, 50, endpoint_reach(st, n, 1, chain, +1),
+                          endpoint_reach(st, n, 1, chain, -1))]
+    plan = plan_connections(sizes, endpoints, sels, feats=feats,
+                            num_nodes=n)
+    assert plan.order[0] == 1           # selective leaf edge first
+    # with the global estimate both edges look identical (same d_c, same
+    # sizes) — the candidate-aware ranking is strictly more informed
+    sel_g = connection_selectivity(st, n, 2)
+    assert sels[0] > sel_g > sels[1]
 
 
 def test_tune_thresholds_grid():
