@@ -7,6 +7,12 @@ batch dedup, and the calibration state the server learned online.
 
     PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_queries.py \\
         --dataset dblp --scale 0.05 --templates 6 --queries 60
+
+Governed serving (deadlines + admission control + degradation ladder +
+circuit breaker) with optional injected chaos:
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_queries.py \\
+        --governed --deadline-ms 250 --max-pending 6 --chaos
 """
 import argparse
 import json
@@ -14,7 +20,7 @@ import json
 import numpy as np
 
 from repro.data import DATASETS, random_query
-from repro.serve import QueryServer
+from repro.serve import GovernorConfig, QueryServer, ServingError
 
 
 def main():
@@ -30,8 +36,24 @@ def main():
                     help="template popularity skew (higher = hotter head)")
     ap.add_argument("--no-batch", action="store_true")
     ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--governed", action="store_true",
+                    help="enable the resource governor (deadlines, "
+                         "admission control, ladder, circuit breaker)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-execution-attempt deadline (implies "
+                         "--governed)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission-control pending bound (implies "
+                         "--governed)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a persistent sort-merge kernel fault "
+                         "during the stream: traffic is served exactly "
+                         "through the degradation ladder (implies "
+                         "--governed)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    governed = (args.governed or args.chaos or args.deadline_ms is not None
+                or args.max_pending is not None)
 
     print(f"== build {args.dataset} graph (scale={args.scale}) ==")
     g = DATASETS[args.dataset](scale=args.scale, seed=1)
@@ -47,31 +69,77 @@ def main():
                        args.templates) - 1
     stream = [pool[r] for r in ranks]
 
+    srv_kw = {}
+    if governed:
+        srv_kw["governor"] = GovernorConfig(
+            deadline_s=(args.deadline_ms / 1e3
+                        if args.deadline_ms is not None else None),
+            max_pending=args.max_pending)
+    if args.chaos:
+        # route joins through the sort-merge kernel so the injected
+        # fault actually lands (tiny tables otherwise go nested)
+        from repro.core import Thresholds
+        from repro.core.engine import EngineConfig
+        srv_kw["cfg"] = EngineConfig(
+            check_policy="selective", d_check=2, impl="ref",
+            thresholds=Thresholds(nested_join_max=1),
+            join_impl="sorted", connection_impl="reach")
     srv = QueryServer(g, batching=not args.no_batch,
-                      calibrate=not args.no_calibrate)
+                      calibrate=not args.no_calibrate, **srv_kw)
     print(f"== serve {args.queries} queries "
-          f"(zipf alpha={args.zipf}, batching={srv.batching}) ==")
+          f"(zipf alpha={args.zipf}, batching={srv.batching}, "
+          f"governed={governed}, chaos={args.chaos}) ==")
+
+    from contextlib import nullcontext
+    if args.chaos:
+        from repro.testing import Fault, FaultInjector
+        injector = FaultInjector(Fault("kernel_dispatch", "raise", every=1))
+    else:
+        injector = nullcontext()
+
     # chunked submission: each flush is one shape-batched admission window
     chunk = 8
-    matches = 0
-    for s in range(0, len(stream), chunk):
-        futs = srv.submit_many(stream[s:s + chunk], wait=True)
-        matches += sum(f.result().count for f in futs)
+    matches, errors = 0, {}
+    with injector:
+        for s in range(0, len(stream), chunk):
+            futs = srv.submit_many(stream[s:s + chunk], wait=True)
+            for f in futs:
+                try:
+                    matches += f.result().count
+                except ServingError as e:
+                    kind = type(e).__name__
+                    errors[kind] = errors.get(kind, 0) + 1
 
     t = srv.telemetry()
     lat, pc, b = t["latency"], t["plan_cache"], t["batch"]
-    print(f"   matches={matches}")
+    print(f"   matches={matches}  typed-errors={errors or 0}")
     print(f"   latency p50={lat['p50']*1e3:.1f}ms p99={lat['p99']*1e3:.1f}ms")
     print(f"   cold p50={lat['cold_p50']*1e3:.1f}ms ({lat['n_cold']} queries)"
           f"  warm p50={lat['warm_p50']*1e3:.1f}ms ({lat['n_warm']} queries)")
     print(f"   plan cache: {pc['hits']}/{pc['hits'] + pc['misses']} hits "
           f"({pc['hit_rate']:.0%}), {pc['entries']} entries")
     print(f"   batching: {b['queries']} queries -> {b['executions']} "
-          f"executions ({b['dedup_saved']} deduped)")
+          f"executions ({b['dedup_saved']} deduped, {b['shed']} shed)")
+    rc = t["reach_cache"]
+    if rc is not None:
+        print(f"   reach cache: {rc['entries']} entries, {rc['bytes']}B"
+              f" (budget {rc['max_bytes']})")
     if t["calibration"] is not None:
         print("   calibration:", json.dumps(
             {k: round(v, 4) if isinstance(v, float) else v
              for k, v in t["calibration"].items()}))
+    gov = t.get("governor")
+    if gov is not None:
+        print(f"   governor: shed_submit={gov['shed_submit']} "
+              f"shed_flush={gov['shed_flush']} "
+              f"budget_exceeded={gov['budget_exceeded']} "
+              f"degraded={gov['degraded_queries']} "
+              f"by_rung={gov['degraded_by_rung']} "
+              f"exhausted={gov['exhausted']}")
+        br = gov["breaker"]
+        print(f"   breaker: trips={br['trips']} denials={br['denials']} "
+              f"probes={br['probes']} recoveries={br['recoveries']} "
+              f"open={br['open']}")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ from .stats import DatasetStats, compute_stats, predicate_selectivity, \
     endpoint_reach, node_degrees
 from .planner import Thresholds, CostModel, PlanDecision, decide, \
     neighborhood_selectivity, tune_thresholds, JoinEstimator, \
-    ReplayEstimator, JoinPlan, PlannedStep, plan_table_joins, \
+    ReplayEstimator, CapEstimate, JoinPlan, PlannedStep, plan_table_joins, \
     simulate_join_order, ConnectionPlan, plan_connections, ConnFeatures, \
     connection_edge_cost, choose_connection_impl
 from .engine import Engine, EngineConfig, MatchResult, PreparedQuery, \

@@ -150,41 +150,70 @@ class ReachCache:
     of one query, so edges with common endpoints never recompute a reach
     set — the caches `connectivity_mask` used to rebuild per call,
     hoisted).  The serving layer instead installs one server-owned cache
-    with `max_entries` set, extending the reuse across queries (the
-    dataset is immutable, so entries never go stale) with LRU eviction
-    bounding the footprint.  The bound is an ENTRY count, not bytes: one
-    entry is a reach set of up to |N| ids, so hub-heavy graphs at large
-    |N| want a smaller max_entries (a byte-budget bound is an open
-    item).  Two mirrored stores (python sets for per-pair
+    with `max_entries` and/or `max_bytes` set, extending the reuse across
+    queries (the dataset is immutable, so entries never go stale) with
+    LRU eviction bounding the footprint.  `max_entries` bounds the key
+    count; `max_bytes` bounds the accounted payload bytes — entry-count
+    bounds alone break on hub-heavy graphs, where one entry holds a reach
+    set of up to |N| ids.  Accounting: `arr.nbytes` for the array mirror,
+    8 bytes/element for the set mirror (the int32 payload a set entry
+    would occupy as an array plus equal slack for set overhead — an
+    estimate, not a measurement, but monotone in set size which is what
+    eviction needs).  Two mirrored stores (python sets for per-pair
     intersections, np arrays for the reach-join pair tables) convert
-    lazily between each other; both stores of an evicted key go
-    together."""
+    lazily between each other; both stores of an evicted key go together,
+    and a key's charge covers whichever mirrors currently exist."""
     sets: dict = field(default_factory=dict)
     arrays: dict = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
     evictions: int = 0
     max_entries: int | None = None      # LRU bound on distinct keys
+    max_bytes: int | None = None        # LRU bound on accounted bytes
+    total_bytes: int = 0
     _lru: OrderedDict = field(default_factory=OrderedDict, repr=False)
+    _nbytes: dict = field(default_factory=dict, repr=False)
 
     def __len__(self) -> int:
         return len(self._lru)
+
+    def _account(self, key) -> None:
+        """Re-derive `key`'s byte charge from its live mirrors."""
+        b = 0
+        a = self.arrays.get(key)
+        if a is not None:
+            b += int(a.nbytes)
+        s = self.sets.get(key)
+        if s is not None:
+            b += 8 * len(s)
+        self.total_bytes += b - self._nbytes.get(key, 0)
+        self._nbytes[key] = b
+
+    def _evict(self, key) -> None:
+        self.sets.pop(key, None)
+        self.arrays.pop(key, None)
+        self.total_bytes -= self._nbytes.pop(key, 0)
+        self.evictions += 1
 
     def _touch(self, key) -> None:
         self._lru[key] = None
         self._lru.move_to_end(key)
         if self.max_entries is not None:
             while len(self._lru) > self.max_entries:
-                old, _ = self._lru.popitem(last=False)
-                self.sets.pop(old, None)
-                self.arrays.pop(old, None)
-                self.evictions += 1
+                self._evict(self._lru.popitem(last=False)[0])
+        if self.max_bytes is not None:
+            # never evict the just-touched key: a single entry larger
+            # than the whole budget stays as a cache-of-one (evicting it
+            # would thrash the entry currently in use)
+            while self.total_bytes > self.max_bytes and len(self._lru) > 1:
+                self._evict(self._lru.popitem(last=False)[0])
 
     def get_set(self, node: int, hops: int, sign: int) -> set | None:
         key = (node, hops, sign)
         s = self.sets.get(key)
         if s is None and key in self.arrays:
             s = self.sets[key] = set(int(x) for x in self.arrays[key])
+            self._account(key)
         self.hits += s is not None
         self.misses += s is None
         if s is not None:
@@ -192,8 +221,10 @@ class ReachCache:
         return s
 
     def put_set(self, node: int, hops: int, sign: int, s: set) -> None:
-        self.sets[(node, hops, sign)] = s
-        self._touch((node, hops, sign))
+        key = (node, hops, sign)
+        self.sets[key] = s
+        self._account(key)
+        self._touch(key)
 
     def get_array(self, node: int, hops: int, sign: int) -> np.ndarray | None:
         key = (node, hops, sign)
@@ -201,6 +232,7 @@ class ReachCache:
         if a is None and key in self.sets:
             s = self.sets[key]
             a = self.arrays[key] = np.fromiter(s, np.int32, len(s))
+            self._account(key)
         self.hits += a is not None
         self.misses += a is None
         if a is not None:
@@ -209,8 +241,10 @@ class ReachCache:
 
     def put_array(self, node: int, hops: int, sign: int,
                   arr: np.ndarray) -> None:
-        self.arrays[(node, hops, sign)] = arr
-        self._touch((node, hops, sign))
+        key = (node, hops, sign)
+        self.arrays[key] = arr
+        self._account(key)
+        self._touch(key)
 
 
 def _exact_reach(graph: RDFGraph, ni: NIIndex, node: int, hops: int,

@@ -119,6 +119,11 @@ class QueryStats:
     conn_endpoint_distinct: int = 0     # Σ distinct endpoint nodes seen
     conn_est_pairs: float = 0.0         # Σ predicted connected pairs
     conn_est_reach_pairs: float = 0.0   # Σ predicted pair-table rows
+    # serving-tier degradation ladder (repro.serve.governor): names of the
+    # rungs walked before this execution succeeded, in order — empty for a
+    # healthy primary execution.  The Calibrator skips degraded stats.
+    degraded_steps: list = field(default_factory=list)
+    budget_checks: int = 0              # cooperative budget checkpoints hit
 
     # Stable flat schema: scalar counters first, then the two strategy
     # dicts and a plan summary.  Server telemetry rollups and benchmarks
@@ -138,6 +143,7 @@ class QueryStats:
         "conn_reach_pairs", "conn_connected_pairs",
         "conn_endpoint_rows", "conn_endpoint_distinct",
         "conn_est_pairs", "conn_est_reach_pairs",
+        "budget_checks",
     )
 
     def to_dict(self) -> dict:
@@ -151,6 +157,7 @@ class QueryStats:
                 out[k] = float(v)
             else:
                 out[k] = int(v)
+        out["degraded_steps"] = [str(s) for s in self.degraded_steps]
         out["join_strategies"] = {str(k): int(v)
                                   for k, v in self.join_strategies.items()}
         out["conn_strategies"] = {str(k): int(v)
@@ -220,7 +227,13 @@ class PreparedQuery:
     # runs so a calibrator-moved cost model cannot flip a strategy
     # mid-replay and desync the recorded join_seq
     conn_impls: list[str] | None = None
-    join_seq: list[int] = field(default_factory=list)
+    # (actual output rows, executed pow2 capacity) per estimator-sized
+    # join, in engine call order.  Replaying the capacity (not just the
+    # row count) means warm run 1 allocates the exact steady-state jit
+    # shapes the cold run ended at — including joins whose cold run took
+    # an overflow retry, where the final capacity differs from what the
+    # row count alone would re-derive.
+    join_seq: list[tuple[int, int]] = field(default_factory=list)
 
     @property
     def warm(self) -> bool:
@@ -274,6 +287,25 @@ class Engine:
 
     def execute(self, query: QueryTemplate) -> MatchResult:
         return self.execute_prepared(self.prepare(query))
+
+    def with_config(self, cfg: EngineConfig) -> "Engine":
+        """A sibling engine over the same dataset with a different
+        configuration: shares the graph, NI index, IDMap, dataset stats,
+        device tensor cache, and bloom signatures (all immutable or
+        append-only caches), but NOT the server-owned reach cache — a
+        degraded retry (repro.serve.governor) must execute in isolation
+        from state a faulty primary run may have touched, so the sibling
+        falls back to per-query reach caches."""
+        eng = object.__new__(Engine)
+        eng.graph = self.graph
+        eng.ni = self.ni
+        eng.cfg = cfg
+        eng.idmap = self.idmap
+        eng.stats = self.stats
+        eng._dev_cache = self._dev_cache
+        eng._bloom = self._bloom
+        eng.reach_cache = None
+        return eng
 
     def revalidate(self, pq: PreparedQuery, version: int) -> bool:
         """Refresh a PreparedQuery after the calibrated thresholds moved.
@@ -355,7 +387,15 @@ class Engine:
         pq.masks = (pass_masks, pass_np, after)
         return pq.masks
 
-    def execute_prepared(self, pq: PreparedQuery) -> MatchResult:
+    def execute_prepared(self, pq: PreparedQuery,
+                         budget=None) -> MatchResult:
+        """`budget` is an optional duck-typed cooperative budget (see
+        repro.serve.governor.Budget): the engine calls
+        ``budget.checkpoint(phase, rows=..., cap=..., stats=qs)`` at every
+        estimator-sized join and at each pipeline phase boundary, and the
+        budget raises its own typed error (carrying the partial QueryStats
+        it was handed) when a bound is blown.  The core never imports the
+        serving layer — any object with that method works."""
         t0 = time.perf_counter()
         qs = QueryStats()
         cfg = self.cfg
@@ -365,12 +405,24 @@ class Engine:
         qs.used_check = pq.use_check
         qs.cache_hit = pq.warm
         qs.prepare_time = 0.0 if pq.warm else pq.prepare_time
+        # current pipeline phase, mutated at phase boundaries so the
+        # record_join checkpoint attributes budget aborts to the right
+        # phase without threading a phase argument through the join stack
+        phase = ["check"]
+
+        def checkpoint(rows=0, cap=0):
+            if budget is not None:
+                qs.budget_checks += 1
+                budget.checkpoint(phase[0], rows=rows, cap=cap, stats=qs)
 
         # ---- candidate masks ------------------------------------------
         t1 = time.perf_counter()
         pass_masks, pass_np, after = self._candidate_masks(pq)
         qs.candidates_after = after
         qs.check_time = time.perf_counter() - t1
+        # deadline-only checkpoint: candidate counts are not join rows,
+        # so they don't charge the max_rows budget
+        checkpoint()
 
         # ---- per-component matching -----------------------------------
         t2 = time.perf_counter()
@@ -387,7 +439,7 @@ class Engine:
         qs.plan_mode = cfg.plan_mode
         tel = JoinTelemetry()
 
-        def record_join(impl, est, actual, retried):
+        def record_join(impl, est, actual, retried, cap=0):
             qs.join_strategies[impl] = qs.join_strategies.get(impl, 0) + 1
             qs.join_retries += int(retried)
             if est is not None:
@@ -398,9 +450,14 @@ class Engine:
                 qs.join_est_log_err += abs(err)
                 qs.join_est_log_bias += err
                 if not warm_replay:
-                    pq.join_seq.append(int(actual))
+                    pq.join_seq.append((int(actual), int(cap)))
+            # every estimator-sized join is a budget boundary: actual
+            # output rows charge max_rows, the executed capacity is
+            # checked against max_capacity, and the deadline is re-read
+            checkpoint(rows=int(actual), cap=int(cap))
 
         comp_tables: list[Table] = []
+        phase[0] = "match"
         for ci, (comp, trees) in enumerate(zip(pq.comps,
                                                pq.trees_per_comp)):
             if not query.component_edges(comp):
@@ -455,12 +512,15 @@ class Engine:
                     telemetry=tel))
                 qs.truncated |= tab.truncated
             comp_tables.append(tab)
+            checkpoint(cap=tab.cap)
         qs.match_time = time.perf_counter() - t2
 
         # ---- connection edges ------------------------------------------
         t3 = time.perf_counter()
+        phase[0] = "connections"
         final = self._process_connections(query, pq.comps, comp_tables, qs,
-                                          record_join, tel, pq=pq)
+                                          record_join, tel, pq=pq,
+                                          checkpoint=checkpoint)
         qs.conn_time = time.perf_counter() - t3
         qs.sorts_performed = tel.sorts_performed
         qs.sorts_avoided = tel.sorts_avoided
@@ -506,7 +566,8 @@ class Engine:
                              comp_tables: list[Table],
                              qs: QueryStats, record_join=None,
                              tel: JoinTelemetry | None = None,
-                             pq: PreparedQuery | None = None) -> Table:
+                             pq: PreparedQuery | None = None,
+                             checkpoint=None) -> Table:
         """Connection-edge evaluation (Alg. 3): intra filters first (linear
         in table size), then cross-component merges.  The merge order comes
         from planner.plan_connections (cost-based with per-edge
@@ -516,6 +577,7 @@ class Engine:
         cross product, O(matches) output work) or the seed cross+filter
         path, per EngineConfig.connection_impl / the cost model.  A warm
         PreparedQuery supplies the cached edge order directly."""
+        ck = checkpoint if checkpoint is not None else (lambda **kw: None)
         tables = list(comp_tables)
         owner = {}
         for i, comp in enumerate(comps):
@@ -651,6 +713,9 @@ class Engine:
                 tables[gi] = filter_rows(tab, keep)
             invalidate(gi)
             record_conn(impl, info, sel, feat)
+            # connection-edge boundary: deadline + capacity re-check
+            # (rows=0 — a filter materializes no new join rows)
+            ck(cap=tables[gi].cap)
 
         def apply_connection(c) -> None:
             gi, gj = find(owner[c.src]), find(owner[c.dst])
@@ -681,6 +746,9 @@ class Engine:
                 joined = injective_filter(self._retry(
                     cross_join, ta, tb, row_limit=self.cfg.max_rows))
                 qs.truncated |= joined.truncated
+                # the cross path bypasses record_join, so charge its
+                # materialized rows to the budget here
+                ck(rows=joined.count, cap=joined.cap)
                 if joined.count:
                     rows = np.asarray(joined.rows[: joined.count])
                     a = rows[:, joined.cols.index(c.src)]
@@ -694,6 +762,7 @@ class Engine:
             record_conn(impl, info, sel, feat)
             group[gj] = gi
             tables[gi] = joined
+            ck(cap=joined.cap)
 
         intra = [c for c in query.connections
                  if find(owner[c.src]) == find(owner[c.dst])]
@@ -744,6 +813,7 @@ class Engine:
             tab = injective_filter(self._retry(
                 cross_join, tab, tables[r], row_limit=self.cfg.max_rows))
             qs.truncated |= tab.truncated
+            ck(rows=tab.count, cap=tab.cap)
         return tab
 
 

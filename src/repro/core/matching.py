@@ -563,20 +563,31 @@ def planned_join(a: Table, b: Table, est: int | None,
     retry at the exact pow2 size.  On the sort-merge path the retry
     replays the first attempt's sort+probe results (carried on the
     exception), so only the expand re-runs.  record(impl, est, actual,
-    retried) feeds QueryStats telemetry."""
+    retried, cap) feeds QueryStats telemetry and the PreparedQuery
+    capacity recording.
+
+    An `est` carrying a `.cap` attribute (planner.CapEstimate, produced
+    by the warm-run ReplayEstimator from the cold run's recorded
+    (rows, cap) join_seq) pins the output capacity verbatim: warm run 1
+    then allocates the exact steady-state shapes the cold run ended at —
+    no overflow retry, no fresh jit compilation."""
     if not any(c in b.cols for c in a.cols):
         impl = "cross"              # no shared cols: join_tables delegates
     else:
         impl = resolve_join_impl(a.count, b.count, impl, nested_max)
     cap_hint = None
     if est is not None:
+        replay_cap = getattr(est, "cap", None)
         if row_limit is not None:
             est = min(est, row_limit)
-        cap_hint = min(_pow2(int(est * 1.25) + 16),
-                       _pow2(max(a.count, 1) * max(b.count, 1)),
-                       MAX_PRESIZE_CAP)
-        if row_limit is not None:
-            cap_hint = min(cap_hint, _pow2(row_limit))
+        if replay_cap is not None:
+            cap_hint = int(replay_cap)
+        else:
+            cap_hint = min(_pow2(int(est * 1.25) + 16),
+                           _pow2(max(a.count, 1) * max(b.count, 1)),
+                           MAX_PRESIZE_CAP)
+            if row_limit is not None:
+                cap_hint = min(cap_hint, _pow2(row_limit))
     kw = dict(row_limit=row_limit, impl=impl, probe_impl=probe_impl,
               chunk=chunk, b_chunk=b_chunk, telemetry=telemetry)
     retried = False
@@ -587,7 +598,7 @@ def planned_join(a: Table, b: Table, est: int | None,
         out = join_tables(a, b, cap=_pow2(e.needed),
                           _resume=getattr(e, "resume", None), **kw)
     if record is not None:
-        record(impl, est, out.count, retried)
+        record(impl, est, out.count, retried, out.cap)
     return out
 
 

@@ -181,6 +181,21 @@ class JoinEstimator:
         return int(a_count * b_count * self.scale / v) + 1
 
 
+class CapEstimate(int):
+    """A join-size estimate that also carries the exact pow2 capacity the
+    cold run executed that join at.  Behaves as the row-count int in all
+    arithmetic (min with row_limit, telemetry sums); matching.planned_join
+    reads `.cap` to pin the output allocation, so warm run 1 reuses the
+    cold run's steady-state jit shapes instead of re-deriving a capacity
+    from the row count (which can differ when the cold run took an
+    overflow retry)."""
+
+    def __new__(cls, rows: int, cap: int):
+        obj = super().__new__(cls, int(rows))
+        obj.cap = int(cap)
+        return obj
+
+
 class ReplayEstimator:
     """Exact 'estimates' for warm plan-cache executions.
 
@@ -189,11 +204,15 @@ class ReplayEstimator:
     recorded in engine call order) ARE the cardinalities of every later
     execution.  Replaying them pre-sizes each join capacity exactly — no
     CapacityOverflow retries and byte-identical jit shapes, which is what
-    makes the warm path recompile-free.  Falls back to the analytic
-    estimator if the call sequence ever diverges (e.g. a row_limit change).
+    makes the warm path recompile-free.  Recorded entries are (rows, cap)
+    pairs — replayed as `CapEstimate` so the executed *capacity* (not
+    just the row count) is pinned too; bare-int entries from older
+    recordings still replay as plain row counts.  Falls back to the
+    analytic estimator if the call sequence ever diverges (e.g. a
+    row_limit change).
     """
 
-    def __init__(self, base: JoinEstimator, recorded: list[int]):
+    def __init__(self, base: JoinEstimator, recorded: list):
         self.base = base
         self.recorded = recorded
         self.cursor = 0
@@ -202,6 +221,8 @@ class ReplayEstimator:
         if self.cursor < len(self.recorded):
             out = self.recorded[self.cursor]
             self.cursor += 1
+            if isinstance(out, tuple):
+                return CapEstimate(out[0], out[1])
             return out
         return fallback
 

@@ -16,6 +16,10 @@ learn from its own executions.  This package is that setting:
   * `calibrate`   — online calibration of the τ1–τ3 pruning thresholds
                     and the planner cost-model constants from per-query
                     QueryStats telemetry.
+  * `governor`    — resource governance and failure containment:
+                    per-execution deadline/row/capacity budgets, the
+                    exact-but-cheaper degradation ladder, admission
+                    control, and the per-fingerprint circuit breaker.
   * `server`      — the user-facing `QueryServer` (submit / submit_many,
                     sync + async result futures, LRU-bounded plan and
                     reach caches, p50/p99 latency + cache-hit telemetry).
@@ -24,10 +28,19 @@ from .plan_cache import (PreparedQuery, PlanCache, template_fingerprint,
                          canonicalize, prepare_cached, dataset_key)
 from .batching import ShapeBatcher, BatchTelemetry
 from .calibrate import Calibrator, Ewma
+from .governor import (Budget, BudgetExceeded, CircuitBreaker,
+                       DegradationExhausted, Governor, GovernorConfig,
+                       IncompleteFlushError, LadderRung, QueryError,
+                       QuarantinedError, RejectedError, ServingError,
+                       default_ladder)
 from .server import QueryServer, ResultFuture
 
 __all__ = [
     "PreparedQuery", "PlanCache", "template_fingerprint", "canonicalize",
     "prepare_cached", "dataset_key", "ShapeBatcher", "BatchTelemetry",
     "Calibrator", "Ewma", "QueryServer", "ResultFuture",
+    "Budget", "BudgetExceeded", "CircuitBreaker", "DegradationExhausted",
+    "Governor", "GovernorConfig", "IncompleteFlushError", "LadderRung",
+    "QueryError", "QuarantinedError", "RejectedError", "ServingError",
+    "default_ladder",
 ]

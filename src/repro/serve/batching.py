@@ -28,6 +28,7 @@ class BatchTelemetry:
     buckets: int = 0            # distinct (fingerprint, class) buckets
     dedup_saved: int = 0        # executions avoided by result fan-out
     flushes: int = 0
+    shed: int = 0               # items shed by a flush-time stop signal
 
     def snapshot(self) -> dict:
         return dict(vars(self))
@@ -51,9 +52,17 @@ class ShapeBatcher:
         self._pending.append((fingerprint, int(cap_class), item))
         self.telemetry.queries += 1
 
-    def flush(self, execute) -> list[tuple[object, object]]:
+    def flush(self, execute,
+              should_stop=None) -> list[tuple[object, object]]:
         """Run all pending items; returns [(item, result), ...] in bucket
-        order.  `execute(item)` is called once per bucket."""
+        order.  `execute(item)` is called once per bucket.
+
+        `should_stop`, when given, is consulted before each bucket: it
+        returns None to continue or an Exception instance to shed the
+        remaining buckets — every not-yet-executed item is paired with
+        that exception instead of a result (the server resolves each
+        affected future with it), so an exhausted per-flush wall budget
+        sheds the tail of the flush instead of hanging it."""
         pending, self._pending = self._pending, []
         if not pending:
             return []
@@ -62,9 +71,17 @@ class ShapeBatcher:
         for fingerprint, cap_class, item in pending:
             buckets.setdefault((cap_class, fingerprint), []).append(item)
         out = []
+        stopped: Exception | None = None
         for key in sorted(buckets):
             items = buckets[key]
             self.telemetry.buckets += 1
+            if stopped is None and should_stop is not None:
+                stopped = should_stop()
+            if stopped is not None:
+                self.telemetry.shed += len(items)
+                for item in items:
+                    out.append((item, stopped))
+                continue
             self.telemetry.executions += 1
             self.telemetry.dedup_saved += len(items) - 1
             result = execute(items[0])

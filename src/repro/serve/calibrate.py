@@ -85,6 +85,7 @@ class Calibrator:
         self._tau_defaults = (ref.tau_iter, ref.tau_join, ref.tau_sel)
         self.version = 0
         self.observed = 0
+        self.degraded_skipped = 0
         self._join_bias = Ewma(alpha)
         self._conn_sel = Ewma(alpha)
         self._reach = Ewma(alpha)
@@ -101,6 +102,13 @@ class Calibrator:
             # strategies, so every one of its ratios is the same
             # observation folded in again — a hot template would
             # otherwise dominate the EWMAs by repetition count
+            return
+        if qs.degraded_steps:
+            # degraded-ladder executions ran under forced non-default
+            # settings (check off, forced impls, reduced caps) — their
+            # estimate/observation ratios describe the degraded config,
+            # not the primary one the thresholds and cost model govern
+            self.degraded_skipped += 1
             return
         cm = self.cost_model
         b = self.SCALE_BOUND
@@ -175,6 +183,7 @@ class Calibrator:
         th, cm = self.thresholds, self.cost_model
         return {
             "observed": self.observed,
+            "degraded_skipped": self.degraded_skipped,
             "version": self.version,
             "tau_iter": th.tau_iter,
             "tau_join": th.tau_join,

@@ -1,0 +1,358 @@
+"""Resource governance and failure containment for the serving tier.
+
+Worst-case subgraph matching is exponential in the template, and the
+serving layer makes pruning/plan decisions online — so a mispredicted
+plan, an adversarial template, or a capacity blow-up must be *bounded*,
+*shed*, *degraded*, or *quarantined* instead of stalling every query
+behind it in the flush.  Four mechanisms compose:
+
+  * `Budget` — a cooperative per-execution budget (wall deadline, total
+    materialized join rows, largest single-table capacity) threaded
+    through `Engine.execute_prepared` and checked at every join and
+    connection-edge boundary.  A blown budget raises `BudgetExceeded`
+    carrying the partial QueryStats, so telemetry survives the abort.
+  * admission control (in `QueryServer`) — a bounded pending queue that
+    sheds submissions with `RejectedError` when full, plus a per-flush
+    wall budget that sheds the *tail* of an over-long flush instead of
+    letting one flush absorb the server.
+  * the degradation ladder — a failed or over-budget query is retried on
+    exact-but-cheaper settings, one rung at a time: skip the signature
+    check, force the greedy plan, force the nested/cross join impls
+    (avoiding the sort-merge kernel and reach-gather machinery
+    entirely), and finally re-run under a reduced row cap with the
+    truncation explicitly flagged.  Every rung except the last returns
+    exact results; `QueryStats.degraded_steps` records the walk.
+  * a per-fingerprint `CircuitBreaker` — templates that keep failing
+    even through the ladder are quarantined (fail-fast
+    `QuarantinedError`) for a cooldown, then probed half-open; a
+    successful probe closes the breaker, a failed one re-opens it with
+    exponential backoff.  One poisoned template cannot re-poison every
+    flush.
+
+The engine depends on none of this: `Budget` is duck-typed (the engine
+just calls ``budget.checkpoint(...)``), so ``repro.core`` never imports
+``repro.serve``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+
+
+# ---------------------------------------------------------------------- #
+# Typed serving errors.
+# ---------------------------------------------------------------------- #
+class ServingError(RuntimeError):
+    """Base class of every typed serving-layer failure.  Subclasses carry
+    their own context and are raised as-is by ResultFuture.result()."""
+
+
+class RejectedError(ServingError):
+    """Load shed: the pending queue was full at submit time, or the
+    per-flush wall budget ran out before this query's bucket ran."""
+
+
+class QuarantinedError(ServingError):
+    """The query's template fingerprint is quarantined by the circuit
+    breaker; it was failed fast without touching the engine."""
+
+    def __init__(self, fingerprint: str, retry_after_s: float):
+        self.fingerprint = fingerprint
+        self.retry_after_s = float(retry_after_s)
+        super().__init__(
+            f"template {fingerprint[:24]!r}... quarantined, "
+            f"retry after {retry_after_s:.2f}s")
+
+
+class QueryError(ServingError):
+    """Wrapper re-raised by ResultFuture.result() around non-serving
+    exceptions, adding the query fingerprint and the phase that failed
+    (prepare vs. execute vs. degraded-retry).  The original exception is
+    the __cause__ (``raise ... from``)."""
+
+    def __init__(self, fingerprint: str | None, phase: str,
+                 cause: BaseException):
+        self.fingerprint = fingerprint
+        self.phase = phase
+        fp = "?" if fingerprint is None else fingerprint[:24] + "..."
+        super().__init__(f"query {fp} failed during {phase}: {cause}")
+
+
+class IncompleteFlushError(ServingError):
+    """A flush completed without resolving this future (an internal
+    serving bug surfaced as a typed error instead of a hang: the future
+    is permanently failed, so repeated .result() calls never re-drain
+    the server)."""
+
+
+class DegradationExhausted(ServingError):
+    """The primary execution and every ladder rung failed.  `attempts`
+    lists (rung name, error) in order; the primary error is __cause__."""
+
+    def __init__(self, fingerprint: str | None,
+                 attempts: list[tuple[str, BaseException]]):
+        self.fingerprint = fingerprint
+        self.attempts = attempts
+        steps = ", ".join(f"{name}: {type(err).__name__}"
+                          for name, err in attempts)
+        super().__init__(f"degradation ladder exhausted ({steps})")
+
+
+class BudgetExceeded(Exception):
+    """A cooperative budget check failed mid-execution.
+
+    reason: 'deadline' | 'rows' | 'capacity'; `stats` is the partial
+    QueryStats of the aborted execution (telemetry survives the abort),
+    `phase` the pipeline phase that tripped the check."""
+
+    def __init__(self, reason: str, phase: str, elapsed_s: float,
+                 rows: int, stats=None):
+        self.reason = reason
+        self.phase = phase
+        self.elapsed_s = float(elapsed_s)
+        self.rows = int(rows)
+        self.stats = stats
+        super().__init__(
+            f"budget exceeded ({reason}) in phase {phase!r} after "
+            f"{elapsed_s * 1e3:.1f}ms / {rows} rows")
+
+
+# ---------------------------------------------------------------------- #
+# Cooperative per-execution budget.
+# ---------------------------------------------------------------------- #
+@dataclass
+class Budget:
+    """Per-execution resource budget, checked cooperatively by the engine
+    at join and connection-edge boundaries (``checkpoint``).
+
+    deadline_s bounds wall time for ONE execution attempt; max_rows
+    bounds the cumulative materialized join output rows; max_capacity
+    bounds the largest single table capacity the execution may allocate.
+    All three are optional — None disables that bound."""
+    deadline_s: float | None = None
+    max_rows: int | None = None
+    max_capacity: int | None = None
+    started: float = field(default_factory=time.perf_counter)
+    rows: int = 0
+    checks: int = 0
+
+    def elapsed(self) -> float:
+        return time.perf_counter() - self.started
+
+    def checkpoint(self, phase: str, rows: int = 0, cap: int = 0,
+                   stats=None) -> None:
+        """Record `rows` newly materialized rows / a table of capacity
+        `cap` and raise BudgetExceeded if any bound is now blown."""
+        self.checks += 1
+        self.rows += int(rows)
+        if self.deadline_s is not None:
+            el = self.elapsed()
+            if el > self.deadline_s:
+                raise BudgetExceeded("deadline", phase, el, self.rows,
+                                     stats=stats)
+        if self.max_rows is not None and self.rows > self.max_rows:
+            raise BudgetExceeded("rows", phase, self.elapsed(), self.rows,
+                                 stats=stats)
+        if self.max_capacity is not None and cap > self.max_capacity:
+            raise BudgetExceeded("capacity", phase, self.elapsed(),
+                                 self.rows, stats=stats)
+
+
+# ---------------------------------------------------------------------- #
+# Degradation ladder.
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class LadderRung:
+    """One exact-but-cheaper retry configuration.  `overrides` are
+    EngineConfig field replacements (cumulative by construction — each
+    rung's dict includes every earlier rung's overrides); `truncate`
+    additionally caps max_rows at GovernorConfig.degraded_row_cap, the
+    only rung that may return non-exact (explicitly flagged truncated)
+    results."""
+    name: str
+    overrides: dict
+    truncate: bool = False
+
+    def apply(self, cfg, gov_cfg: "GovernorConfig"):
+        kw = dict(self.overrides)
+        if self.truncate:
+            cap = gov_cfg.degraded_row_cap
+            kw["max_rows"] = cap if cfg.max_rows is None \
+                else min(cfg.max_rows, cap)
+        return replace(cfg, **kw)
+
+
+def default_ladder() -> tuple[LadderRung, ...]:
+    """skip signature check -> greedy plan -> forced nested/cross impls
+    -> reduced row cap.  Rung 3 avoids the sort-merge kernel, the join
+    expand, and the reach-gather machinery entirely (nested joins +
+    cross-product connection edges), so a fault localized to any of
+    those still has an exact escape hatch."""
+    skip = {"check_policy": "never"}
+    greedy = {**skip, "plan_mode": "greedy"}
+    simple = {**greedy, "join_impl": "nested", "connection_impl": "cross"}
+    return (
+        LadderRung("skip_check", skip),
+        LadderRung("greedy_plan", greedy),
+        LadderRung("force_simple_impls", simple),
+        LadderRung("truncate", simple, truncate=True),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Per-fingerprint circuit breaker.
+# ---------------------------------------------------------------------- #
+class CircuitBreaker:
+    """closed -> (threshold consecutive failures) -> open (fail-fast for
+    cooldown) -> half-open (one probe) -> closed on success, re-open with
+    exponentially backed-off cooldown on failure.
+
+    Failures are counted per template fingerprint and only for queries
+    that failed *through* the degradation ladder — a template served
+    exactly by a degraded rung is a success.  `now` is injectable for
+    deterministic tests."""
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 5.0,
+                 backoff: float = 2.0, max_cooldown_s: float = 300.0):
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.backoff = float(backoff)
+        self.max_cooldown_s = float(max_cooldown_s)
+        self._st: dict[str, dict] = {}
+        self.trips = 0
+        self.denials = 0
+        self.probes = 0
+        self.recoveries = 0
+
+    def _now(self, now: float | None) -> float:
+        return time.monotonic() if now is None else now
+
+    def admit(self, fp: str, now: float | None = None) -> str:
+        """'allow' | 'deny' | 'probe' for one execution of `fp`."""
+        st = self._st.get(fp)
+        if st is None or st["state"] == "closed":
+            return "allow"
+        now = self._now(now)
+        if st["state"] == "open":
+            if now < st["until"]:
+                self.denials += 1
+                return "deny"
+            st["state"] = "half_open"
+        self.probes += 1
+        return "probe"
+
+    def retry_after(self, fp: str, now: float | None = None) -> float:
+        st = self._st.get(fp)
+        if st is None or st["state"] != "open":
+            return 0.0
+        return max(0.0, st["until"] - self._now(now))
+
+    def record(self, fp: str, ok: bool, now: float | None = None) -> None:
+        st = self._st.setdefault(fp, {"state": "closed", "failures": 0,
+                                      "cooldown": self.cooldown_s,
+                                      "until": 0.0})
+        if ok:
+            if st["state"] != "closed":
+                self.recoveries += 1
+            st.update(state="closed", failures=0, cooldown=self.cooldown_s)
+            return
+        st["failures"] += 1
+        if st["state"] == "half_open":
+            # failed probe: re-open, back the cooldown off
+            st["cooldown"] = min(st["cooldown"] * self.backoff,
+                                 self.max_cooldown_s)
+            st["failures"] = 0
+        elif st["failures"] < self.threshold:
+            return
+        else:
+            st["failures"] = 0
+        st["state"] = "open"
+        st["until"] = self._now(now) + st["cooldown"]
+        self.trips += 1
+
+    def state(self, fp: str) -> str:
+        st = self._st.get(fp)
+        return "closed" if st is None else st["state"]
+
+    def snapshot(self) -> dict:
+        by_state: dict[str, int] = {}
+        for st in self._st.values():
+            by_state[st["state"]] = by_state.get(st["state"], 0) + 1
+        return {
+            "tracked": len(self._st),
+            "trips": self.trips,
+            "denials": self.denials,
+            "probes": self.probes,
+            "recoveries": self.recoveries,
+            "open": by_state.get("open", 0),
+            "half_open": by_state.get("half_open", 0),
+        }
+
+
+# ---------------------------------------------------------------------- #
+# Governor: configuration + runtime state.
+# ---------------------------------------------------------------------- #
+@dataclass
+class GovernorConfig:
+    """Resource-governance policy for one QueryServer.  Every bound is
+    optional — a default-constructed config enables only the degradation
+    ladder and the circuit breaker (no budgets, no shedding)."""
+    deadline_s: float | None = None     # per-execution-attempt wall budget
+    max_rows: int | None = None         # cumulative join output rows
+    max_capacity: int | None = None     # largest single table capacity
+    max_pending: int | None = None      # admission: pending-queue bound
+    flush_wall_s: float | None = None   # per-flush wall budget
+    breaker_threshold: int = 3
+    breaker_cooldown_s: float = 5.0
+    breaker_backoff: float = 2.0
+    breaker_max_cooldown_s: float = 300.0
+    degraded_row_cap: int = 1 << 14     # 'truncate' rung row cap
+    ladder: tuple = field(default_factory=default_ladder)
+
+
+class Governor:
+    """Runtime state for one server's governance policy: the circuit
+    breaker plus counters for shedding, budget aborts, and ladder use."""
+
+    def __init__(self, cfg: GovernorConfig):
+        self.cfg = cfg
+        self.breaker = CircuitBreaker(cfg.breaker_threshold,
+                                      cfg.breaker_cooldown_s,
+                                      cfg.breaker_backoff,
+                                      cfg.breaker_max_cooldown_s)
+        self.shed_submit = 0            # submissions rejected at admission
+        self.shed_flush = 0             # futures shed by the flush budget
+        self.budget_exceeded = 0        # primary attempts aborted by Budget
+        self.degraded: dict[str, int] = {}   # successful rung -> count
+        self.degraded_queries = 0
+        self.exhausted = 0              # ladder walked fully, still failed
+
+    def make_budget(self) -> Budget | None:
+        c = self.cfg
+        if c.deadline_s is None and c.max_rows is None \
+                and c.max_capacity is None:
+            return None
+        return Budget(deadline_s=c.deadline_s, max_rows=c.max_rows,
+                      max_capacity=c.max_capacity)
+
+    def note_degraded(self, rung: str) -> None:
+        self.degraded_queries += 1
+        self.degraded[rung] = self.degraded.get(rung, 0) + 1
+
+    def snapshot(self) -> dict:
+        c = self.cfg
+        return {
+            "limits": {
+                "deadline_s": c.deadline_s, "max_rows": c.max_rows,
+                "max_capacity": c.max_capacity,
+                "max_pending": c.max_pending,
+                "flush_wall_s": c.flush_wall_s,
+            },
+            "shed_submit": self.shed_submit,
+            "shed_flush": self.shed_flush,
+            "budget_exceeded": self.budget_exceeded,
+            "degraded_queries": self.degraded_queries,
+            "degraded_by_rung": dict(self.degraded),
+            "exhausted": self.exhausted,
+            "breaker": self.breaker.snapshot(),
+        }

@@ -14,14 +14,27 @@ Wraps one Engine over one immutable dataset with:
     their own column mapping);
   * online calibration (`calibrate.Calibrator`) of the τ thresholds and
     cost-model constants from the executed queries' own stats;
+  * resource governance (`governor`): admission control with load
+    shedding, per-execution deadline/row/capacity budgets, a degradation
+    ladder that retries failed or over-budget queries on exact-but-
+    cheaper settings, and a per-fingerprint circuit breaker that
+    quarantines repeatedly failing templates;
   * latency/cache telemetry: p50/p99 overall and split cold vs. warm,
-    plan/reach cache hit rates, batch dedup factor, and a rollup of
-    QueryStats.to_dict() sums.
+    plan/reach cache hit rates, batch dedup factor, governor counters,
+    and a rollup of QueryStats.to_dict() sums.
 
 Submission is future-based: `submit` enqueues and returns a
 `ResultFuture`; execution happens at `flush()` (called explicitly, by
 `submit_many(..., wait=True)`, or lazily by the first `.result()`).
 `query()` is the synchronous one-call convenience.
+
+Failure containment invariant: a flush NEVER leaves a submitted future
+unresolved and NEVER lets one query's failure leak into another's
+result.  Every future resolves with either an exact result or its own
+typed error; `ResultFuture.result()` re-raises serving errors as-is and
+wraps engine exceptions in `QueryError` carrying the template
+fingerprint and the failing phase (prepare vs. execute vs.
+degraded-retry) with the original as __cause__.
 """
 from __future__ import annotations
 
@@ -38,6 +51,10 @@ from ..core.query import QueryTemplate
 from .plan_cache import PlanCache, dataset_key, prepare_cached, remap_result
 from .batching import ShapeBatcher
 from .calibrate import Calibrator
+from .governor import (Governor, GovernorConfig, BudgetExceeded,
+                       ServingError, RejectedError, QuarantinedError,
+                       QueryError, IncompleteFlushError,
+                       DegradationExhausted)
 
 
 class ResultFuture:
@@ -46,13 +63,19 @@ class ResultFuture:
     async submission needs no background thread.  An execution failure
     resolves the future with the error (re-raised by `result()`) instead
     of aborting the flush — one poisoned bucket cannot orphan the rest
-    of the batch."""
+    of the batch.
+
+    A failed future is terminal: the error is stored at resolution time,
+    so repeated `.result()` calls re-raise it without draining the
+    server again."""
 
     def __init__(self, server: "QueryServer", query: QueryTemplate):
         self._server = server
         self.query = query
         self._result: MatchResult | None = None
         self._error: BaseException | None = None
+        self._phase: str = "execute"        # phase the stored error hit
+        self.fingerprint: str | None = None
         self.latency: float | None = None   # seconds, set at resolution
         self.cache_hit: bool = False        # plan-cache hit at flush time
 
@@ -62,17 +85,27 @@ class ResultFuture:
     def result(self) -> MatchResult:
         if not self.done():
             self._server.flush()
+            if not self.done():
+                # flush() guarantees resolution; if that invariant ever
+                # breaks, surface a typed terminal error instead of
+                # asserting — and never re-drain on the next call
+                self._fail(IncompleteFlushError(
+                    "flush completed without resolving this future"),
+                    phase="flush")
         if self._error is not None:
-            raise self._error
-        assert self._result is not None, "flush did not resolve future"
+            err = self._error
+            if isinstance(err, ServingError):
+                raise err
+            raise QueryError(self.fingerprint, self._phase, err) from err
         return self._result
 
     def _resolve(self, result: MatchResult, latency: float) -> None:
         self._result = result
         self.latency = latency
 
-    def _fail(self, error: BaseException) -> None:
+    def _fail(self, error: BaseException, phase: str = "execute") -> None:
         self._error = error
+        self._phase = phase
 
 
 class QueryServer:
@@ -82,15 +115,20 @@ class QueryServer:
     values (A/B baseline); batching=False executes submissions one at a
     time in arrival order (still through the plan cache).  `cfg`, when
     given, is the complete engine configuration — `variant` is then
-    ignored and passing thresholds/impl alongside raises."""
+    ignored and passing thresholds/impl alongside raises.  `governor`
+    (a GovernorConfig) enables resource governance: admission control,
+    per-execution budgets, the degradation ladder, and the circuit
+    breaker; None (the default) keeps the ungoverned behavior."""
 
     def __init__(self, graph, variant: str = "rdf_h", ni=None, stats=None,
                  thresholds=None, cfg: EngineConfig | None = None,
                  impl: str = "auto",
                  plan_cache_size: int = 64,
                  reach_cache_size: int = 200_000,
+                 reach_cache_bytes: int | None = None,
                  calibrate: bool = True, batching: bool = True,
-                 latency_window: int = 4096):
+                 latency_window: int = 4096,
+                 governor: GovernorConfig | None = None):
         if cfg is not None:
             # cfg is the complete engine configuration: silently dropping
             # a tuned thresholds/impl next to it would corrupt A/B runs
@@ -115,9 +153,11 @@ class QueryServer:
                                       self.engine.cfg.cost_model)
                            if calibrate else None)
         self.plan_cache = PlanCache(plan_cache_size)
-        self.engine.reach_cache = ReachCache(max_entries=reach_cache_size)
+        self.engine.reach_cache = ReachCache(max_entries=reach_cache_size,
+                                             max_bytes=reach_cache_bytes)
         self.batcher = ShapeBatcher()
         self.batching = batching
+        self.governor = Governor(governor) if governor is not None else None
         self.dataset_id = dataset_key(graph)
         self._pending: list[ResultFuture] = []
         self._lat_all: deque = deque(maxlen=latency_window)
@@ -126,10 +166,22 @@ class QueryServer:
         self._rollup: dict = {}
         self.queries_served = 0
         self.query_errors = 0
+        self.queries_shed = 0
 
     # ------------------------------------------------------------------ #
     def submit(self, query: QueryTemplate) -> ResultFuture:
         f = ResultFuture(self, query)
+        gov = self.governor
+        if gov is not None and gov.cfg.max_pending is not None \
+                and len(self._pending) >= gov.cfg.max_pending:
+            # admission control: shed at submit time, before any engine
+            # work — the future resolves immediately with RejectedError
+            gov.shed_submit += 1
+            self.queries_shed += 1
+            f._fail(RejectedError(
+                f"pending queue full ({gov.cfg.max_pending}), "
+                "load shed at admission"), phase="admit")
+            return f
         self._pending.append(f)
         return f
 
@@ -148,10 +200,28 @@ class QueryServer:
         return self.calibrator.version if self.calibrator is not None else 0
 
     def flush(self) -> None:
-        """Execute every pending submission (batched or serial)."""
+        """Execute every pending submission (batched or serial).  Every
+        popped future is resolved by the time this returns — with a
+        result, a typed serving error, or its own engine error — even if
+        the flush body itself raises unexpectedly."""
         pending, self._pending = self._pending, []
         if not pending:
             return
+        try:
+            self._flush_body(pending)
+        finally:
+            # failure-containment backstop: a bug escaping the per-future
+            # error handling must not leave siblings hanging (a hung
+            # future would re-drain the server from .result() forever)
+            for f in pending:
+                if not f.done():
+                    f._fail(IncompleteFlushError(
+                        "flush aborted before this future ran"),
+                        phase="flush")
+                    self.query_errors += 1
+
+    def _flush_body(self, pending: list[ResultFuture]) -> None:
+        t_flush = time.perf_counter()
         # canonicalize + plan-cache lookup per future; a failure here
         # resolves that future with the error and spares the rest
         prepped = []
@@ -163,43 +233,139 @@ class QueryServer:
                                                 self.dataset_id,
                                                 self._version())
             except Exception as e:           # noqa: BLE001
-                f._fail(e)
+                f._fail(e, phase="prepare")
                 self.query_errors += 1
                 continue
             f.cache_hit = hit
+            f.fingerprint = pq.fingerprint
             prepped.append((f, pq, order, time.perf_counter() - t0))
+        stopper = self._flush_stopper(t_flush)
         if self.batching:
             for f, pq, order, prep_s in prepped:
                 cap_class = _pow2(sum(pq.cand_sizes.values()))
                 self.batcher.add((f, pq, order, prep_s),
                                  pq.fingerprint, cap_class)
-            for (f, pq, order, prep_s), (res, lat) in \
-                    self.batcher.flush(self._execute_item):
-                self._finish(f, res, order, prep_s + lat)
+            for (f, pq, order, prep_s), res in \
+                    self.batcher.flush(self._execute_item,
+                                       should_stop=stopper):
+                if isinstance(res, BaseException):
+                    # bucket shed by the flush wall budget: the batcher
+                    # pairs unexecuted items with the stop exception
+                    self._finish(f, res, order, prep_s)
+                else:
+                    out, lat = res
+                    self._finish(f, out, order, prep_s + lat)
         else:
             for f, pq, order, prep_s in prepped:
+                shed = stopper() if stopper is not None else None
+                if shed is not None:
+                    self._finish(f, shed, order, prep_s)
+                    continue
                 res, lat = self._execute_item((f, pq, order, prep_s))
                 self._finish(f, res, order, prep_s + lat)
 
+    def _flush_stopper(self, t0: float):
+        """None, or a callable returning None (continue) / a
+        RejectedError (shed the rest of this flush) once the per-flush
+        wall budget is spent."""
+        gov = self.governor
+        if gov is None or gov.cfg.flush_wall_s is None:
+            return None
+
+        def stop():
+            spent = time.perf_counter() - t0
+            if spent > gov.cfg.flush_wall_s:
+                gov.shed_flush += 1
+                return RejectedError(
+                    f"flush wall budget ({gov.cfg.flush_wall_s:.3f}s) "
+                    f"exhausted after {spent:.3f}s, tail shed")
+            return None
+
+        return stop
+
+    # ------------------------------------------------------------------ #
     def _execute_item(self, item):
         """Execute one bucket representative.  Returns (MatchResult |
         exception, latency) — failures are values so that one bad bucket
-        resolves only its own futures with the error."""
+        resolves only its own futures with the error.  The circuit
+        breaker gates the execution per template fingerprint; the
+        degradation ladder runs inside `_execute_governed`."""
         _, pq, _, _ = item
+        gov = self.governor
         t0 = time.perf_counter()
+        if gov is not None:
+            verdict = gov.breaker.admit(pq.fingerprint)
+            if verdict == "deny":
+                return QuarantinedError(
+                    pq.fingerprint or "?",
+                    gov.breaker.retry_after(pq.fingerprint)), \
+                    time.perf_counter() - t0
         try:
-            res = self.engine.execute_prepared(pq)
+            res = self._execute_governed(pq)
         except Exception as e:               # noqa: BLE001
+            if gov is not None:
+                gov.breaker.record(pq.fingerprint, ok=False)
             return e, time.perf_counter() - t0
         lat = time.perf_counter() - t0
+        if gov is not None:
+            gov.breaker.record(pq.fingerprint, ok=True)
         if self.calibrator is not None:
             self.calibrator.observe(res.stats)
         self._observe_stats(res.stats)
         return res, lat
 
+    def _execute_governed(self, pq) -> MatchResult:
+        """Primary execution under the configured budget; on any failure
+        (budget abort, capacity blow-up, kernel error) walk the
+        degradation ladder instead of failing outright."""
+        gov = self.governor
+        if gov is None:
+            return self.engine.execute_prepared(pq)
+        budget = gov.make_budget()
+        try:
+            if budget is None:
+                return self.engine.execute_prepared(pq)
+            return self.engine.execute_prepared(pq, budget=budget)
+        except Exception as primary:         # noqa: BLE001
+            if isinstance(primary, BudgetExceeded):
+                gov.budget_exceeded += 1
+            return self._degraded_retry(pq, primary)
+
+    def _degraded_retry(self, pq, primary: BaseException) -> MatchResult:
+        """Walk the ladder: each rung gets a sibling engine with the
+        rung's exact-but-cheaper config, a FRESH prepare (the primary
+        plan may be the thing that failed) and a fresh budget.  The plan
+        cache is never polluted with degraded plans, and degraded stats
+        carry `degraded_steps` so the Calibrator ignores them.  Raises
+        DegradationExhausted (primary error as __cause__) if every rung
+        fails."""
+        gov = self.governor
+        attempts: list[tuple[str, BaseException]] = [("primary", primary)]
+        steps: list[str] = []
+        for rung in gov.cfg.ladder:
+            steps.append(rung.name)
+            eng = self.engine.with_config(rung.apply(self.engine.cfg,
+                                                     gov.cfg))
+            budget = gov.make_budget()
+            try:
+                dpq = eng.prepare(pq.query, fingerprint=pq.fingerprint)
+                res = (eng.execute_prepared(dpq) if budget is None
+                       else eng.execute_prepared(dpq, budget=budget))
+            except Exception as e:           # noqa: BLE001
+                attempts.append((rung.name, e))
+                continue
+            res.stats.degraded_steps = list(steps)
+            gov.note_degraded(rung.name)
+            return res
+        gov.exhausted += 1
+        raise DegradationExhausted(pq.fingerprint, attempts) from primary
+
     def _finish(self, f: ResultFuture, res, order, latency: float) -> None:
         if isinstance(res, BaseException):
-            f._fail(res)
+            phase = ("degraded-retry" if isinstance(res,
+                                                    DegradationExhausted)
+                     else "execute")
+            f._fail(res, phase=phase)
             self.query_errors += 1
             return
         f._resolve(remap_result(res, order), latency)
@@ -228,11 +394,13 @@ class QueryServer:
     def telemetry(self) -> dict:
         """One JSON-serializable snapshot of everything the server knows
         about itself: latency percentiles (seconds), cache hit rates,
-        batching dedup, calibration state, and the QueryStats rollup."""
+        batching dedup, calibration state, governance counters, and the
+        QueryStats rollup."""
         rc = self.engine.reach_cache
         out = {
             "queries_served": self.queries_served,
             "query_errors": self.query_errors,
+            "queries_shed": self.queries_shed,
             "latency": {
                 "p50": self._pct(self._lat_all, 50),
                 "p99": self._pct(self._lat_all, 99),
@@ -247,10 +415,13 @@ class QueryServer:
             "reach_cache": {
                 "entries": len(rc), "hits": rc.hits, "misses": rc.misses,
                 "evictions": rc.evictions,
+                "bytes": rc.total_bytes, "max_bytes": rc.max_bytes,
             },
             "batch": self.batcher.telemetry.snapshot(),
             "calibration": (None if self.calibrator is None
                             else self.calibrator.snapshot()),
+            "governor": (None if self.governor is None
+                         else self.governor.snapshot()),
             "stats_rollup": dict(self._rollup),
         }
         return out

@@ -1,0 +1,392 @@
+"""Chaos suite: the serving stack under injected faults.
+
+The contract under test — for EVERY injection point × fault kind, each
+affected future resolves with either an EXACT result (reached through
+the degradation ladder or a capacity retry, with `stats.degraded_steps`
+recording any ladder walk) or its own typed error.  Never a hung flush,
+never a wrong result; identity against a fresh fault-free engine is
+asserted for every non-failed future.
+
+Plus the governance behaviors the faults exercise: admission-control
+shedding, the per-flush wall budget, budget aborts feeding the ladder,
+the per-fingerprint circuit breaker (quarantine, cooldown, half-open
+recovery), error-context wrapping on futures, and calibration hygiene
+for degraded runs.
+"""
+import time
+
+import pytest
+
+from repro.core import make_engine, Thresholds
+from repro.core.engine import EngineConfig
+from repro.data import random_graph, random_query
+from repro.serve import (QueryServer, GovernorConfig, BudgetExceeded,
+                         DegradationExhausted, QuarantinedError,
+                         QueryError, RejectedError, ServingError,
+                         template_fingerprint)
+from repro.testing import Fault, FaultInjector, INJECTION_POINTS, faults
+
+
+# --------------------------- fixtures ---------------------------------- #
+@pytest.fixture(scope="module")
+def graph():
+    return random_graph(n_nodes=80, n_edges=220, n_preds=3,
+                        n_literals=20, seed=1)
+
+
+@pytest.fixture(scope="module")
+def pool(graph):
+    return [random_query(graph, size=4, seed=40 + i, n_connection=i % 2,
+                         d_c=2) for i in range(4)]
+
+
+@pytest.fixture(scope="module")
+def oracle(graph, pool):
+    eng = make_engine(graph, "rdf_h", impl="ref")
+    return [eng.execute(q).result_set() for q in pool]
+
+
+def _forcing_cfg():
+    """Engine config that routes every join through the sort-merge path
+    (merge-probe kernel + expand) and every connection edge through the
+    reach-join — so all four injection points actually dispatch on this
+    small workload (tiny tables otherwise resolve to nested/cross and
+    never touch the faulted seams)."""
+    return EngineConfig(check_policy="selective", d_check=2, impl="ref",
+                        thresholds=Thresholds(nested_join_max=1),
+                        join_impl="sorted", connection_impl="reach")
+
+
+def _chaos_server(graph, **gov_kw):
+    return QueryServer(graph, cfg=_forcing_cfg(),
+                       governor=GovernorConfig(**gov_kw))
+
+
+# ----------------------- the chaos grid -------------------------------- #
+@pytest.mark.parametrize("point", sorted(INJECTION_POINTS))
+@pytest.mark.parametrize("kind", faults.FAULT_KINDS)
+def test_chaos_grid_exact_or_typed(graph, pool, oracle, point, kind):
+    """One fault at call 1 of each injection point: every future still
+    resolves, and every resolved result is identical to the fault-free
+    oracle.  A single transient fault must never surface to the client —
+    the retry/ladder machinery absorbs it."""
+    srv = _chaos_server(graph)
+    # warm-up (fault-free): compiles shapes, fills the plan cache
+    for f in srv.submit_many(pool, wait=True):
+        f.result()
+    with FaultInjector(Fault(point, kind, at=1, delay_s=0.01)) as fi:
+        futures = srv.submit_many(pool, wait=True)
+        assert all(f.done() for f in futures)   # flush never hangs
+        for q_idx, f in enumerate(futures):
+            res = f.result()                    # transient fault: no error
+            assert res.result_set() == oracle[q_idx], (point, kind, q_idx)
+    assert fi.fired, f"fault at {point} never exercised"
+    t = srv.telemetry()
+    assert t["query_errors"] == 0
+    if kind == "raise":
+        # a hard failure can only have been absorbed by the ladder
+        assert t["governor"]["degraded_queries"] >= 1
+
+
+@pytest.mark.parametrize("point", sorted(INJECTION_POINTS))
+def test_chaos_persistent_fault_degrades_or_fails_typed(graph, pool,
+                                                        oracle, point):
+    """A PERSISTENT hard fault (raise on every call).  The ladder's
+    force_simple_impls rung avoids the kernel/expand/reach seams
+    entirely, so those recover exactly with degraded_steps recorded; the
+    cache_lookup seam is hit by every rung and must fail typed —
+    DegradationExhausted listing every attempt, never a wrong result."""
+    srv = _chaos_server(graph)
+    for f in srv.submit_many(pool, wait=True):
+        f.result()
+    with FaultInjector(Fault(point, "raise", every=1)) as fi:
+        futures = srv.submit_many(pool, wait=True)
+        assert all(f.done() for f in futures)
+        for q_idx, f in enumerate(futures):
+            try:
+                res = f.result()
+            except ServingError as e:
+                assert isinstance(e, (QueryError, DegradationExhausted,
+                                      QuarantinedError)), (point, q_idx)
+            else:
+                assert res.result_set() == oracle[q_idx], (point, q_idx)
+                if res.stats.degraded_steps:
+                    assert res.stats.degraded_steps[-1] in (
+                        "skip_check", "greedy_plan", "force_simple_impls",
+                        "truncate")
+    assert fi.fired
+    # the faulted point was exercised on every query that touched it,
+    # and at least one query went through the ladder or failed typed
+    gov = srv.telemetry()["governor"]
+    assert gov["degraded_queries"] + srv.query_errors >= 1
+
+
+def test_chaos_degraded_steps_recorded_and_calibration_skipped(graph,
+                                                               pool):
+    """Ladder successes stamp stats.degraded_steps, and the Calibrator
+    refuses that evidence (degraded configs would poison the EWMAs)."""
+    srv = _chaos_server(graph)
+    for f in srv.submit_many(pool, wait=True):
+        f.result()
+    before = srv.calibrator.snapshot()
+    with FaultInjector(Fault("kernel_dispatch", "raise", every=1)):
+        futures = srv.submit_many(pool, wait=True)
+        degraded = [f.result() for f in futures if f.done()]
+    stepped = [r for r in degraded if r.stats.degraded_steps]
+    assert stepped, "persistent kernel fault should force the ladder"
+    assert srv.calibrator.degraded_skipped >= len(stepped)
+    after = srv.calibrator.snapshot()
+    for k in ("join_est_scale", "conn_sel_scale", "reach_scale"):
+        assert after[k] == before[k]
+
+
+# ----------------------- budgets feed the ladder ------------------------ #
+def test_budget_exceeded_walks_ladder_then_fails_typed(graph, pool):
+    """An impossible row budget aborts the primary AND every rung (each
+    attempt gets a fresh budget with the same bounds), so the future
+    fails with DegradationExhausted caused by BudgetExceeded — which
+    still carries the partial stats of the aborted primary run."""
+    srv = _chaos_server(graph, max_rows=0)
+    q = pool[0]
+    f = srv.submit(q)
+    srv.flush()
+    with pytest.raises(DegradationExhausted) as ei:
+        f.result()
+    exc = ei.value
+    assert isinstance(exc.__cause__, BudgetExceeded)
+    assert exc.__cause__.reason == "rows"
+    assert exc.__cause__.stats is not None      # partial stats survive
+    assert exc.__cause__.stats.budget_checks >= 1
+    assert [name for name, _ in exc.attempts] == [
+        "primary", "skip_check", "greedy_plan", "force_simple_impls",
+        "truncate"]
+    assert srv.telemetry()["governor"]["budget_exceeded"] == 1
+    assert srv.telemetry()["governor"]["exhausted"] == 1
+
+
+def test_generous_budget_never_triggers(graph, pool, oracle):
+    srv = _chaos_server(graph, deadline_s=300.0, max_rows=1 << 40,
+                        max_capacity=1 << 40)
+    futures = srv.submit_many(pool, wait=True)
+    for q_idx, f in enumerate(futures):
+        assert f.result().result_set() == oracle[q_idx]
+    gov = srv.telemetry()["governor"]
+    assert gov["budget_exceeded"] == 0 and gov["degraded_queries"] == 0
+    assert srv.telemetry()["stats_rollup"]["budget_checks"] > 0
+
+
+# -------------------------- admission control --------------------------- #
+def test_admission_control_sheds_beyond_max_pending(graph, pool, oracle):
+    srv = QueryServer(graph, impl="ref",
+                      governor=GovernorConfig(max_pending=2))
+    futures = [srv.submit(pool[i % len(pool)]) for i in range(5)]
+    shed = [f for f in futures if f.done()]
+    assert len(shed) == 3                       # admitted 2, shed 3
+    for f in shed:
+        with pytest.raises(RejectedError):
+            f.result()
+    srv.flush()
+    for f in futures[:2]:
+        res = f.result()
+        assert res.result_set() in oracle
+    t = srv.telemetry()
+    assert t["queries_shed"] == 3
+    assert t["governor"]["shed_submit"] == 3
+    # shed-at-admission is not an execution error
+    assert t["query_errors"] == 0 and t["queries_served"] == 2
+
+
+def test_flush_wall_budget_sheds_tail_not_head(graph, pool):
+    """An exhausted per-flush wall budget sheds remaining buckets with
+    RejectedError instead of hanging the flush; a generous budget sheds
+    nothing."""
+    srv = QueryServer(graph, impl="ref",
+                      governor=GovernorConfig(flush_wall_s=0.0))
+    futures = srv.submit_many(pool, wait=True)
+    assert all(f.done() for f in futures)
+    for f in futures:
+        with pytest.raises(RejectedError, match="flush wall budget"):
+            f.result()
+    assert srv.telemetry()["governor"]["shed_flush"] >= 1
+    assert srv.batcher.telemetry.shed == len(pool)
+
+    srv2 = QueryServer(graph, impl="ref",
+                       governor=GovernorConfig(flush_wall_s=300.0))
+    for f in srv2.submit_many(pool, wait=True):
+        f.result()                              # nothing shed
+    assert srv2.telemetry()["governor"]["shed_flush"] == 0
+
+
+def test_flush_wall_budget_serial_path(graph, pool):
+    srv = QueryServer(graph, impl="ref", batching=False,
+                      governor=GovernorConfig(flush_wall_s=0.0))
+    futures = srv.submit_many(pool, wait=True)
+    for f in futures:
+        with pytest.raises(RejectedError):
+            f.result()
+
+
+# -------------------------- circuit breaker ----------------------------- #
+def test_quarantine_cooldown_and_halfopen_recovery(graph, pool):
+    """A template failing through the whole ladder trips its breaker:
+    later submissions fail fast with QuarantinedError (no engine work),
+    the cooldown expires into a half-open probe, and a healthy probe
+    closes the breaker again."""
+    q = pool[1]                                 # has a connection edge ->
+    fp = None                                   # touches the reach cache
+    srv = _chaos_server(graph, breaker_threshold=2,
+                        breaker_cooldown_s=0.2)
+    for f in srv.submit_many(pool, wait=True):
+        f.result()                              # warm, healthy
+    want = srv.query(q).result_set()
+    # cache_lookup is on every rung's path (cross/exact-reach included),
+    # so a persistent fault there defeats the entire ladder
+    with FaultInjector(Fault("cache_lookup", "raise", every=1)):
+        for _ in range(2):                      # threshold failures
+            f = srv.submit(q)
+            srv.flush()
+            with pytest.raises(DegradationExhausted):
+                f.result()
+            fp = f.fingerprint
+        assert srv.governor.breaker.state(fp) == "open"
+        # count real engine executions from here: quarantined
+        # submissions must fail fast without touching the engine
+        engine_calls = []
+        real_exec = srv.engine.execute_prepared
+
+        def counting(pq, budget=None):
+            engine_calls.append(pq.fingerprint)
+            return (real_exec(pq) if budget is None
+                    else real_exec(pq, budget=budget))
+
+        srv.engine.execute_prepared = counting
+        f = srv.submit(q)
+        srv.flush()
+        with pytest.raises(QuarantinedError) as ei:
+            f.result()
+        assert ei.value.retry_after_s > 0
+    # fault gone, but cooldown not elapsed: still quarantined (and the
+    # quarantined path did engine-visible work on neither attempt)
+    f = srv.submit(q)
+    srv.flush()
+    with pytest.raises(QuarantinedError):
+        f.result()
+    assert not engine_calls                     # denied without engine work
+    time.sleep(0.25)                            # cooldown expires
+    res = srv.query(q)                          # half-open probe: healthy
+    assert res.result_set() == want
+    snap = srv.governor.breaker.snapshot()
+    assert snap["trips"] >= 1 and snap["denials"] >= 2
+    assert snap["probes"] >= 1 and snap["recoveries"] == 1
+    assert srv.governor.breaker.state(fp) == "closed"
+    assert len(engine_calls) == 1               # exactly the probe ran
+
+
+# ---------------------- future error semantics -------------------------- #
+def test_prepare_failure_isolated_and_phase_tagged(graph, pool,
+                                                   monkeypatch):
+    srv = QueryServer(graph, impl="ref")
+    bad_fp = template_fingerprint(pool[0])
+    real = srv.engine.prepare
+
+    def flaky(query, fingerprint=None, version=0):
+        if fingerprint == bad_fp:
+            raise ValueError("planner blew up")
+        return real(query, fingerprint=fingerprint, version=version)
+
+    monkeypatch.setattr(srv.engine, "prepare", flaky)
+    f_bad, f_ok = srv.submit_many([pool[0], pool[1]], wait=True)
+    assert f_bad.done() and f_ok.done()
+    with pytest.raises(QueryError) as ei:
+        f_bad.result()
+    assert ei.value.phase == "prepare"
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert "planner blew up" in str(ei.value)
+    assert f_ok.result() is not None
+    assert srv.query_errors == 1
+
+
+def test_execute_failure_wrapped_with_fingerprint_and_cause(graph, pool,
+                                                            monkeypatch):
+    srv = QueryServer(graph, impl="ref")
+    boom = RuntimeError("engine exploded")
+    monkeypatch.setattr(srv.engine, "execute_prepared",
+                        lambda pq, budget=None: (_ for _ in ()).throw(boom))
+    f = srv.submit(pool[0])
+    srv.flush()
+    with pytest.raises(QueryError) as ei:
+        f.result()
+    assert ei.value.__cause__ is boom
+    assert ei.value.phase == "execute"
+    assert ei.value.fingerprint == template_fingerprint(pool[0])
+    # QueryError is a RuntimeError carrying the cause's message, so
+    # pre-existing `except RuntimeError` / match= call sites still work
+    assert isinstance(ei.value, RuntimeError)
+    assert "engine exploded" in str(ei.value)
+
+
+def test_failed_future_result_does_not_redrain(graph, pool, monkeypatch):
+    srv = QueryServer(graph, impl="ref")
+    monkeypatch.setattr(
+        srv.engine, "execute_prepared",
+        lambda pq, budget=None: (_ for _ in ()).throw(RuntimeError("x")))
+    f = srv.submit(pool[0])
+    with pytest.raises(QueryError):
+        f.result()                              # lazy flush resolves it
+    flushes = []
+    monkeypatch.setattr(srv, "flush",
+                        lambda: flushes.append(1))
+    for _ in range(3):                          # terminal: no re-drain
+        with pytest.raises(QueryError):
+            f.result()
+    assert not flushes
+
+
+def test_query_errors_accounting_exact(graph, pool, monkeypatch):
+    """Every failed future increments query_errors exactly once; served
+    and failed partition the admitted set."""
+    srv = QueryServer(graph, impl="ref")
+    bad_fp = template_fingerprint(pool[0])
+    real = srv.engine.execute_prepared
+
+    def flaky(pq, budget=None):
+        if pq.fingerprint == bad_fp:
+            raise RuntimeError("boom")
+        return real(pq)
+
+    monkeypatch.setattr(srv.engine, "execute_prepared", flaky)
+    futures = srv.submit_many([pool[0], pool[1], pool[0], pool[2]],
+                              wait=True)
+    failed = sum(1 for f in futures if f._error is not None)
+    assert failed == 2                          # both pool[0] submissions
+    assert srv.query_errors == 2
+    assert srv.queries_served == 2
+    assert srv.telemetry()["query_errors"] == 2
+    # repeated result() calls never double-count
+    for f in futures:
+        for _ in range(2):
+            try:
+                f.result()
+            except ServingError:
+                pass
+    assert srv.query_errors == 2
+
+
+def test_unexpected_flush_crash_fails_all_futures_typed(graph, pool,
+                                                        monkeypatch):
+    """If the flush machinery ITSELF crashes (a bug, not a query
+    failure), the backstop still resolves every pending future with a
+    typed error — no future can dangle and re-drain forever."""
+    from repro.serve import IncompleteFlushError
+    srv = QueryServer(graph, impl="ref")
+    monkeypatch.setattr(srv.batcher, "flush",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("batcher bug")))
+    futures = srv.submit_many(pool)
+    with pytest.raises(RuntimeError, match="batcher bug"):
+        srv.flush()
+    assert all(f.done() for f in futures)
+    for f in futures:
+        with pytest.raises(IncompleteFlushError):
+            f.result()
+    assert srv.query_errors == len(pool)

@@ -1,0 +1,284 @@
+"""Resource governance units: budgets, circuit breaker, degradation
+ladder configs, reach-cache byte budget, and capacity replay.
+
+These are the fast, engine-free (or nearly so) tests of the governance
+building blocks; the end-to-end behavior under injected faults lives in
+test_chaos.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (make_engine, CapEstimate, JoinEstimator,
+                        ReachCache, Thresholds)
+from repro.core.engine import EngineConfig
+from repro.core.matching import CandidateTable, planned_join, _pow2
+from repro.data import random_graph, random_query
+from repro.serve import (Budget, BudgetExceeded, CircuitBreaker,
+                         GovernorConfig, default_ladder)
+
+
+# ------------------------------ Budget --------------------------------- #
+def test_budget_rows_bound():
+    b = Budget(max_rows=100)
+    b.checkpoint("match", rows=60)
+    with pytest.raises(BudgetExceeded) as ei:
+        b.checkpoint("match", rows=60)
+    assert ei.value.reason == "rows"
+    assert ei.value.phase == "match"
+    assert ei.value.rows == 120
+
+
+def test_budget_capacity_bound():
+    b = Budget(max_capacity=1 << 10)
+    b.checkpoint("match", cap=1 << 10)          # at the bound: fine
+    with pytest.raises(BudgetExceeded) as ei:
+        b.checkpoint("connections", cap=1 << 11)
+    assert ei.value.reason == "capacity"
+    assert ei.value.phase == "connections"
+
+
+def test_budget_deadline_bound():
+    b = Budget(deadline_s=1e-9)
+    import time
+    time.sleep(0.001)
+    with pytest.raises(BudgetExceeded) as ei:
+        b.checkpoint("check")
+    assert ei.value.reason == "deadline"
+
+
+def test_budget_carries_partial_stats():
+    from repro.core.engine import QueryStats
+    qs = QueryStats()
+    qs.join_actual_rows = 7
+    b = Budget(max_rows=1)
+    with pytest.raises(BudgetExceeded) as ei:
+        b.checkpoint("match", rows=2, stats=qs)
+    assert ei.value.stats is qs
+    assert ei.value.stats.join_actual_rows == 7
+
+
+def test_budget_unbounded_never_raises():
+    b = Budget()
+    for _ in range(100):
+        b.checkpoint("match", rows=1 << 30, cap=1 << 30)
+    assert b.checks == 100
+
+
+# -------------------------- CircuitBreaker ----------------------------- #
+def test_breaker_trips_after_threshold_and_recovers():
+    cb = CircuitBreaker(threshold=3, cooldown_s=10.0)
+    fp = "fp-a"
+    now = 1000.0
+    for _ in range(2):
+        cb.record(fp, ok=False, now=now)
+        assert cb.admit(fp, now=now) == "allow"
+    cb.record(fp, ok=False, now=now)            # 3rd consecutive failure
+    assert cb.state(fp) == "open"
+    assert cb.admit(fp, now=now + 1.0) == "deny"
+    assert cb.retry_after(fp, now=now + 1.0) == pytest.approx(9.0)
+    # cooldown elapsed -> half-open single probe
+    assert cb.admit(fp, now=now + 11.0) == "probe"
+    cb.record(fp, ok=True, now=now + 11.0)
+    assert cb.state(fp) == "closed"
+    assert cb.admit(fp, now=now + 11.0) == "allow"
+    assert cb.recoveries == 1 and cb.trips == 1
+
+
+def test_breaker_failed_probe_backs_off_exponentially():
+    cb = CircuitBreaker(threshold=1, cooldown_s=10.0, backoff=2.0)
+    fp = "fp-b"
+    cb.record(fp, ok=False, now=0.0)            # trip: cooldown 10
+    assert cb.admit(fp, now=5.0) == "deny"
+    assert cb.admit(fp, now=11.0) == "probe"
+    cb.record(fp, ok=False, now=11.0)           # failed probe: cooldown 20
+    assert cb.admit(fp, now=25.0) == "deny"
+    assert cb.admit(fp, now=32.0) == "probe"
+    assert cb.trips == 2
+
+
+def test_breaker_success_resets_consecutive_count():
+    cb = CircuitBreaker(threshold=3)
+    fp = "fp-c"
+    for _ in range(5):
+        cb.record(fp, ok=False, now=0.0)
+        cb.record(fp, ok=True, now=0.0)         # never 3 consecutive
+    assert cb.state(fp) == "closed" and cb.trips == 0
+
+
+def test_breaker_isolates_fingerprints():
+    cb = CircuitBreaker(threshold=1, cooldown_s=10.0)
+    cb.record("bad", ok=False, now=0.0)
+    assert cb.admit("bad", now=1.0) == "deny"
+    assert cb.admit("good", now=1.0) == "allow"
+
+
+# ------------------------- degradation ladder -------------------------- #
+def test_default_ladder_is_cumulative_and_exact_except_last():
+    cfg = EngineConfig()
+    gov = GovernorConfig(degraded_row_cap=1 << 10)
+    rungs = default_ladder()
+    names = [r.name for r in rungs]
+    assert names == ["skip_check", "greedy_plan", "force_simple_impls",
+                     "truncate"]
+    c1 = rungs[0].apply(cfg, gov)
+    assert c1.check_policy == "never" and c1.plan_mode == cfg.plan_mode
+    c2 = rungs[1].apply(cfg, gov)
+    assert c2.check_policy == "never" and c2.plan_mode == "greedy"
+    c3 = rungs[2].apply(cfg, gov)
+    assert (c3.join_impl, c3.connection_impl) == ("nested", "cross")
+    assert c3.plan_mode == "greedy" and c3.check_policy == "never"
+    # only the last rung may truncate (reduced row cap)
+    assert [r.truncate for r in rungs] == [False, False, False, True]
+    c4 = rungs[3].apply(cfg, gov)
+    assert c4.max_rows == 1 << 10
+    # rung application never mutates the base config
+    assert cfg.check_policy == "selective" and cfg.max_rows == 1 << 20
+
+
+def test_truncate_rung_respects_tighter_existing_cap():
+    cfg = EngineConfig(max_rows=100)
+    gov = GovernorConfig(degraded_row_cap=1 << 14)
+    assert default_ladder()[3].apply(cfg, gov).max_rows == 100
+
+
+def test_with_config_shares_dataset_state_not_reach_cache():
+    g = random_graph(n_nodes=40, n_edges=100, n_preds=3, seed=5)
+    eng = make_engine(g, "rdf_h", impl="ref")
+    eng.reach_cache = ReachCache(max_entries=10)
+    sib = eng.with_config(EngineConfig(check_policy="never"))
+    assert sib.graph is eng.graph and sib.ni is eng.ni
+    assert sib.stats is eng.stats and sib._dev_cache is eng._dev_cache
+    assert sib.reach_cache is None
+    assert sib.cfg.check_policy == "never"
+    assert eng.cfg.check_policy == "selective"
+
+
+# ----------------------- ReachCache byte budget ------------------------ #
+def test_reach_cache_byte_budget_evicts_lru():
+    rc = ReachCache(max_bytes=10 * 4 * 100)     # ~10 arrays of 100 int32
+    for i in range(25):
+        rc.put_array(i, 1, 1, np.arange(100, dtype=np.int32))
+    assert rc.total_bytes <= rc.max_bytes
+    assert rc.evictions == 15 and len(rc) == 10
+    # LRU order: oldest keys evicted, newest retained
+    assert rc.get_array(24, 1, 1) is not None
+    assert rc.get_array(0, 1, 1) is None
+
+
+def test_reach_cache_accounts_both_mirrors():
+    rc = ReachCache()
+    rc.put_array(7, 2, 1, np.arange(50, dtype=np.int32))
+    b_array = rc.total_bytes
+    assert b_array == 50 * 4
+    rc.get_set(7, 2, 1)                         # lazy set mirror conversion
+    assert rc.total_bytes == b_array + 8 * 50
+    rc.put_set(8, 2, 1, set(range(10)))
+    assert rc.total_bytes == b_array + 8 * 50 + 8 * 10
+
+
+def test_reach_cache_oversized_entry_stays_as_cache_of_one():
+    rc = ReachCache(max_bytes=64)
+    rc.put_array(1, 1, 1, np.arange(1000, dtype=np.int32))   # >> budget
+    assert len(rc) == 1                          # kept: it's in active use
+    rc.put_array(2, 1, 1, np.arange(1000, dtype=np.int32))
+    assert len(rc) == 1 and rc.evictions == 1    # old giant evicted
+
+
+def test_reach_cache_entry_bound_still_enforced():
+    rc = ReachCache(max_entries=3, max_bytes=None)
+    for i in range(6):
+        rc.put_set(i, 1, 1, {i})
+    assert len(rc) == 3 and rc.evictions == 3
+    assert rc.total_bytes == 3 * 8
+
+
+# -------------------------- capacity replay ---------------------------- #
+def _table(cols, rows):
+    import jax.numpy as jnp
+    arr = np.asarray(rows, dtype=np.int32)
+    cap = _pow2(len(arr))
+    pad = np.full((cap - len(arr), arr.shape[1]), -1, np.int32)
+    return CandidateTable(cols=tuple(cols),
+                          rows=jnp.asarray(np.vstack([arr, pad])),
+                          count=len(arr))
+
+
+def test_planned_join_pins_capacity_from_cap_estimate():
+    a = _table((0, 1), [[i, i % 4] for i in range(20)])
+    b = _table((1, 2), [[i % 4, i + 100] for i in range(20)])
+    recorded = []
+    out = planned_join(a, b, est=CapEstimate(100, 1 << 9), impl="nested",
+                       record=lambda *r: recorded.append(r))
+    assert out.cap == 1 << 9                    # pinned, not re-derived
+    impl, est, actual, retried, cap = recorded[0]
+    assert cap == 1 << 9 and not retried
+    # without the pin the formula would have chosen a different capacity
+    out2 = planned_join(a, b, est=100, impl="nested")
+    assert out2.cap != 1 << 9
+    assert out.result_set() == out2.result_set()
+
+
+def test_planned_join_records_capacity():
+    a = _table((0, 1), [[i, i % 4] for i in range(20)])
+    b = _table((1, 2), [[i % 4, i + 100] for i in range(20)])
+    recorded = []
+    out = planned_join(a, b, est=4, impl="nested",
+                       record=lambda *r: recorded.append(r))
+    impl, est, actual, retried, cap = recorded[0]
+    assert actual == out.count and cap == out.cap
+
+
+def test_cold_run_records_caps_and_warm_replays_them(monkeypatch):
+    """The satellite end-to-end: join_seq stores (rows, cap) pairs and
+    warm run 1 executes every estimator-sized join at exactly the cold
+    run's capacities (steady-state jit shapes, no overflow retries)."""
+    import repro.core.matching as matching_mod
+    import repro.core.engine as engine_mod
+    g = random_graph(n_nodes=100, n_edges=300, n_preds=3, seed=11)
+    q = random_query(g, size=4, seed=21, n_connection=1, d_c=2)
+    eng = make_engine(g, "rdf_h", impl="ref")
+    caps_per_run = []
+    real = matching_mod.planned_join
+
+    def spy(a, b, est, **kw):
+        out = real(a, b, est, **kw)
+        if est is not None:
+            caps_per_run[-1].append(out.cap)
+        return out
+
+    monkeypatch.setattr(matching_mod, "planned_join", spy)
+    monkeypatch.setattr(engine_mod, "planned_join", spy)
+    pq = eng.prepare(q)
+    caps_per_run.append([])
+    cold = eng.execute_prepared(pq)
+    assert pq.join_seq and all(isinstance(e, tuple) and len(e) == 2
+                               for e in pq.join_seq)
+    assert [c for _, c in pq.join_seq] == caps_per_run[0]
+    caps_per_run.append([])
+    warm = eng.execute_prepared(pq)
+    assert warm.stats.cache_hit
+    assert warm.stats.join_retries == 0
+    assert caps_per_run[1] == caps_per_run[0]   # byte-identical shapes
+    assert warm.result_set() == cold.result_set()
+
+
+def test_warm_replay_reuses_retry_capacity(monkeypatch):
+    """A cold join that took an overflow retry lands on a capacity the
+    size formula would not re-derive; the warm replay must still pin it."""
+    from repro.core.planner import JoinEstimator
+    g = random_graph(n_nodes=100, n_edges=300, n_preds=3, seed=11)
+    q = random_query(g, size=5, seed=28, n_connection=0)
+    eng = make_engine(g, "rdf_h", impl="ref")
+    # sabotage the analytic estimator so the cold run underestimates
+    # every join and is forced through the overflow-retry path
+    monkeypatch.setattr(JoinEstimator, "edge_join",
+                        lambda self, *a, **k: 1)
+    monkeypatch.setattr(JoinEstimator, "table_join",
+                        lambda self, *a, **k: 1)
+    pq = eng.prepare(q)
+    cold = eng.execute_prepared(pq)
+    if cold.stats.join_retries == 0:
+        pytest.skip("workload produced no overflow retry")
+    warm = eng.execute_prepared(pq)
+    assert warm.stats.join_retries == 0         # replay absorbed them
+    assert warm.result_set() == cold.result_set()

@@ -469,11 +469,19 @@ def test_calibrator_bounds_anchor_to_reference_defaults():
 # --------------------------- replay estimator --------------------------- #
 def test_replay_estimator_replays_then_falls_back():
     base = JoinEstimator(None, {0: 10, 1: 10})
-    rep = ReplayEstimator(base, [7, 42])
-    assert rep.edge_join(5, None, True, 3) == 7
-    assert rep.table_join(4, 4, (0,)) == 42
-    # cursor exhausted -> analytic fallback
-    assert rep.table_join(4, 4, (0,)) == base.table_join(4, 4, (0,))
+    # recorded entries are (rows, executed capacity) pairs
+    rep = ReplayEstimator(base, [(7, 64), (42, 128)])
+    e = rep.edge_join(5, None, True, 3)
+    assert e == 7 and e.cap == 64
+    e = rep.table_join(4, 4, (0,))
+    assert e == 42 and e.cap == 128
+    # cursor exhausted -> analytic fallback (no pinned capacity)
+    fb = rep.table_join(4, 4, (0,))
+    assert fb == base.table_join(4, 4, (0,))
+    assert getattr(fb, "cap", None) is None
+    # bare-int legacy entries still replay as plain row counts
+    rep2 = ReplayEstimator(base, [9])
+    assert rep2.table_join(4, 4, (0,)) == 9
 
 
 # ------------------------- QueryStats.to_dict --------------------------- #
@@ -491,6 +499,7 @@ def test_query_stats_to_dict_schema_pinned():
         "conn_reach_pairs", "conn_connected_pairs",
         "conn_endpoint_rows", "conn_endpoint_distinct",
         "conn_est_pairs", "conn_est_reach_pairs",
+        "budget_checks", "degraded_steps",
         "join_strategies", "conn_strategies", "plan",
     }
     d = QueryStats().to_dict()
