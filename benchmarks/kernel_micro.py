@@ -1,16 +1,231 @@
-"""Kernel micro-benchmarks: ref (jnp) implementations on CPU; the Pallas
-paths are validated in interpret mode by tests (timing them on CPU is
-meaningless)."""
+"""Kernel micro-benchmarks -> BENCH_kernel.json.
+
+Three sections:
+
+  fused    Fused one-dispatch sort-merge chain (kernels.fused_join.
+           sort_probe_expand) vs the staged pack/sort/probe/expand path,
+           unit-fanout joins 1e2-1e5 rows in two key shapes: 'single'
+           (one shared column — identity keys, both paths sort the same
+           arrays, the win is the collapsed dispatch/sync overhead) and
+           'multi' (two shared columns — dense-rank packing, where the
+           fused chain extracts both sides' sorted orders from its ONE
+           lexsort while the staged path pays the packing lexsort PLUS
+           two argsorts, so the win persists at every size).  Warm wall
+           time AND host->device dispatch counts at the module seams
+           (fused = 1 dispatch, staged = 5).
+  radix    Radix hash join vs sort-merge on the asymmetric shape it is
+           built for (large probe side A, small build side B = A/32):
+           wall-time sweep locating the crossover, plus the planner's
+           resolve_join_impl pick at each point — the bench asserts
+           nothing, the JSON lets future PRs track whether 'auto' still
+           picks the winner.
+  legacy   ref (jnp) interval/bitmask/intersect rows (CPU; the Pallas
+           paths are validated in interpret mode by tests).
+
+Timing clears each table's cached sorted runs between calls so every
+iteration pays the full chain (run reuse is join_micro's subject, not
+this bench's).  Smoke mode (REPRO_BENCH_KERNEL_SMOKE=1, used by CI)
+shrinks the sweeps and asserts fused/staged/radix result identity.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
+import jax.numpy as jnp
 
-from repro.kernels import ops
+import repro.core.matching as matching
+import repro.kernels.fused_join as kfused
+import repro.kernels.ops as kops
+from repro.core.matching import Table, join_tables, resolve_join_impl, _pow2
+
+SMOKE = os.environ.get("REPRO_BENCH_KERNEL_SMOKE", "") not in ("", "0")
+FUSED_SIZES = (100, 1_000) if SMOKE else (100, 1_000, 10_000, 100_000)
+RADIX_A_SIZES = ((1 << 12, 1 << 14) if SMOKE
+                 else (1 << 12, 1 << 14, 1 << 16, 1 << 17))
+REPEATS = 2 if SMOKE else 5
+
+# Module seams whose calls == host->device dispatch points of a join.
+# matching binds _pack_keys at import, so the matching-level aliases are
+# patched (same seams the chaos FaultInjector uses).
+_SEAMS = (
+    (matching, "_pack_keys"),
+    (matching, "_sort_rows_by_key"),
+    (matching, "_merge_expand"),
+    (kops, "merge_probe"),
+    (kops, "radix_probe"),
+    (kfused, "sort_probe_expand"),
+    (kfused, "sort_probe"),
+)
 
 
-def _time(fn, *args, reps=5):
+def _mk(cols, n, domain, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, max(domain, 1), (n, len(cols))).astype(np.int32)
+    cap = _pow2(n)
+    rows = np.full((cap, len(cols)), -1, np.int32)
+    rows[:n] = data
+    return Table(cols=tuple(cols), rows=jnp.asarray(rows), count=n)
+
+
+def _time_join(fn, repeats=REPEATS):
+    fn()                                        # warm: jit + first shapes
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        out.rows.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6                           # us
+
+
+def _count_dispatches(fn):
+    """Run fn once with every seam wrapped by a counter; returns total
+    seam calls (the dispatch count of one join)."""
+    counts = {"n": 0}
+    saved = []
+
+    def wrap(orig):
+        def wrapper(*a, **kw):
+            counts["n"] += 1
+            return orig(*a, **kw)
+        return wrapper
+
+    for mod, name in _SEAMS:
+        orig = getattr(mod, name)
+        saved.append((mod, name, orig))
+        setattr(mod, name, wrap(orig))
+    try:
+        fn()
+    finally:
+        for mod, name, orig in saved:
+            setattr(mod, name, orig)
+    return counts["n"]
+
+
+def _rows_multiset(t):
+    return sorted(tuple(int(x) for x in r) for r in t.numpy())
+
+
+def run(scale=None):
+    fused_tmpl = lambda: {"sizes": [], "fused_us": [], "staged_us": [],
+                          "speedup": [], "fused_dispatches": [],
+                          "staged_dispatches": []}
+    results = {"smoke": SMOKE,
+               "fused": {"single": fused_tmpl(), "multi": fused_tmpl()},
+               "radix": {"a_sizes": [], "b_sizes": [], "sorted_us": [],
+                         "radix_us": [], "speedup": [], "auto_picks": []}}
+
+    # ------------------ fused vs staged sort-merge -------------------- #
+    for variant in ("single", "multi"):
+        for n in FUSED_SIZES:
+            if variant == "single":
+                a = _mk((0, 1), n, n, seed=n)
+                b = _mk((1, 2), n, n, seed=n + 1)
+            else:
+                # two shared cols, key domain dom^2 ~ n (unit fanout);
+                # the build side shrinks at the top so |A|*|B| stays
+                # inside the fused chain's int32 product gate
+                dom = max(int(n ** 0.5), 4)
+                bn = min(n, ((1 << 31) - 1) // max(n, 1))
+                a = _mk((0, 1), n, dom, seed=n)
+                b = _mk((0, 1, 2), bn, dom, seed=n + 1)
+            cold = join_tables(a, b, impl="sorted", fuse=True)
+            cap = cold.cap                      # steady-state capacity
+
+            def fused():
+                a._runs.clear(), b._runs.clear()
+                return join_tables(a, b, impl="sorted", fuse=True, cap=cap)
+
+            def staged():
+                a._runs.clear(), b._runs.clear()
+                return join_tables(a, b, impl="sorted", fuse=False, cap=cap)
+
+            if SMOKE:
+                assert _rows_multiset(fused()) == _rows_multiset(staged())
+            fused_us = _time_join(fused)
+            staged_us = _time_join(staged)
+            fd = _count_dispatches(fused)
+            sd = _count_dispatches(staged)
+            speedup = staged_us / fused_us
+            r = results["fused"][variant]
+            r["sizes"].append(n)
+            r["fused_us"].append(fused_us)
+            r["staged_us"].append(staged_us)
+            r["speedup"].append(speedup)
+            r["fused_dispatches"].append(fd)
+            r["staged_dispatches"].append(sd)
+            yield (f"kernel.join_fused.{variant}.{n}", round(fused_us, 1),
+                   f"dispatches={fd}")
+            yield (f"kernel.join_staged.{variant}.{n}", round(staged_us, 1),
+                   f"dispatches={sd};fused_speedup={speedup:.2f}x")
+
+    # --------------------- radix vs sorted sweep ---------------------- #
+    for an in RADIX_A_SIZES:
+        bn = max(an // 32, 256)
+        a = _mk((0, 1), an, bn, seed=an)        # key domain == |B|:
+        b = _mk((1, 2), bn, bn, seed=an + 1)    # ~unit fanout, |out|~|A|
+        cold = join_tables(a, b, impl="sorted")
+        cap = cold.cap
+
+        def srt():
+            a._runs.clear(), b._runs.clear()
+            return join_tables(a, b, impl="sorted", cap=cap)
+
+        def rdx():
+            a._runs.clear(), b._runs.clear()
+            return join_tables(a, b, impl="radix", cap=cap)
+
+        if SMOKE:
+            assert _rows_multiset(srt()) == _rows_multiset(rdx())
+        sorted_us = _time_join(srt)
+        radix_us = _time_join(rdx)
+        pick = resolve_join_impl(an, bn)
+        speedup = sorted_us / radix_us
+        r = results["radix"]
+        r["a_sizes"].append(an)
+        r["b_sizes"].append(bn)
+        r["sorted_us"].append(sorted_us)
+        r["radix_us"].append(radix_us)
+        r["speedup"].append(speedup)
+        r["auto_picks"].append(pick)
+        yield (f"kernel.join_radix.a{an}b{bn}", round(radix_us, 1),
+               f"vs_sorted={speedup:.2f}x;auto={pick}")
+
+    out_path = os.environ.get("REPRO_BENCH_KERNEL_JSON", "BENCH_kernel.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+
+    # --------------------------- legacy rows -------------------------- #
+    rng = np.random.default_rng(0)
+    legacy_iv = ((1024, 64, 4),) if SMOKE else ((1024, 64, 4),
+                                                (8192, 128, 8),
+                                                (32768, 256, 8))
+    for c, bb, j in legacy_iv:
+        ids = np.sort(rng.integers(0, 1 << 20, (c, bb)), 1).astype(np.int32)
+        lo = rng.integers(0, 1 << 19, j).astype(np.int32)
+        hi = lo + (1 << 18)
+        us = _time_scalar(lambda *a: kops.interval_count(*a, impl="ref"),
+                          ids, lo, hi)
+        yield (f"kernel.interval_count.c{c}b{bb}j{j}", round(us, 1),
+               round(c * bb * j / max(us, 1e-9), 1))
+    for c, w in ((4096, 8),) if SMOKE else ((4096, 8), (65536, 16)):
+        cand = rng.integers(0, 1 << 32, (c, w), dtype=np.uint32)
+        q = rng.integers(0, 1 << 32, w, dtype=np.uint32)
+        us = _time_scalar(lambda *a: kops.bitmask_contains(*a, impl="ref"),
+                          cand, q)
+        yield (f"kernel.bitmask.c{c}w{w}", round(us, 1), c)
+    for p, aa, bb in ((2048, 64, 64),) if SMOKE else ((2048, 64, 64),
+                                                      (8192, 128, 128)):
+        x = rng.integers(-1, 1 << 20, (p, aa)).astype(np.int32)
+        y = rng.integers(-1, 1 << 20, (p, bb)).astype(np.int32)
+        us = _time_scalar(lambda *z: kops.intersect_any(*z, impl="ref"), x, y)
+        yield (f"kernel.intersect.p{p}", round(us, 1), p * aa * bb)
+
+
+def _time_scalar(fn, *args, reps=5):
     fn(*args)  # warm/jit
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -19,23 +234,6 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(scale=None):
-    rng = np.random.default_rng(0)
-    for c, b, j in ((1024, 64, 4), (8192, 128, 8), (32768, 256, 8)):
-        ids = np.sort(rng.integers(0, 1 << 20, (c, b)), 1).astype(np.int32)
-        lo = rng.integers(0, 1 << 19, j).astype(np.int32)
-        hi = lo + (1 << 18)
-        us = _time(lambda *a: ops.interval_count(*a, impl="ref"),
-                   ids, lo, hi)
-        yield (f"kernel.interval_count.c{c}b{b}j{j}", round(us, 1),
-               round(c * b * j / max(us, 1e-9), 1))
-    for c, w in ((4096, 8), (65536, 16)):
-        cand = rng.integers(0, 1 << 32, (c, w), dtype=np.uint32)
-        q = rng.integers(0, 1 << 32, w, dtype=np.uint32)
-        us = _time(lambda *a: ops.bitmask_contains(*a, impl="ref"), cand, q)
-        yield (f"kernel.bitmask.c{c}w{w}", round(us, 1), c)
-    for p, a, b in ((2048, 64, 64), (8192, 128, 128)):
-        x = rng.integers(-1, 1 << 20, (p, a)).astype(np.int32)
-        y = rng.integers(-1, 1 << 20, (p, b)).astype(np.int32)
-        us = _time(lambda *z: ops.intersect_any(*z, impl="ref"), x, y)
-        yield (f"kernel.intersect.p{p}", round(us, 1), p * a * b)
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -38,6 +38,10 @@ def main():
 
     print("== 4. the RDF-h planner decision ==")
     eng = make_engine(g, "rdf_h", stats=st)
+    # Joins default to join_impl="auto": the cost model picks nested-loop,
+    # fused sort-merge, or the radix hash join per table pair (radix wins
+    # when a large probe side meets a small build side on a single-column
+    # key).  Force one strategy with e.g. eng.cfg.join_impl = "radix".
     res = eng.execute(q)
     plan = res.stats.plan
     if plan:

@@ -418,7 +418,8 @@ def distinct_column_values(table: Table, col: int) -> np.ndarray:
 def _directed_pairs(graph: RDFGraph, ni: NIIndex, a_vals, b_vals,
                     h_fwd: int, h_bwd: int, src_col: int, dst_col: int,
                     cap: int, impl: str, probe_impl: str, nested_max: int,
-                    cache, telemetry, info: ReachJoinInfo) -> Table:
+                    cache, telemetry, info: ReachJoinInfo,
+                    fuse: bool = True) -> Table:
     """Connected (a, b) pairs for one direction: fwd(a) x bwd(b) joined on
     the shared reach id, deduplicated to distinct endpoint pairs."""
     fn, fr = reach_pairs(graph, ni, a_vals, h_fwd, +1, cap=cap, cache=cache)
@@ -427,7 +428,7 @@ def _directed_pairs(graph: RDFGraph, ni: NIIndex, a_vals, b_vals,
     ta = _pair_table(fr, fn, src_col)
     tb = _pair_table(br, bn, dst_col)
     j = join_tables(ta, tb, impl=impl, nested_max=nested_max,
-                    probe_impl=probe_impl, telemetry=telemetry)
+                    probe_impl=probe_impl, telemetry=telemetry, fuse=fuse)
     out = dedup_project(j, (src_col, dst_col))
     info.peak_cap = max(info.peak_cap, ta.cap, tb.cap, j.cap, out.cap)
     return out
@@ -441,7 +442,8 @@ def connected_pair_table(graph: RDFGraph, ni: NIIndex,
                          nested_max: int = DEFAULT_NESTED_MAX,
                          cache: ReachCache | None = None,
                          telemetry=None,
-                         info: ReachJoinInfo | None = None) -> Table:
+                         info: ReachJoinInfo | None = None,
+                         fuse: bool = True) -> Table:
     """Distinct (a, b) node pairs with a directed path a->b of length
     <= d_c (plus b->a when bidirectional), as a 2-column table over
     `cols` = (src_col, dst_col), sorted by it.
@@ -453,11 +455,11 @@ def connected_pair_table(graph: RDFGraph, ni: NIIndex,
     h_fwd, h_bwd = hop_split(d_c)
     cp = _directed_pairs(graph, ni, a_vals, b_vals, h_fwd, h_bwd,
                          src_col, dst_col, cap, impl, probe_impl,
-                         nested_max, cache, telemetry, info)
+                         nested_max, cache, telemetry, info, fuse)
     if bidirectional:
         rev = _directed_pairs(graph, ni, b_vals, a_vals, h_fwd, h_bwd,
                               dst_col, src_col, cap, impl, probe_impl,
-                              nested_max, cache, telemetry, info)
+                              nested_max, cache, telemetry, info, fuse)
         # union: concat the padded buffers (valid rows need not form a
         # prefix — dedup_project tolerates that) and re-dedup
         perm = np.asarray([rev.cols.index(c) for c in cp.cols])
@@ -479,7 +481,8 @@ def reach_join(graph: RDFGraph, ni: NIIndex, ta: Table, tb: Table,
                impl: str = "auto", nested_max: int = DEFAULT_NESTED_MAX,
                probe_impl: str = "auto", cache: ReachCache | None = None,
                telemetry=None, record=None,
-               info: ReachJoinInfo | None = None) -> Table:
+               info: ReachJoinInfo | None = None,
+               fuse: bool = True) -> Table:
     """Join tables `ta` and `tb` on the connection constraint
     dist(ta.src_col -> tb.dst_col) <= d_c, WITHOUT materializing the
     cross product: equivalent to
@@ -498,16 +501,17 @@ def reach_join(graph: RDFGraph, ni: NIIndex, ta: Table, tb: Table,
     cp = connected_pair_table(graph, ni, a_vals, b_vals, d_c, bidirectional,
                               (src_col, dst_col), cap=cap, impl=impl,
                               probe_impl=probe_impl, nested_max=nested_max,
-                              cache=cache, telemetry=telemetry, info=info)
+                              cache=cache, telemetry=telemetry, info=info,
+                              fuse=fuse)
     # A |x| pairs on src_col, then |x| B on dst_col: both sized exactly
     # (no estimate: counts are known after each probe, so planned_join
     # allocates the exact pow2 capacity).
     t1 = planned_join(ta, cp, None, row_limit=row_limit, impl=impl,
                       nested_max=nested_max, probe_impl=probe_impl,
-                      record=record, telemetry=telemetry)
+                      record=record, telemetry=telemetry, fuse=fuse)
     out = planned_join(t1, tb, None, row_limit=row_limit, impl=impl,
                        nested_max=nested_max, probe_impl=probe_impl,
-                       record=record, telemetry=telemetry)
+                       record=record, telemetry=telemetry, fuse=fuse)
     out.truncated |= t1.truncated
     info.peak_cap = max(info.peak_cap, t1.cap, out.cap)
     return out
@@ -521,7 +525,8 @@ def reach_filter(graph: RDFGraph, ni: NIIndex, table: Table,
                  impl: str = "auto", nested_max: int = DEFAULT_NESTED_MAX,
                  probe_impl: str = "auto", cache: ReachCache | None = None,
                  telemetry=None, record=None,
-                 info: ReachJoinInfo | None = None) -> Table:
+                 info: ReachJoinInfo | None = None,
+                 fuse: bool = True) -> Table:
     """Intra-table connection filter as a reach-SEMI-join: keep rows whose
     (src_col, dst_col) values appear in the connected-pair table.
     Equivalent to filter_rows(table, connectivity_mask(...)) without the
@@ -538,7 +543,8 @@ def reach_filter(graph: RDFGraph, ni: NIIndex, table: Table,
     cp = connected_pair_table(graph, ni, a_vals, b_vals, d_c, bidirectional,
                               (src_col, dst_col), cap=cap, impl=impl,
                               probe_impl=probe_impl, nested_max=nested_max,
-                              cache=cache, telemetry=telemetry, info=info)
+                              cache=cache, telemetry=telemetry, info=info,
+                              fuse=fuse)
     if cp.count == 0:
         return filter_rows(table, np.zeros(table.count, bool), kept=0)
     # shared cols = both endpoint cols, no new cols: the equi-join IS the
@@ -546,7 +552,7 @@ def reach_filter(graph: RDFGraph, ni: NIIndex, table: Table,
     # one pair).
     out = planned_join(table, cp, None, impl=impl, nested_max=nested_max,
                        probe_impl=probe_impl, record=record,
-                       telemetry=telemetry)
+                       telemetry=telemetry, fuse=fuse)
     info.peak_cap = max(info.peak_cap, out.cap)
     return out
 

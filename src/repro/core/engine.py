@@ -69,8 +69,12 @@ class EngineConfig:
     chunk: int = 8192
     max_rows: int | None = 1 << 20   # LIMIT guard for explosive joins
     use_bloom: bool = False          # gStore-style 1-hop bitstring prefilter
-    join_impl: str = "auto"          # auto (planner per-join) | sorted | nested
+    join_impl: str = "auto"     # auto (planner per-join) | sorted | radix | nested
     plan_mode: str = "cost"          # whole-query join order: cost | greedy
+    # fused sort-merge chain (kernels.fused_join: pack→sort→probe→expand
+    # in one dispatch).  False = staged per-op dispatches (A/B baseline,
+    # also what the chaos harness uses to exercise the staged seams).
+    fuse_joins: bool = True
     # connection-edge strategy: 'reach' = device-resident reach-join
     # (distinct endpoints -> reach-set pair tables -> one sort-merge join
     # on reach_id -> equi-joins back; O(matches) output work), 'cross' =
@@ -227,13 +231,16 @@ class PreparedQuery:
     # runs so a calibrator-moved cost model cannot flip a strategy
     # mid-replay and desync the recorded join_seq
     conn_impls: list[str] | None = None
-    # (actual output rows, executed pow2 capacity) per estimator-sized
-    # join, in engine call order.  Replaying the capacity (not just the
-    # row count) means warm run 1 allocates the exact steady-state jit
-    # shapes the cold run ended at — including joins whose cold run took
-    # an overflow retry, where the final capacity differs from what the
-    # row count alone would re-derive.
-    join_seq: list[tuple[int, int]] = field(default_factory=list)
+    # (actual output rows, executed pow2 capacity, join strategy) per
+    # estimator-sized join, in engine call order.  Replaying the capacity
+    # (not just the row count) means warm run 1 allocates the exact
+    # steady-state jit shapes the cold run ended at — including joins
+    # whose cold run took an overflow retry, where the final capacity
+    # differs from what the row count alone would re-derive.  Replaying
+    # the strategy keeps the per-join sorted/radix/nested choice — which
+    # depends on sort-run state that only exists mid-execution — stable
+    # across warm runs (join_strategies round-trips exactly).
+    join_seq: list[tuple[int, int, str]] = field(default_factory=list)
 
     @property
     def warm(self) -> bool:
@@ -450,7 +457,7 @@ class Engine:
                 qs.join_est_log_err += abs(err)
                 qs.join_est_log_bias += err
                 if not warm_replay:
-                    pq.join_seq.append((int(actual), int(cap)))
+                    pq.join_seq.append((int(actual), int(cap), str(impl)))
             # every estimator-sized join is a budget boundary: actual
             # output rows charge max_rows, the executed capacity is
             # checked against max_capacity, and the deadline is re-read
@@ -479,7 +486,7 @@ class Engine:
                     nested_max=self.cfg.thresholds.nested_join_max,
                     probe_impl=self._probe_impl(),
                     estimator=estimator.edge_join, record=record_join,
-                    telemetry=tel)
+                    telemetry=tel, fuse=self.cfg.fuse_joins)
                 qs.truncated |= tab.truncated
                 qs.dtree_work += tab.count
                 cand_tables.append(injective_filter(tab))
@@ -551,7 +558,7 @@ class Engine:
                             impl=self.cfg.join_impl,
                             nested_max=self.cfg.thresholds.nested_join_max,
                             probe_impl=self._probe_impl(), record=record,
-                            telemetry=telemetry)
+                            telemetry=telemetry, fuse=self.cfg.fuse_joins)
 
     def _retry(self, fn, *args, **kw):
         cap = None
@@ -702,7 +709,8 @@ class Engine:
                     impl=self.cfg.join_impl,
                     nested_max=self.cfg.thresholds.nested_join_max,
                     probe_impl=self._probe_impl(), cache=rcache,
-                    telemetry=tel, record=record_join, info=info)
+                    telemetry=tel, record=record_join, info=info,
+                    fuse=self.cfg.fuse_joins)
             else:
                 rows = np.asarray(tab.rows[: tab.count])
                 a = rows[:, tab.cols.index(c.src)]
@@ -738,7 +746,8 @@ class Engine:
                     row_limit=self.cfg.max_rows, impl=self.cfg.join_impl,
                     nested_max=self.cfg.thresholds.nested_join_max,
                     probe_impl=self._probe_impl(), cache=rcache,
-                    telemetry=tel, record=record_join, info=info))
+                    telemetry=tel, record=record_join, info=info,
+                    fuse=self.cfg.fuse_joins))
                 qs.join_work += info.reach_pairs + joined.count
                 qs.truncated |= joined.truncated
             else:

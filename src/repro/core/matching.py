@@ -4,15 +4,24 @@ TPU-native formulation: candidate generation is *edge-parallel* — one pass
 over the full edge array produces all (root, child) pairs matching a query
 edge (predicate + endpoint pass masks), with no per-node degree padding.
 
-Joins are planned per-pair between two device-resident strategies:
+Joins are planned per-pair between three device-resident strategies:
 
   * ``sorted`` — sort-merge equi-join: shared join columns are packed into
-    a single int32 key (hierarchical dense-rank packing, so any number of
+    a single int32 key (fused dense-rank packing, so any number of
     columns fits 31 bits without overflow), both sides are sorted once,
     per-row match ranges come from the merge-probe kernel
     (``kernels.merge_probe``: searchsorted on CPU, Pallas on TPU), and
     matches are expanded with a segment-offset gather.  O((A+B)·log+out)
-    work, all intermediates on device.
+    work, all intermediates on device.  When neither side has a cached
+    sorted run, the whole pack→sort→probe→expand chain runs as ONE fused
+    dispatch (``kernels.fused_join``) with a single scalar host sync.
+  * ``radix`` — radix-partitioned hash join (``kernels.radix_join``):
+    only the build (B) side is partitioned into pow2 hash buckets; probe
+    rows stream against their bucket's window with SIMD compares.  Skips
+    sorting the probe side entirely and preserves A's row order; the
+    cost model prices it in when the probe side is large, keys are
+    single-column, and no sorted run is reusable.  Skewed key
+    distributions fall back to sort-merge deterministically.
   * ``nested`` — the vectorized nested-loop join (an |A|×|B| compare mask
     per chunk).  O(A·B) but with trivial constants; the planner keeps it
     for small tables where sort/probe setup dominates.
@@ -41,16 +50,19 @@ import jax.numpy as jnp
 from .graph import RDFGraph
 from .decompose import DTree
 from ..kernels import ops as kops
+from ..kernels import fused_join as kfused
+from ..kernels import radix_join as krad
 import functools
+import math
 
 
 DEFAULT_NESTED_MAX = 256      # planner: nested-loop below this table size
 
-# Join-key space: real packed keys live in [0, 2^31 - 3]; the top two
-# int32 values are invalid-row sentinels (distinct per side so an invalid
-# a-row never matches an invalid b-row).
-_A_INVALID = (1 << 31) - 1
-_B_INVALID = (1 << 31) - 2
+# Join-key space (defined with the packing kernel): real packed keys live
+# in [0, 2^31 - 3]; the top two int32 values are invalid-row sentinels
+# (distinct per side so an invalid a-row never matches an invalid b-row).
+_A_INVALID = kfused.A_INVALID
+_B_INVALID = kfused.B_INVALID
 
 
 class CapacityOverflow(Exception):
@@ -245,54 +257,90 @@ def _shared_and_new(a_cols, b_cols):
     return shared, new
 
 
+# --------------------- strategy choice / pricing ---------------------- #
+# Work-proxy cost constants (1 unit ~ one SIMD element op), calibrated
+# against benchmarks/kernel_micro.py on the CPU container: an XLA sort
+# touches each element O(log n) times with heavy compare/permute traffic,
+# so it is weighted far above the streaming compares of a hash-bucket
+# window probe.
+SORT_WEIGHT = 8.0         # per-element-per-log2 cost of an XLA sort
+RADIX_WINDOW = 4.0        # expected bucket-window width (hash + dup slack)
+RADIX_MIN_PROBE = 8192    # radix eligible only at probe sides this large
+RADIX_WORK_MAX = 1 << 25  # probe_cap * window elements before skew fallback
+
+
+def strategy_costs(a_count: int, b_count: int, *, a_sorted: bool = False,
+                   b_sorted: bool = False, n_shared: int = 1) -> dict:
+    """Work-proxy cost of each join strategy at the given table sizes.
+
+    a_sorted/b_sorted: a sorted run (or matching sort-order tag) already
+    exists for the join key, so sort-merge skips that side's sort.  radix
+    is only defined for single-column keys — multi-column packing itself
+    costs a lexsort, which the fused sorted path gets for free."""
+    a, b = max(int(a_count), 1), max(int(b_count), 1)
+    costs = {"nested": float(a) * float(b)}
+    sort_a = 0.0 if a_sorted else SORT_WEIGHT * a * math.log2(a + 1)
+    sort_b = 0.0 if b_sorted else SORT_WEIGHT * b * math.log2(b + 1)
+    costs["sorted"] = sort_a + sort_b + float(a + b)
+    if n_shared == 1:
+        # partition sorts only B (by bucket id); every probe row pays a
+        # window of SIMD compares instead of participating in a sort
+        costs["radix"] = (SORT_WEIGHT * b * math.log2(b + 1)
+                          + RADIX_WINDOW * a + float(b))
+    return costs
+
+
+def choose_join_strategy(a_count: int, b_count: int,
+                         nested_max: int = DEFAULT_NESTED_MAX, *,
+                         a_sorted: bool = False, b_sorted: bool = False,
+                         n_shared: int = 1) -> str:
+    """Cheapest strategy under `strategy_costs`, with two hard gates:
+    tiny tables always take nested (setup dominates any asymptotics) and
+    radix needs a probe side of at least RADIX_MIN_PROBE rows (below
+    that the partition/window overhead can't amortize)."""
+    if max(a_count, b_count) <= nested_max:
+        return "nested"
+    c = strategy_costs(a_count, b_count, a_sorted=a_sorted,
+                       b_sorted=b_sorted, n_shared=n_shared)
+    if "radix" in c and a_count >= RADIX_MIN_PROBE \
+            and c["radix"] < c["sorted"]:
+        return "radix"
+    return "sorted"
+
+
 def resolve_join_impl(a_count: int, b_count: int, impl: str = "auto",
-                      nested_max: int = DEFAULT_NESTED_MAX) -> str:
+                      nested_max: int = DEFAULT_NESTED_MAX, *,
+                      a_sorted: bool = False, b_sorted: bool = False,
+                      n_shared: int = 1) -> str:
     """Per-join strategy choice: nested-loop for small tables (sort/probe
-    setup dominates), sort-merge otherwise."""
+    setup dominates), sort-merge or radix-hash otherwise per the cost
+    model (`strategy_costs`)."""
     if impl != "auto":
         return impl
-    return "nested" if max(a_count, b_count) <= nested_max else "sorted"
+    return choose_join_strategy(a_count, b_count, nested_max,
+                                a_sorted=a_sorted, b_sorted=b_sorted,
+                                n_shared=n_shared)
+
+
+def _resolve_for(a: "Table", b: "Table", impl: str, nested_max: int) -> str:
+    """Resolve the strategy for a concrete table pair — shared by
+    join_tables and planned_join so recording and execution agree."""
+    shared, _ = _shared_and_new(a.cols, b.cols)
+    if not shared:
+        return "cross"
+    kc = tuple(a.cols[i] for i, _ in shared)
+    return resolve_join_impl(
+        a.count, b.count, impl, nested_max,
+        a_sorted=a.sorted_run(kc) is not None,
+        b_sorted=b.sorted_run(kc) is not None,
+        n_shared=len(shared))
 
 
 # ------------------------- sort-merge path ---------------------------- #
-@jax.jit
-def _rank_pair(hi, lo):
-    """Dense lexicographic rank of (hi, lo) pairs — order- and
-    equality-preserving map into [0, len).  Keeps packed keys inside int32
-    for any number of join columns (rank < |A|+|B| at every level)."""
-    order = jnp.lexsort((lo, hi))
-    hs, ls = hi[order], lo[order]
-    boundary = (hs[1:] != hs[:-1]) | (ls[1:] != ls[:-1])
-    new = jnp.concatenate([jnp.ones((1,), jnp.int32),
-                           boundary.astype(jnp.int32)])
-    ranks_sorted = jnp.cumsum(new) - 1
-    return jnp.zeros_like(ranks_sorted).at[order].set(
-        ranks_sorted).astype(jnp.int32)
-
-
-@functools.partial(jax.jit, static_argnames=("a_sel", "b_sel"))
-def _build_join_keys(a_rows, b_rows, a_sel, b_sel):
-    """Pack the shared join columns of both tables into one int32 key per
-    row.  Single shared column: the node id is the key.  Multiple columns:
-    hierarchical dense-rank packing over the concatenated tables, so both
-    sides share one key space and equal keys <=> equal column tuples.
-    Invalid rows map to per-side sentinels that sort last and never match.
-    """
-    n_a = a_rows.shape[0]
-    a_valid = a_rows[:, 0] >= 0
-    b_valid = b_rows[:, 0] >= 0
-
-    def comp(s):
-        va = jnp.where(a_valid, a_rows[:, a_sel[s]], _A_INVALID)
-        vb = jnp.where(b_valid, b_rows[:, b_sel[s]], _B_INVALID)
-        return jnp.concatenate([va, vb]).astype(jnp.int32)
-
-    key = comp(0)
-    for s in range(1, len(a_sel)):
-        key = _rank_pair(key, comp(s))
-    a_keys = jnp.where(a_valid, key[:n_a], _A_INVALID)
-    b_keys = jnp.where(b_valid, key[n_a:], _B_INVALID)
-    return a_keys, b_keys
+# Fused dense-rank key packing (kernels.fused_join): single-column keys
+# take an identity path with no concat/split dispatches; multi-column
+# keys come from ONE lexsort over the concatenated sides.
+_pack_keys = kfused.pack_keys
 
 
 @jax.jit
@@ -363,7 +411,8 @@ def _reuse_key_order(a: Table, b: Table, shared):
 
 def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
                  probe_impl: str, telemetry: JoinTelemetry | None = None,
-                 resume: _ProbeResume | None = None) -> Table:
+                 resume: _ProbeResume | None = None,
+                 fuse: bool = True) -> Table:
     out_cols = a.cols + tuple(b.cols[j] for j in new)
     if resume is None:
         shared = _reuse_key_order(a, b, shared)
@@ -373,6 +422,16 @@ def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
 
         a_run = a.sorted_run(key_cols)
         b_run = b.sorted_run(key_cols)
+        if fuse and a_run is None and b_run is None \
+                and a.count * b.count < 1 << 31:
+            # No sorted run to reuse on either side: the whole
+            # pack→sort→probe(→expand) chain runs as one fused dispatch
+            # with a single scalar host sync (the match total).  The
+            # sorted sides and match ranges come back as device-resident
+            # byproducts for run caching and the overflow-retry contract.
+            return _join_sorted_fused(
+                a, b, a_sel, b_sel, key_cols, out_cols, new, cap,
+                row_limit, probe_impl, telemetry)
         a_rows_in = a_run.rows if a_run is not None else a.rows
         b_rows_in = b_run.rows if b_run is not None else b.rows
         # Packed keys: a cached single-column key run is reused only in
@@ -385,7 +444,7 @@ def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
         b_keys = b_run.keys if (b_run is not None and b_run.keys is not None
                                 and b_run.key_side == "b") else None
         if a_keys is None or b_keys is None:
-            ak, bk = _build_join_keys(a_rows_in, b_rows_in, a_sel, b_sel)
+            ak, bk = _pack_keys(a_rows_in, b_rows_in, a_sel, b_sel)
             a_keys = ak if a_keys is None else a_keys
             b_keys = bk if b_keys is None else b_keys
         if a_run is not None:
@@ -447,6 +506,119 @@ def _join_sorted(a: Table, b: Table, shared, new, cap, row_limit,
     # lexicographically ordered by the join key and inherits it.
     return Table(cols=out_cols, rows=rows, count=out_count,
                  truncated=truncated, sort_order=key_cols)
+
+
+def _join_sorted_fused(a: Table, b: Table, a_sel, b_sel, key_cols,
+                       out_cols, new, cap, row_limit, probe_impl: str,
+                       telemetry: JoinTelemetry | None) -> Table:
+    """Fused sort-merge join (kernels.fused_join): one dispatch, one
+    scalar sync.  Same output, telemetry, run-caching, and
+    CapacityOverflow contract as the staged path — on overflow the
+    resume carries the fused chain's sort+probe byproducts so the retry
+    re-runs only the expand."""
+    probe = kops._resolve(probe_impl, cpu_default="sorted")
+    limit = jnp.int32(min(row_limit, (1 << 31) - 1)
+                      if row_limit is not None else (1 << 31) - 1)
+    if cap is not None:
+        (rows, total_dev, a_keys_s, a_rows_s, b_keys_s, b_rows_s, start,
+         cnt) = kfused.sort_probe_expand(
+            a.rows, b.rows, limit, a_sel=a_sel, b_sel=b_sel, cap=cap,
+            new_sel=tuple(new), has_new=bool(new), probe=probe)
+    else:
+        a_keys_s, a_rows_s, b_keys_s, b_rows_s, start, cnt, total_dev = \
+            kfused.sort_probe(a.rows, b.rows, a_sel=a_sel, b_sel=b_sel,
+                              probe=probe)
+    if telemetry is not None:
+        telemetry.sorts_performed += 2
+    a.cache_run(key_cols, a_rows_s, a_keys_s, "a")
+    b.cache_run(key_cols, b_rows_s, b_keys_s, "b")
+    total = int(total_dev)          # the ONE host sync of this join
+    out_count = total if row_limit is None else min(total, row_limit)
+    truncated = row_limit is not None and total > row_limit
+    if cap is None:
+        cap = _pow2(out_count)
+        rows = _merge_expand(a_rows_s, b_rows_s, start, cnt,
+                             jnp.int32(out_count), cap=cap,
+                             new_sel=tuple(new), has_new=bool(new))
+    elif out_count > cap:
+        err = CapacityOverflow(out_count)
+        err.resume = _ProbeResume(a_rows_s, b_rows_s, start, cnt,
+                                  np.asarray(cnt), key_cols)
+        raise err
+    return Table(cols=out_cols, rows=rows, count=out_count,
+                 truncated=truncated, sort_order=key_cols)
+
+
+# ------------------------- radix-hash path ---------------------------- #
+@dataclass
+class _RadixResume:
+    """Partition+window+probe results carried on CapacityOverflow so the
+    exact-size retry re-runs only the output assembly."""
+    b_rows_p: jax.Array
+    lt: jax.Array
+    cnt: jax.Array
+    win_start: jax.Array
+    total: int
+    key_cols: tuple[int, ...]
+
+
+def _radix_bits(b_count: int) -> int:
+    """Bucket count ~ 2x the build side (load factor ~0.5), clamped so
+    the edge table stays trivial."""
+    return max(4, min(16, max(b_count, 1).bit_length()))
+
+
+def _join_radix(a: Table, b: Table, shared, new, cap, row_limit,
+                probe_impl: str, telemetry: JoinTelemetry | None = None,
+                resume: _RadixResume | None = None,
+                fuse: bool = True) -> Table:
+    """Radix-partitioned hash join: partition B by hashed key, stream A
+    against per-row bucket windows.  A is never sorted and the output
+    preserves A's row order (sort_order carries through).  Degenerate
+    distributions — a hot key inflating the max bucket, or a potential
+    >2^31 output — fall back to sort-merge deterministically, so warm
+    replay re-derives the same decision."""
+    out_cols = a.cols + tuple(b.cols[j] for j in new)
+    if resume is None:
+        # No |A|*|B| product gate here: radix output is bounded by
+        # a.cap * lmax, and the work guard below caps that at
+        # RADIX_WORK_MAX (<< 2^31), so int32 totals are always safe.
+        a_sel = tuple(s[0] for s in shared)
+        b_sel = tuple(s[1] for s in shared)
+        key_cols = tuple(a.cols[i] for i in a_sel)
+        a_keys, b_keys = _pack_keys(a.rows, b.rows, a_sel, b_sel)
+        bits = _radix_bits(b.count)
+        b_keys_p, b_rows_p, edges, maxlen = krad.radix_partition(
+            b_keys, b.rows, bits)
+        lmax = _pow2(int(maxlen), lo=8)     # one scalar sync (window size)
+        if a.cap * lmax > RADIX_WORK_MAX:
+            # skew: the widest bucket would make the window matrix
+            # quadratic — sort-merge is strictly better here
+            return _join_sorted(a, b, shared, new, cap, row_limit,
+                                probe_impl, telemetry=telemetry, fuse=fuse)
+        win_keys, win_start = krad.radix_window(a_keys, edges, b_keys_p,
+                                                bits, lmax)
+        lt, cnt = kops.radix_probe(a_keys, win_keys, impl=probe_impl)
+        total = int(jnp.sum(cnt))           # second scalar sync (total)
+    else:
+        b_rows_p, lt, cnt = resume.b_rows_p, resume.lt, resume.cnt
+        win_start = resume.win_start
+        total, key_cols = resume.total, resume.key_cols
+    out_count = total if row_limit is None else min(total, row_limit)
+    truncated = row_limit is not None and total > row_limit
+    if cap is None:
+        cap = _pow2(out_count)
+    if out_count > cap:
+        err = CapacityOverflow(out_count)
+        err.resume = _RadixResume(b_rows_p, lt, cnt, win_start,
+                                  total, key_cols)
+        raise err
+    rows = krad.radix_scatter(a.rows, b_rows_p, lt, cnt, win_start,
+                              jnp.int32(out_count), cap=cap,
+                              new_sel=tuple(new), has_new=bool(new))
+    # scatter slots are ordered by probe row: A's order is preserved
+    return Table(cols=out_cols, rows=rows, count=out_count,
+                 truncated=truncated, sort_order=a.sort_order)
 
 
 # ------------------------- nested-loop path --------------------------- #
@@ -525,25 +697,40 @@ def join_tables(a: Table, b: Table, cap: int | None = None,
                 nested_max: int = DEFAULT_NESTED_MAX,
                 probe_impl: str = "auto",
                 telemetry: JoinTelemetry | None = None,
-                _resume: _ProbeResume | None = None) -> Table:
+                fuse: bool = True,
+                _resume=None) -> Table:
     """Equi-join on shared query-node columns.
 
-    impl: 'auto' (planner picks per table size), 'sorted' (sort-merge),
-    or 'nested' (chunked vectorized nested loop).  With row_limit the join
+    impl: 'auto' (planner picks per table sizes and sort state),
+    'sorted' (sort-merge), 'radix' (radix-partitioned hash join), or
+    'nested' (chunked vectorized nested loop).  With row_limit the join
     stops once the limit is reached (LIMIT semantics — appended rows are
     clamped to the remaining budget and .truncated is set iff matches were
     dropped or scanning stopped early).  telemetry counts sorts performed
-    vs. avoided on the sort-merge path; _resume (from a CapacityOverflow's
-    .resume) replays a completed sort+probe at a larger capacity."""
+    vs. avoided on the sort-merge path; fuse=False disables the fused
+    one-dispatch sort-merge chain (A/B comparison, chaos seams); _resume
+    (from a CapacityOverflow's .resume) replays a completed sort+probe —
+    or partition+probe — at a larger capacity."""
     shared, new = _shared_and_new(a.cols, b.cols)
     if not shared:
         return cross_join(a, b, cap=cap, row_limit=row_limit)
-    impl = resolve_join_impl(a.count, b.count, impl, nested_max)
+    # A resume object encodes which pipeline produced it: a radix join
+    # that fell back to sort-merge retries on the sort-merge path.
+    if isinstance(_resume, _ProbeResume):
+        return _join_sorted(a, b, shared, new, cap, row_limit, probe_impl,
+                            telemetry=telemetry, resume=_resume, fuse=fuse)
+    if isinstance(_resume, _RadixResume):
+        return _join_radix(a, b, shared, new, cap, row_limit, probe_impl,
+                           telemetry=telemetry, resume=_resume, fuse=fuse)
+    impl = _resolve_for(a, b, impl, nested_max)
     if impl == "nested":
         return _join_nested(a, b, shared, new, cap, chunk, b_chunk,
                             row_limit)
+    if impl == "radix":
+        return _join_radix(a, b, shared, new, cap, row_limit, probe_impl,
+                           telemetry=telemetry, fuse=fuse)
     return _join_sorted(a, b, shared, new, cap, row_limit, probe_impl,
-                        telemetry=telemetry, resume=_resume)
+                        telemetry=telemetry, fuse=fuse)
 
 
 MAX_PRESIZE_CAP = 1 << 22     # estimate-driven preallocation ceiling (rows)
@@ -554,7 +741,8 @@ def planned_join(a: Table, b: Table, est: int | None,
                  nested_max: int = DEFAULT_NESTED_MAX,
                  probe_impl: str = "auto", record=None,
                  chunk: int = 4096, b_chunk: int = 1 << 16,
-                 telemetry: JoinTelemetry | None = None) -> Table:
+                 telemetry: JoinTelemetry | None = None,
+                 fuse: bool = True) -> Table:
     """Estimate-pre-sized join with a single exact-size overflow retry.
 
     The capacity hint from `est` is clamped by the worst-case output
@@ -568,13 +756,13 @@ def planned_join(a: Table, b: Table, est: int | None,
 
     An `est` carrying a `.cap` attribute (planner.CapEstimate, produced
     by the warm-run ReplayEstimator from the cold run's recorded
-    (rows, cap) join_seq) pins the output capacity verbatim: warm run 1
-    then allocates the exact steady-state shapes the cold run ended at —
-    no overflow retry, no fresh jit compilation."""
-    if not any(c in b.cols for c in a.cols):
-        impl = "cross"              # no shared cols: join_tables delegates
-    else:
-        impl = resolve_join_impl(a.count, b.count, impl, nested_max)
+    (rows, cap, impl) join_seq) pins the output capacity verbatim — and
+    its `.impl`, when set, pins the join strategy — so warm run 1
+    allocates the exact steady-state shapes (and replays the strategy
+    choices) the cold run ended at: no overflow retry, no fresh jit
+    compilation."""
+    forced = getattr(est, "impl", None) if est is not None else None
+    impl = _resolve_for(a, b, forced or impl, nested_max)
     cap_hint = None
     if est is not None:
         replay_cap = getattr(est, "cap", None)
@@ -589,7 +777,7 @@ def planned_join(a: Table, b: Table, est: int | None,
             if row_limit is not None:
                 cap_hint = min(cap_hint, _pow2(row_limit))
     kw = dict(row_limit=row_limit, impl=impl, probe_impl=probe_impl,
-              chunk=chunk, b_chunk=b_chunk, telemetry=telemetry)
+              chunk=chunk, b_chunk=b_chunk, telemetry=telemetry, fuse=fuse)
     retried = False
     try:
         out = join_tables(a, b, cap=cap_hint, **kw)
@@ -676,7 +864,8 @@ def dtree_candidates(graph: RDFGraph, tree: DTree,
                      nested_max: int = DEFAULT_NESTED_MAX,
                      probe_impl: str = "auto",
                      estimator=None, record=None,
-                     telemetry: JoinTelemetry | None = None) -> Table:
+                     telemetry: JoinTelemetry | None = None,
+                     fuse: bool = True) -> Table:
     """Generate all candidate matches of one D-tree by sequential
     edge-parallel pair generation + joins on the root column.
 
@@ -700,7 +889,7 @@ def dtree_candidates(graph: RDFGraph, tree: DTree,
             table = planned_join(table, pairs, est, row_limit=row_limit,
                                  impl=join_impl, nested_max=nested_max,
                                  probe_impl=probe_impl, record=record,
-                                 telemetry=telemetry)
+                                 telemetry=telemetry, fuse=fuse)
         truncated |= table.truncated
         if table.count == 0:
             break
@@ -749,33 +938,23 @@ def empty_table(cols: tuple[int, ...], cap: int = 64) -> Table:
                  rows=jnp.full((cap, len(cols)), -1, jnp.int32), count=0)
 
 
-@functools.partial(jax.jit, static_argnames=("sel",))
-def _project_lexsorted(rows, sel):
-    """Project `sel` columns and lexsort the projection (primary key =
-    sel[0]).  Invalid rows map every projected value to the a-side
-    invalid sentinel, so they sort last and are recognizable."""
-    valid = rows[:, 0] >= 0
-    cols = tuple(jnp.where(valid, rows[:, s], _A_INVALID).astype(jnp.int32)
-                 for s in sel)
-    order = jnp.lexsort(tuple(reversed(cols)))
-    return jnp.stack(cols, axis=1)[order]
-
-
 def dedup_project(table: Table, cols: tuple[int, ...],
                   impl: str = "auto") -> Table:
     """Distinct rows of `table` over the column subset `cols`.
 
-    Device-resident: lexsort of the projection, first-of-group mask
-    (kernels.distinct_mask), compaction gather — one host sync for the
-    output count.  Unlike every other table op this tolerates valid rows
-    anywhere in the capacity (not just a prefix), so callers may feed it
-    a raw concatenation of padded row buffers.  Output is sorted by (and
-    tagged with) `cols`."""
+    Device-resident and fused (kernels.fused_join.lexsort_distinct):
+    projection, lexsort, first-of-group mask, and kept-count run as one
+    dispatch sharing the join pipeline's sort primitive — one host sync
+    for the output count, then the compaction gather.  Unlike every
+    other table op this tolerates valid rows anywhere in the capacity
+    (not just a prefix), so callers may feed it a raw concatenation of
+    padded row buffers.  Output is sorted by (and tagged with) `cols`."""
+    if impl not in ("auto", "pallas", "interpret", "ref", "sorted"):
+        raise ValueError(f"unknown impl {impl!r}")
     cols = tuple(cols)
     sel = tuple(table.cols.index(c) for c in cols)
-    proj = _project_lexsorted(table.rows, sel)
-    keep = kops.distinct_mask(proj, impl=impl) & (proj[:, 0] != _A_INVALID)
-    kept = int(keep.sum())
+    proj, keep, kept_dev = kfused.lexsort_distinct(table.rows, sel)
+    kept = int(kept_dev)
     rows = _filter_gather(proj, keep, _pow2(kept))
     return Table(cols=cols, rows=rows, count=kept, truncated=table.truncated,
                  sort_order=cols)

@@ -25,6 +25,7 @@ from .graph import RDFGraph, IDMap, ATTR
 from .query import QueryTemplate
 from .stats import DatasetStats
 from .decompose import DTree
+from .matching import choose_join_strategy, strategy_costs
 
 
 @dataclass
@@ -183,16 +184,18 @@ class JoinEstimator:
 
 class CapEstimate(int):
     """A join-size estimate that also carries the exact pow2 capacity the
-    cold run executed that join at.  Behaves as the row-count int in all
+    cold run executed that join at — and, when recorded, the join
+    strategy it resolved to.  Behaves as the row-count int in all
     arithmetic (min with row_limit, telemetry sums); matching.planned_join
-    reads `.cap` to pin the output allocation, so warm run 1 reuses the
-    cold run's steady-state jit shapes instead of re-deriving a capacity
-    from the row count (which can differ when the cold run took an
-    overflow retry)."""
+    reads `.cap` to pin the output allocation and `.impl` to pin the
+    strategy, so warm run 1 reuses the cold run's steady-state jit shapes
+    and join strategies instead of re-deriving them (which could diverge
+    when the cold run took an overflow retry)."""
 
-    def __new__(cls, rows: int, cap: int):
+    def __new__(cls, rows: int, cap: int, impl: str | None = None):
         obj = super().__new__(cls, int(rows))
         obj.cap = int(cap)
+        obj.impl = impl
         return obj
 
 
@@ -204,12 +207,13 @@ class ReplayEstimator:
     recorded in engine call order) ARE the cardinalities of every later
     execution.  Replaying them pre-sizes each join capacity exactly — no
     CapacityOverflow retries and byte-identical jit shapes, which is what
-    makes the warm path recompile-free.  Recorded entries are (rows, cap)
-    pairs — replayed as `CapEstimate` so the executed *capacity* (not
-    just the row count) is pinned too; bare-int entries from older
-    recordings still replay as plain row counts.  Falls back to the
-    analytic estimator if the call sequence ever diverges (e.g. a
-    row_limit change).
+    makes the warm path recompile-free.  Recorded entries are
+    (rows, cap, impl) triples — replayed as `CapEstimate` so the executed
+    *capacity* and *join strategy* (not just the row count) are pinned
+    too; (rows, cap) pairs and bare-int entries from older recordings
+    still replay with whatever they carry.  Falls back to the analytic
+    estimator if the call sequence ever diverges (e.g. a row_limit
+    change).
     """
 
     def __init__(self, base: JoinEstimator, recorded: list):
@@ -222,7 +226,8 @@ class ReplayEstimator:
             out = self.recorded[self.cursor]
             self.cursor += 1
             if isinstance(out, tuple):
-                return CapEstimate(out[0], out[1])
+                return CapEstimate(out[0], out[1],
+                                   out[2] if len(out) > 2 else None)
             return out
         return fallback
 
@@ -257,18 +262,20 @@ def _sort_cost(n: int) -> float:
 
 def _pairwise_join_cost(left_rows: int, right_rows: int, est_out: int,
                         nested_max: int, left_sorted: bool,
-                        right_sorted: bool) -> float:
+                        right_sorted: bool, n_shared: int = 1) -> float:
     """Work proxy (row ops) for one equi-join under the engine's strategy
-    rule: nested-loop below nested_max, else sort-merge where each unsorted
-    side pays an n log n sort and the merge+expand pays (A + B + out)."""
-    if max(left_rows, right_rows) <= nested_max:
-        return float(max(left_rows, 1) * max(right_rows, 1))
-    cost = float(left_rows + right_rows + est_out)
-    if not left_sorted:
-        cost += _sort_cost(left_rows)
-    if not right_sorted:
-        cost += _sort_cost(right_rows)
-    return cost
+    rule — priced by the SAME matching.strategy_costs the executor's
+    'auto' resolution uses (nested-loop below nested_max; sort-merge
+    where each unsorted side pays a weighted n log n sort; radix-hash
+    where only the build side pays a sort), plus the est_out expand."""
+    impl = choose_join_strategy(left_rows, right_rows, nested_max,
+                                a_sorted=left_sorted,
+                                b_sorted=right_sorted, n_shared=n_shared)
+    costs = strategy_costs(left_rows, right_rows, a_sorted=left_sorted,
+                           b_sorted=right_sorted, n_shared=n_shared)
+    if impl == "nested":
+        return costs["nested"]
+    return costs[impl] + float(est_out)
 
 
 @dataclass
@@ -309,10 +316,11 @@ def _join_step(rows, skey, count_i, order_i, shared, est_out, nested_max,
     """One simulated join: (cost, next sort key, left_reused).
 
     Mirrors execution fidelity: the nested regime produces an untagged
-    table (no downstream reuse), and when both sides are sorted under
-    *conflicting* permutations of a multi-column key, the executor can
-    align the join key with only one of them — credit the larger side."""
-    sorted_regime = max(rows, count_i) > nested_max
+    table (no downstream reuse); the radix regime never sorts and its
+    output keeps the LEFT side's order; and when both sides are sorted
+    under *conflicting* permutations of a multi-column key, the executor
+    can align the join key with only one of them — credit the larger
+    side."""
     left_ok = _reusable(skey, shared)
     right_ok = _reusable(order_i, shared)
     if (left_ok and right_ok and len(shared) > 1
@@ -321,12 +329,20 @@ def _join_step(rows, skey, count_i, order_i, shared, est_out, nested_max,
             larger_is_left = rows >= count_i
         left_ok, right_ok = larger_is_left, not larger_is_left
     c = _pairwise_join_cost(rows, count_i, est_out, nested_max,
-                            left_sorted=left_ok, right_sorted=right_ok)
+                            left_sorted=left_ok, right_sorted=right_ok,
+                            n_shared=len(shared))
     if not shared:
-        next_key = skey        # cross_join propagates the left order
+        return c, skey, False  # cross_join propagates the left order
+    impl = choose_join_strategy(rows, count_i, nested_max,
+                                a_sorted=left_ok, b_sorted=right_ok,
+                                n_shared=len(shared))
+    if impl == "sorted":
+        next_key = shared       # merge output is ordered by the join key
+    elif impl == "radix":
+        next_key = skey         # probe side's order is preserved
     else:
-        next_key = shared if sorted_regime else None
-    return c, next_key, left_ok and sorted_regime
+        next_key = None         # nested output is untagged
+    return c, next_key, left_ok and impl == "sorted"
 
 
 def simulate_join_order(order, node_sets, counts, estimator: JoinEstimator,

@@ -71,6 +71,26 @@ def merge_probe(a_keys, b_keys, *, impl: str = "auto"):
     return merge_probe_pallas(a_keys, b_keys, interpret=(impl == "interpret"))
 
 
+def radix_probe(a_keys, win_keys, *, impl: str = "auto"):
+    """Window probe of the radix hash join: per-probe-row match mask,
+    exclusive prefix, and count over the [A, Lmax] bucket-window matrix.
+    (eq, pref, cnt)."""
+    from . import radix_join as _rj
+    impl = _resolve(impl, cpu_default="sorted")
+    a_keys = jnp.asarray(a_keys, jnp.int32)
+    win_keys = jnp.asarray(win_keys, jnp.int32)
+    if impl in ("sorted", "ref"):
+        return _radix_probe_ref_jit(a_keys, win_keys)
+    return _rj.window_probe_pallas(a_keys, win_keys,
+                                   interpret=(impl == "interpret"))
+
+
+@jax.jit
+def _radix_probe_ref_jit(a_keys, win_keys):
+    from .radix_join import window_probe_ref
+    return window_probe_ref(a_keys, win_keys)
+
+
 _distinct_mask_jit = jax.jit(_ref.distinct_mask_sorted)
 
 

@@ -1,0 +1,177 @@
+"""Radix-partitioned hash join — the priced alternative to sort-merge.
+
+Sort-merge pays two O(n log n) XLA sorts per join.  When the probe side
+is large, its keys single-column, and the build side comparatively small,
+a hash join does strictly less work: partition ONLY the build (B) side
+into pow2 buckets by a multiplicative hash of the key, then stream every
+probe (A) row against its bucket's contiguous window with pure SIMD
+compares — no sort of A at all, and A's original row order is preserved
+in the output (a planner-visible property: downstream joins keep A's
+sort-order tag, where sort-merge would re-sort).
+
+Pipeline (matching._join_radix drives it):
+
+  radix_partition   stable-sort B by (bucket id, key) — two cheap sorts
+                    of the SMALL side — so every bucket's span is
+                    key-sorted and each key's matches are CONTIGUOUS;
+                    bucket edges via searchsorted, max real bucket
+                    length for static window sizing
+  radix_window      gather each A row's bucket window into an [A, Lmax]
+                    matrix (B_INVALID-filled past the bucket end)
+  window_probe      two per-row reductions over the window matrix: keys
+                    below the probe key (= the match run's offset, since
+                    buckets are key-sorted) and keys equal to it — the
+                    Pallas kernel here; ref twin `window_probe_ref` for
+                    CPU ('sorted'/'ref')
+  radix_scatter     pure-arithmetic gather of matches to output slots
+                    ordered by A row (no sort, no scatter: XLA CPU
+                    serializes scatters and its sorts are the very cost
+                    this join exists to avoid)
+
+Skew is the classic hash-join failure mode: one hot key inflates Lmax
+and the window matrix goes quadratic.  matching gates on a static work
+bound and falls back to sort-merge deterministically, so serving replay
+re-derives the same decision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_join import B_INVALID
+
+# Knuth multiplicative hash: odd constant, top bits well-mixed, so the
+# bucket id = top `bits` of key * KNUTH distributes clustered node ids.
+_KNUTH = jnp.uint32(2654435761)
+
+
+def _bucket_of(keys, bits: int):
+    h = (keys.astype(jnp.uint32) * _KNUTH) >> jnp.uint32(32 - bits)
+    nb = 1 << bits
+    # invalid keys (sentinels) go to a reserved overflow bucket nb so
+    # they never pad a real bucket's window
+    return jnp.where(keys >= B_INVALID, nb, h.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def radix_partition(b_keys, b_rows, bits: int):
+    """Partition the build side: (keys_p, rows_p, edges[nb+1], maxlen).
+    edges[k]:edges[k+1] is bucket k's contiguous span in the partitioned
+    arrays; maxlen counts REAL buckets only (invalid tail excluded).
+    Two stable sorts (by key, then by bucket) leave every bucket span
+    key-sorted, so a probe key's matches are one contiguous run whose
+    in-bucket offset is just the count of smaller keys — which is what
+    lets the probe and the output assembly stay sort- and scatter-free
+    on the big side."""
+    nb = 1 << bits
+    ord1 = jnp.argsort(b_keys, stable=True)
+    k1 = b_keys[ord1]
+    bk1 = _bucket_of(k1, bits)
+    ord2 = jnp.argsort(bk1, stable=True)
+    keys_p = k1[ord2]
+    rows_p = b_rows[ord1[ord2]]
+    bk_p = bk1[ord2]
+    edges = jnp.searchsorted(bk_p, jnp.arange(nb + 1, dtype=jnp.int32),
+                             side="left").astype(jnp.int32)
+    maxlen = jnp.max(edges[1:] - edges[:-1])
+    return keys_p, rows_p, edges, maxlen
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "lmax"))
+def radix_window(a_keys, edges, keys_p, bits: int, lmax: int):
+    """Per-probe-row bucket windows: (win_keys [A,lmax], win_start [A]).
+    win_start is each row's bucket offset into the partitioned build
+    arrays; slots past the bucket end carry B_INVALID keys (match
+    nothing, and — being the largest valid-sortable values — never
+    perturb the below-key count either)."""
+    nb = 1 << bits
+    abk = _bucket_of(a_keys, bits)
+    s = edges[jnp.minimum(abk, nb)]
+    # invalid probe rows get an empty window (e == s)
+    e = jnp.where(abk >= nb, s, edges[jnp.minimum(abk + 1, nb)])
+    off = jnp.arange(lmax, dtype=jnp.int32)
+    pos = s[:, None] + off[None, :]
+    inside = pos < e[:, None]
+    pos_c = jnp.clip(pos, 0, keys_p.shape[0] - 1)
+    win_keys = jnp.where(inside, keys_p[pos_c], B_INVALID)
+    return win_keys.astype(jnp.int32), s.astype(jnp.int32)
+
+
+# ------------------------------ probe ---------------------------------- #
+def window_probe_ref(a_keys, win_keys):
+    """(lt, cnt): per-row count of window keys below the probe key and of
+    keys equal to it.  The partition key-sorts every bucket, so lt is the
+    offset of the key's contiguous match run inside the window and cnt
+    its length — the probe's entire output is two [A] vectors, never a
+    match matrix."""
+    a = a_keys[:, None]
+    lt = jnp.sum((win_keys < a).astype(jnp.int32), axis=1)
+    cnt = jnp.sum((win_keys == a).astype(jnp.int32), axis=1)
+    return lt, cnt
+
+
+_PROBE_BLOCK_R = 8
+
+
+def _window_kernel(a_ref, w_ref, lt_ref, cnt_ref):
+    a = a_ref[...]
+    w = w_ref[...]
+    lt_ref[...] = jnp.sum((w < a).astype(jnp.int32), axis=1, keepdims=True)
+    cnt_ref[...] = jnp.sum((w == a).astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def window_probe_pallas(a_keys, win_keys, interpret: bool = False):
+    """Pallas twin of window_probe_ref: block rows of the window matrix
+    through VMEM, compare + row-reduce on the VPU."""
+    n, lmax = win_keys.shape
+    br = _PROBE_BLOCK_R
+    n_pad = -(-max(n, 1) // br) * br
+    a_p = jnp.full((n_pad, 1), -1, jnp.int32).at[:n, 0].set(a_keys)
+    w_p = jnp.full((n_pad, lmax), B_INVALID, jnp.int32).at[:n].set(win_keys)
+    lt, cnt = pl.pallas_call(
+        _window_kernel,
+        grid=(n_pad // br,),
+        in_specs=[pl.BlockSpec((br, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((br, lmax), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad, 1), jnp.int32)],
+        interpret=interpret,
+    )(a_p, w_p)
+    return lt[:n, 0], cnt[:n, 0]
+
+
+# ------------------------ output assembly ------------------------------ #
+@functools.partial(jax.jit, static_argnames=("cap", "new_sel", "has_new"))
+def radix_scatter(a_rows, b_rows_p, lt, cnt, win_start, limit, *,
+                  cap, new_sel, has_new):
+    """Assemble matches into `cap` output slots ordered by probe row (so
+    the output inherits A's row order).
+
+    Gather form, despite the name: XLA CPU serializes scatters and its
+    sorts are the very cost this join avoids, so each output slot t
+    PULLS its match with pure index arithmetic — probe row i by
+    searchsorted over the cumulative counts, match ordinal
+    k = t - base[i] (subtraction form, never a fused remainder+gather),
+    and build row win_start[i] + lt[i] + k, since row i's matches are
+    the contiguous run starting lt[i] into its key-sorted bucket.
+    Slots at or past min(limit, total) are -1-filled."""
+    csum = jnp.cumsum(cnt)
+    base = csum - cnt                                # exclusive, by A row
+    t = jnp.arange(cap, dtype=jnp.int32)
+    i = jnp.minimum(jnp.searchsorted(csum, t, side="right")
+                    .astype(jnp.int32), cnt.shape[0] - 1)
+    k = t - base[i]
+    valid = t < jnp.minimum(limit, csum[-1])
+    left = jnp.where(valid[:, None], a_rows[i], -1)
+    if has_new:
+        sel = jnp.asarray(new_sel, jnp.int32)
+        bj = jnp.clip(win_start[i] + lt[i] + k, 0, b_rows_p.shape[0] - 1)
+        right = jnp.where(valid[:, None], b_rows_p[bj][:, sel], -1)
+        return jnp.concatenate([left, right], axis=1)
+    return left

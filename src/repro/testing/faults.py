@@ -8,10 +8,18 @@ same failure every time.
 
 Injection points (name -> patched attributes):
 
-  kernel_dispatch   repro.kernels.ops.merge_probe — every sort-merge
-                    join's probe kernel dispatch.
+  kernel_dispatch   repro.kernels.ops.merge_probe — every staged
+                    sort-merge join's probe kernel dispatch (the fused
+                    chain bypasses this seam; chaos configs that target
+                    it run with EngineConfig.fuse_joins=False).
   join_expand       repro.core.matching._merge_expand — the jitted
-                    segment-offset match expansion of sort-merge joins.
+                    segment-offset match expansion of staged sort-merge
+                    joins (same fuse_joins caveat).
+  fused_probe       repro.kernels.fused_join.sort_probe_expand /
+                    sort_probe (one shared counter) — every fused-chain
+                    join dispatch.
+  radix_probe       repro.kernels.ops.radix_probe — the bucket-window
+                    probe of every radix hash join.
   reach_gather      repro.core.connectivity.reach_pairs — the reach-set
                     pair-table gather of the reach-join path.
   cache_lookup      ReachCache.get_set / get_array (one shared counter)
@@ -57,6 +65,9 @@ class InjectedFault(RuntimeError):
 INJECTION_POINTS: dict[str, tuple[tuple[str, str], ...]] = {
     "kernel_dispatch": (("repro.kernels.ops", "merge_probe"),),
     "join_expand": (("repro.core.matching", "_merge_expand"),),
+    "fused_probe": (("repro.kernels.fused_join", "sort_probe_expand"),
+                    ("repro.kernels.fused_join", "sort_probe")),
+    "radix_probe": (("repro.kernels.ops", "radix_probe"),),
     "reach_gather": (("repro.core.connectivity", "reach_pairs"),),
     "cache_lookup": (("repro.core.connectivity", "ReachCache.get_set"),
                      ("repro.core.connectivity", "ReachCache.get_array")),

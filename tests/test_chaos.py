@@ -46,19 +46,25 @@ def oracle(graph, pool):
     return [eng.execute(q).result_set() for q in pool]
 
 
-def _forcing_cfg():
-    """Engine config that routes every join through the sort-merge path
-    (merge-probe kernel + expand) and every connection edge through the
-    reach-join — so all four injection points actually dispatch on this
-    small workload (tiny tables otherwise resolve to nested/cross and
-    never touch the faulted seams)."""
+def _forcing_cfg(point: str = "kernel_dispatch"):
+    """Engine config that routes every join through the seam under test
+    and every connection edge through the reach-join — so each injection
+    point actually dispatches on this small workload (tiny tables
+    otherwise resolve to nested/cross and never touch the faulted
+    seams).  The join pipeline has mutually exclusive seams: the fused
+    chain (fused_probe) bypasses the staged merge_probe/_merge_expand
+    dispatches, and the radix strategy (radix_probe) bypasses sort-merge
+    entirely — so the forced join path is chosen per point."""
+    join_impl = "radix" if point == "radix_probe" else "sorted"
+    fuse = point == "fused_probe"
     return EngineConfig(check_policy="selective", d_check=2, impl="ref",
                         thresholds=Thresholds(nested_join_max=1),
-                        join_impl="sorted", connection_impl="reach")
+                        join_impl=join_impl, fuse_joins=fuse,
+                        connection_impl="reach")
 
 
-def _chaos_server(graph, **gov_kw):
-    return QueryServer(graph, cfg=_forcing_cfg(),
+def _chaos_server(graph, point: str = "kernel_dispatch", **gov_kw):
+    return QueryServer(graph, cfg=_forcing_cfg(point),
                        governor=GovernorConfig(**gov_kw))
 
 
@@ -70,7 +76,7 @@ def test_chaos_grid_exact_or_typed(graph, pool, oracle, point, kind):
     resolves, and every resolved result is identical to the fault-free
     oracle.  A single transient fault must never surface to the client —
     the retry/ladder machinery absorbs it."""
-    srv = _chaos_server(graph)
+    srv = _chaos_server(graph, point)
     # warm-up (fault-free): compiles shapes, fills the plan cache
     for f in srv.submit_many(pool, wait=True):
         f.result()
@@ -96,7 +102,7 @@ def test_chaos_persistent_fault_degrades_or_fails_typed(graph, pool,
     entirely, so those recover exactly with degraded_steps recorded; the
     cache_lookup seam is hit by every rung and must fail typed —
     DegradationExhausted listing every attempt, never a wrong result."""
-    srv = _chaos_server(graph)
+    srv = _chaos_server(graph, point)
     for f in srv.submit_many(pool, wait=True):
         f.result()
     with FaultInjector(Fault(point, "raise", every=1)) as fi:

@@ -23,11 +23,15 @@ _FRESH = make_engine(_GRAPH, "rdf_h", impl="ref")
 _ORACLE = [_FRESH.execute(q).result_set() for q in _POOL]
 
 # Same forcing config as tests/test_chaos.py: route every join through
-# the sort-merge kernel and every connection through the reach-join so
-# the injected seams actually dispatch on this small workload.
+# the STAGED sort-merge kernels (fuse_joins=False — the fused chain
+# bypasses the merge_probe/_merge_expand seams) and every connection
+# through the reach-join so the injected seams actually dispatch on this
+# small workload.  Faults sampled at fused_probe/radix_probe simply
+# never fire here — the property tolerates un-exercised points.
 _CFG = EngineConfig(check_policy="selective", d_check=2, impl="ref",
                     thresholds=Thresholds(nested_join_max=1),
-                    join_impl="sorted", connection_impl="reach")
+                    join_impl="sorted", fuse_joins=False,
+                    connection_impl="reach")
 
 _fault_st = st.builds(
     lambda point, kind, at: Fault(point, kind, at=at, delay_s=0.002),

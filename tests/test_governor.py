@@ -229,9 +229,10 @@ def test_planned_join_records_capacity():
 
 
 def test_cold_run_records_caps_and_warm_replays_them(monkeypatch):
-    """The satellite end-to-end: join_seq stores (rows, cap) pairs and
-    warm run 1 executes every estimator-sized join at exactly the cold
-    run's capacities (steady-state jit shapes, no overflow retries)."""
+    """The satellite end-to-end: join_seq stores (rows, cap, impl)
+    triples and warm run 1 executes every estimator-sized join at
+    exactly the cold run's capacities AND strategies (steady-state jit
+    shapes, no overflow retries, no strategy flips)."""
     import repro.core.matching as matching_mod
     import repro.core.engine as engine_mod
     g = random_graph(n_nodes=100, n_edges=300, n_preds=3, seed=11)
@@ -251,9 +252,11 @@ def test_cold_run_records_caps_and_warm_replays_them(monkeypatch):
     pq = eng.prepare(q)
     caps_per_run.append([])
     cold = eng.execute_prepared(pq)
-    assert pq.join_seq and all(isinstance(e, tuple) and len(e) == 2
+    assert pq.join_seq and all(isinstance(e, tuple) and len(e) == 3
                                for e in pq.join_seq)
-    assert [c for _, c in pq.join_seq] == caps_per_run[0]
+    assert all(e[2] in ("nested", "sorted", "radix", "cross")
+               for e in pq.join_seq)
+    assert [c for _, c, _ in pq.join_seq] == caps_per_run[0]
     caps_per_run.append([])
     warm = eng.execute_prepared(pq)
     assert warm.stats.cache_hit

@@ -130,6 +130,12 @@ def test_resolve_join_impl_thresholds():
     assert resolve_join_impl(10, 257) == "sorted"
     assert resolve_join_impl(5000, 3, "auto", nested_max=64) == "sorted"
     assert resolve_join_impl(5000, 3, "nested") == "nested"
+    # radix: large probe side, single shared column, cheaper than
+    # re-sorting both sides; multi-column keys fall back to sort-merge
+    assert resolve_join_impl(1 << 16, 1 << 12) == "radix"
+    assert resolve_join_impl(1 << 16, 1 << 12, n_shared=2) == "sorted"
+    assert resolve_join_impl(100, 1 << 12) == "sorted"  # below min probe
+    assert resolve_join_impl(10, 10, "radix") == "radix"  # forced
 
 
 def test_engine_records_join_strategies_and_estimates():
@@ -150,12 +156,12 @@ def test_engine_variants_sorted_equals_nested(variant):
     sort-merge and the seed nested-loop join implementations."""
     g = DATASETS["lubm"](scale=0.025, seed=2)
     results = {}
-    for ji in ("nested", "sorted"):
+    for ji in ("nested", "sorted", "radix"):
         eng = make_engine(g, variant, impl="ref")
         eng.cfg.join_impl = ji
         results[ji] = eng.execute(
             random_query(g, size=5, seed=77)).result_set()
-    assert results["nested"] == results["sorted"]
+    assert results["nested"] == results["sorted"] == results["radix"]
 
 
 def test_engine_random_graphs_join_impl_equivalence():
@@ -164,8 +170,8 @@ def test_engine_random_graphs_join_impl_equivalence():
                          n_literals=15, seed=seed)
         q = random_query(g, size=4, seed=seed * 3 + 1)
         rs = []
-        for ji in ("nested", "sorted", "auto"):
+        for ji in ("nested", "sorted", "radix", "auto"):
             eng = make_engine(g, "rdf_h", impl="ref")
             eng.cfg.join_impl = ji
             rs.append(eng.execute(q).result_set())
-        assert rs[0] == rs[1] == rs[2]
+        assert rs[0] == rs[1] == rs[2] == rs[3]

@@ -147,6 +147,27 @@ def test_cross_expand_xla_remainder_regression():
     np.testing.assert_array_equal(arr[201], [1, 101, 201, 401, 601, 801])
 
 
+def test_cross_expand_oracle_shape_grid():
+    """Loud guard for the subtraction-form index math in _cross_expand:
+    full numpy-oracle comparison across a grid of (|A|, |B|) shape
+    combinations bracketing the one that miscompiled (the reduced
+    remainder form no longer reproduces standalone on this jax build,
+    but the fused remainder+gather did in the full kernel — so the real
+    cross_join path is pinned exhaustively instead of by spot-check)."""
+    for na, nb in [(1, 1), (3, 7), (10, 200), (200, 10), (16, 16),
+                   (13, 257), (100, 100), (1, 300), (300, 1)]:
+        a = mk_table((0, 1), np.column_stack(
+            [np.arange(na), 1000 + np.arange(na)]))
+        b = mk_table((2, 3), np.column_stack(
+            [2000 + np.arange(nb), 3000 + np.arange(nb)]))
+        out = cross_join(a, b)
+        assert out.count == na * nb, (na, nb)
+        arr = out.numpy()
+        want = np.array([[i, 1000 + i, 2000 + j, 3000 + j]
+                         for i in range(na) for j in range(nb)], np.int32)
+        np.testing.assert_array_equal(arr, want, err_msg=f"{(na, nb)}")
+
+
 # ----------------------- canonical result sets ------------------------ #
 def test_result_set_canonical_across_join_orders():
     """a JOIN b and b JOIN a produce permuted column layouts; result_set

@@ -71,7 +71,7 @@ def test_engine_plan_order_invariance(gq):
     g, q = gq
     want = None
     for pm in ("cost", "greedy"):
-        for ji in ("sorted", "nested"):
+        for ji in ("sorted", "nested", "radix"):
             eng = make_engine(g, "rdf_h", impl="ref")
             eng.cfg.plan_mode = pm
             eng.cfg.join_impl = ji
