@@ -1,6 +1,6 @@
 """Resilient-serving micro-benchmark -> BENCH_robust.json.
 
-Three scenarios over a governed :class:`QueryServer` (forcing engine
+Five scenarios over a governed :class:`QueryServer` (forcing engine
 config so the sort-merge kernel and reach-join actually dispatch — the
 same seams the fault injector targets):
 
@@ -27,6 +27,18 @@ same seams the fault injector targets):
     restores service within one cooldown.  Reports denied-fast latency
     vs. the cost of a failing ladder walk, and the wall time from fault
     removal to first successful result.
+  * rung_memory — a persistent ``kernel_dispatch`` fault served twice:
+    once with rung memory off (every request re-walks the full ladder,
+    burning the failing primary + intermediate rungs) and once with it
+    on (repeat traffic jumps straight to the last-good rung).  Reports
+    the per-request speedup of jumping vs. re-walking, the jump/probe
+    counters proving the routing, and — after the fault clears — the
+    wall time until a re-probe restores full-quality service.
+  * snapshot_restore — a warm server's learned state is saved with
+    ``save_snapshot``; a fresh process restores it and serves the whole
+    pool on the WARM path (plan-cache hits, zero misses) vs. a cold
+    server re-learning everything.  Reports restore-vs-relearn wall
+    time and asserts both passes are exact.
 
 Smoke mode (REPRO_BENCH_ROBUST_SMOKE=1, used by CI) shrinks the graph
 and burst counts so the module runs in well under a minute while still
@@ -130,7 +142,13 @@ def _degraded_overhead(g, pool, oracle):
     reps = 2 if SMOKE else 4
     out = {}
     for mode in ("healthy", "degraded"):
-        srv = QueryServer(g, cfg=_cfg(), governor=GovernorConfig())
+        # rung memory off: this scenario measures the cost of a FULL
+        # ladder walk per request; with memory on, repeat traffic would
+        # jump to the last-good rung and hide the walk being measured
+        # (that saving is what _rung_memory quantifies).
+        srv = QueryServer(g, cfg=_cfg(),
+                          governor=GovernorConfig(rung_memory=False,
+                                                  transient_retry=False))
         for q in pool:                       # healthy warm-up both modes
             srv.query(q)
         # warm the ladder rung's shapes too so the degraded timing is
@@ -216,6 +234,114 @@ def _quarantine_recovery(g, pool, oracle):
     }
 
 
+# ---------------------------- rung memory ------------------------------ #
+def _rung_memory(g, pool, oracle):
+    """Full-ladder-per-request vs. memory-jump under a persistent fault,
+    plus recovery within one re-probe interval after the fault clears."""
+    reps = 3 if SMOKE else 6
+    interval = 0.2 if SMOKE else 0.5
+    q, ref = pool[1], oracle[1]          # has a connection edge: the
+    # kernel_dispatch fault lands on its sort-merge probe
+    out = {}
+    configs = (
+        ("full_ladder", GovernorConfig(rung_memory=False,
+                                       transient_retry=False)),
+        ("memory_jump", GovernorConfig(rung_memory=True,
+                                       transient_retry=False,
+                                       reprobe_interval_s=interval)),
+    )
+    for mode, gov in configs:
+        srv = QueryServer(g, cfg=_cfg(), governor=gov)
+        for qq in pool:                  # healthy warm-up: plans + shapes
+            srv.query(qq)
+        lat, identical = [], True
+        with FaultInjector(Fault("kernel_dispatch", "raise", every=1)):
+            for _ in range(2):           # learn the rung / warm in-mode
+                srv.query(q)
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                r = srv.query(q)
+                lat.append(time.perf_counter() - t0)
+                identical &= r.result_set() == ref
+        snap = srv.telemetry()["governor"]
+        out[mode] = {
+            "median_ms": _p(lat, 50) * 1e3,
+            "p99_ms": _p(lat, 99) * 1e3,
+            "identical_result_sets": identical,
+            "ladder_entries": snap["ladder_entries"],
+            "rung_memory": snap["rung_memory"],
+        }
+        if mode == "memory_jump":
+            # fault cleared: the next re-probe slot retries the primary
+            # config and should restore full quality within ~1 interval
+            time.sleep(interval)
+            t0 = time.perf_counter()
+            while True:
+                r = srv.query(q)
+                if not r.stats.degraded_steps:
+                    break
+                time.sleep(interval / 10)
+            out["recovery_s"] = time.perf_counter() - t0
+            out["recovered_full_quality"] = r.result_set() == ref
+            out["recovered_within_2_intervals"] = \
+                out["recovery_s"] < 2 * interval + 0.5
+    fl, mj = out["full_ladder"], out["memory_jump"]
+    out["reps"] = reps
+    out["reprobe_interval_s"] = interval
+    out["jump_speedup_x"] = (fl["median_ms"] / max(mj["median_ms"], 1e-9))
+    # routing proof: without memory every request re-enters the ladder;
+    # with it the measured reps are (almost) all jumps — a re-probe may
+    # fire mid-run on a slow machine, hence the small headroom
+    out["memory_routed_jumps"] = (
+        mj["rung_memory"]["jumps"] >= reps - 2
+        and fl["ladder_entries"] >= reps + 2
+        and mj["ladder_entries"] <= 2 + mj["rung_memory"]["probe_failures"])
+    return out
+
+
+# -------------------------- snapshot restore --------------------------- #
+def _snapshot_restore(g, pool, oracle):
+    """Restore-vs-relearn: a restored server serves its first pass over
+    the pool entirely on the warm path; a cold server pays prepare +
+    planning + decide + check for every template."""
+    import tempfile
+
+    srv = QueryServer(g, cfg=_cfg(), governor=GovernorConfig())
+    for _ in range(2):                   # cold pass + warm pass
+        for q in pool:
+            srv.query(q)
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_snap_"),
+                        "robust.snap")
+    manifest = srv.save_snapshot(path)
+
+    cold = QueryServer(g, cfg=_cfg(), governor=GovernorConfig())
+    t0 = time.perf_counter()
+    cold_ok = all(cold.query(q).result_set() == want
+                  for q, want in zip(pool, oracle))
+    relearn_s = time.perf_counter() - t0
+
+    warm = QueryServer(g, cfg=_cfg(), governor=GovernorConfig())
+    t0 = time.perf_counter()
+    warm.restore_snapshot(path)
+    results = [warm.query(q) for q in pool]
+    restore_s = time.perf_counter() - t0
+    warm_ok = all(r.result_set() == want
+                  for r, want in zip(results, oracle))
+    all_warm_hits = all(r.stats.cache_hit for r in results)
+    os.unlink(path)
+    return {
+        "snapshot_bytes": manifest["bytes"],
+        "plans": manifest["plans"],
+        "relearn_first_pass_s": relearn_s,
+        "restore_plus_first_pass_s": restore_s,
+        "restore_speedup_x": relearn_s / max(restore_s, 1e-9),
+        "restored_first_pass_all_warm": all_warm_hits,
+        "restored_plan_cache_misses":
+            warm.telemetry()["plan_cache"]["misses"],
+        "identical_result_sets": cold_ok and warm_ok,
+    }
+
+
 # ---------------------------------------------------------------------- #
 def run():
     g, pool, oracle = _workload()
@@ -250,6 +376,31 @@ def run():
            f"denied/failing={1 / max(qr['denied_speedup_vs_failing'], 1e-9):.4f}x "
            f"recovery={qr['recovery_s']:.2f}s "
            f"recovered={qr['recovered_within_2_cooldowns']}")
+
+    results["rung_memory"] = _rung_memory(g, pool, oracle)
+    rm = results["rung_memory"]
+    assert rm["memory_jump"]["identical_result_sets"] \
+        and rm["full_ladder"]["identical_result_sets"], \
+        "rung-memory routing changed results under persistent fault"
+    assert rm["memory_routed_jumps"], \
+        "rung memory failed to absorb repeat ladder walks"
+    assert rm["recovered_full_quality"], \
+        "re-probe failed to restore full-quality service"
+    yield ("robust.rung_memory", rm["memory_jump"]["median_ms"] * 1e3,
+           f"jump_speedup={rm['jump_speedup_x']:.2f}x "
+           f"jumps={rm['memory_jump']['rung_memory']['jumps']} "
+           f"recovery={rm['recovery_s']:.2f}s")
+
+    results["snapshot_restore"] = _snapshot_restore(g, pool, oracle)
+    sr = results["snapshot_restore"]
+    assert sr["identical_result_sets"], \
+        "restored server's results diverged from oracle"
+    assert sr["restored_first_pass_all_warm"] \
+        and sr["restored_plan_cache_misses"] == 0, \
+        "restored server fell back to the cold path"
+    yield ("robust.snapshot", sr["restore_plus_first_pass_s"] * 1e3,
+           f"restore_speedup={sr['restore_speedup_x']:.2f}x "
+           f"plans={sr['plans']} bytes={sr['snapshot_bytes']}")
 
     out_path = os.environ.get("REPRO_BENCH_ROBUST_JSON", "BENCH_robust.json")
     with open(out_path, "w") as f:

@@ -60,7 +60,9 @@ def main():
               f"plan_cache_hit={r.stats.cache_hit}")
     pc = srv.telemetry()["plan_cache"]
     print(f"   plan cache: {pc['hits']} hits / {pc['misses']} misses")
-    print("   (full repeat-template workload: examples/serve_queries.py)")
+    print("   (full repeat-template workload: examples/serve_queries.py;"
+          " add --snapshot PATH there to save the learned state and"
+          " warm-restart a fresh server from it)")
 
 
 if __name__ == "__main__":

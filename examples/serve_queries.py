@@ -13,6 +13,14 @@ circuit breaker) with optional injected chaos:
 
     PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_queries.py \\
         --governed --deadline-ms 250 --max-pending 6 --chaos
+
+Warm-restart durability: ``--snapshot PATH`` saves the server's learned
+state (plans, calibration, governor memory) after the stream, then
+"restarts" into a fresh server via ``restore_snapshot`` and replays one
+query per template — every one should hit the plan cache warm:
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_queries.py \\
+        --governed --snapshot /tmp/serve.snap
 """
 import argparse
 import json
@@ -50,6 +58,10 @@ def main():
                          "during the stream: traffic is served exactly "
                          "through the degradation ladder (implies "
                          "--governed)")
+    ap.add_argument("--snapshot", metavar="PATH", default=None,
+                    help="after the stream, save learned state to PATH, "
+                         "restore it into a fresh server, and replay one "
+                         "query per template on the warm path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     governed = (args.governed or args.chaos or args.deadline_ms is not None
@@ -140,6 +152,31 @@ def main():
         print(f"   breaker: trips={br['trips']} denials={br['denials']} "
               f"probes={br['probes']} recoveries={br['recoveries']} "
               f"open={br['open']}")
+
+    if args.snapshot is not None:
+        import time
+        print(f"== snapshot round trip: {args.snapshot} ==")
+        manifest = srv.save_snapshot(args.snapshot)
+        print(f"   saved {manifest['plans']} plans, "
+              f"{manifest['bytes']}B (format v{manifest['format_version']})")
+        srv2 = QueryServer(g, batching=not args.no_batch,
+                           calibrate=not args.no_calibrate, **srv_kw)
+        t0 = time.perf_counter()
+        srv2.restore_snapshot(args.snapshot)
+        restore_ms = (time.perf_counter() - t0) * 1e3
+        warm = degraded = 0
+        for q in pool:
+            r = srv2.query(q)
+            warm += bool(r.stats.cache_hit)
+            degraded += bool(r.stats.degraded_steps)
+        pc2 = srv2.telemetry()["plan_cache"]
+        print(f"   restored in {restore_ms:.1f}ms; replayed "
+              f"{len(pool)} templates: plan cache {pc2['hits']} hits / "
+              f"{pc2['misses']} misses, {warm} warm executions"
+              + (f", {degraded} still rung-memory-degraded (the snapshot"
+                 " preserves fault memory too)" if degraded else
+                 " (first post-restore execution skips"
+                 " prepare/plan/decide/check)"))
 
 
 if __name__ == "__main__":

@@ -223,6 +223,12 @@ class PreparedQuery:
     # learned on first execution ------------------------------------- #
     executions: int = 0
     masks: tuple | None = None          # (pass_masks, pass_np, after)
+    # host-only serializable form of `masks` — (pass_np, after) with no
+    # device arrays.  Written by snapshot serialization
+    # (repro.serve.snapshot); `_candidate_masks` rebuilds the device
+    # arrays from it lazily on the first post-restore execution, so a
+    # restored plan never re-runs the signature check
+    masks_host: tuple | None = None
     comp_orders: dict = field(default_factory=dict)   # comp idx -> order
     comp_costs: dict = field(default_factory=dict)    # comp idx -> (c, g)
     conn_order: list[int] | None = None
@@ -332,6 +338,7 @@ class Engine:
                               self.stats, cfg.thresholds, k=cfg.d_check)
             if decision.use_check != pq.use_check:
                 pq.masks = None
+                pq.masks_host = None
                 pq.comp_orders = {}
                 pq.comp_costs = {}
                 pq.conn_order = None
@@ -356,6 +363,22 @@ class Engine:
         template): cached on the PreparedQuery, so warm executions skip
         the whole signature check."""
         if pq.masks is not None:
+            return pq.masks
+        if pq.masks_host is not None:
+            # warm restart: rebuild device arrays from the snapshot's
+            # host-form masks — no signature check, no bloom, no NI
+            # touch; the restored plan replays exactly like a warm one
+            host_np, after = pq.masks_host
+            pass_masks = {}
+            for comp in pq.comps:
+                for q in comp:
+                    m = host_np.get(q)
+                    if m is not None:
+                        pass_masks[q] = jnp.asarray(m)
+                    else:
+                        lo, hi = int(pq.iv[q, 0]), int(pq.iv[q, 1])
+                        pass_masks[q] = (jnp.int32(lo), jnp.int32(hi))
+            pq.masks = (pass_masks, host_np, after)
             return pq.masks
         cfg = self.cfg
         query, iv = pq.query, pq.iv

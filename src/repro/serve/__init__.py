@@ -23,6 +23,11 @@ learn from its own executions.  This package is that setting:
   * `server`      — the user-facing `QueryServer` (submit / submit_many,
                     sync + async result futures, LRU-bounded plan and
                     reach caches, p50/p99 latency + cache-hit telemetry).
+  * `snapshot`    — warm-restart durability: versioned, checksummed
+                    serialization of all learned serving state
+                    (calibration, rung memory, breaker, cached plans),
+                    restored all-or-nothing with typed `SnapshotError`
+                    fallbacks to a clean cold start.
 """
 from .plan_cache import (PreparedQuery, PlanCache, template_fingerprint,
                          canonicalize, prepare_cached, dataset_key)
@@ -31,9 +36,10 @@ from .calibrate import Calibrator, Ewma
 from .governor import (Budget, BudgetExceeded, CircuitBreaker,
                        DegradationExhausted, Governor, GovernorConfig,
                        IncompleteFlushError, LadderRung, QueryError,
-                       QuarantinedError, RejectedError, ServingError,
-                       default_ladder)
+                       QuarantinedError, RejectedError, RungMemory,
+                       ServingError, default_ladder)
 from .server import QueryServer, ResultFuture
+from .snapshot import SnapshotError, save_snapshot, restore_snapshot
 
 __all__ = [
     "PreparedQuery", "PlanCache", "template_fingerprint", "canonicalize",
@@ -41,6 +47,7 @@ __all__ = [
     "Calibrator", "Ewma", "QueryServer", "ResultFuture",
     "Budget", "BudgetExceeded", "CircuitBreaker", "DegradationExhausted",
     "Governor", "GovernorConfig", "IncompleteFlushError", "LadderRung",
-    "QueryError", "QuarantinedError", "RejectedError", "ServingError",
-    "default_ladder",
+    "QueryError", "QuarantinedError", "RejectedError", "RungMemory",
+    "ServingError", "default_ladder",
+    "SnapshotError", "save_snapshot", "restore_snapshot",
 ]

@@ -86,6 +86,8 @@ class Calibrator:
         self.version = 0
         self.observed = 0
         self.degraded_skipped = 0
+        self.chronic_notices = 0
+        self.chronic_fps: list[str] = []
         self._join_bias = Ewma(alpha)
         self._conn_sel = Ewma(alpha)
         self._reach = Ewma(alpha)
@@ -179,11 +181,71 @@ class Calibrator:
             self.version += 1
 
     # ------------------------------------------------------------------ #
+    def note_chronic(self, fingerprint: str) -> None:
+        """A template stayed degraded past the governor's chronic
+        threshold: its plan keeps failing under the primary config, so
+        re-plan rather than re-try.  The version bump forces every
+        cached decision through `Engine.revalidate` (cheap — pure
+        template arithmetic), and the fingerprint is kept (bounded) for
+        telemetry/offline analysis."""
+        self.chronic_notices += 1
+        if fingerprint not in self.chronic_fps:
+            self.chronic_fps.append(fingerprint)
+            del self.chronic_fps[:-64]
+        self.version += 1
+
+    def save_state(self) -> dict:
+        """Serializable learned state (thresholds, scales, EWMAs) for
+        warm-restart snapshots; restored by `load_state`."""
+        th, cm = self.thresholds, self.cost_model
+        return {
+            "version": self.version,
+            "observed": self.observed,
+            "degraded_skipped": self.degraded_skipped,
+            "chronic_notices": self.chronic_notices,
+            "chronic_fps": list(self.chronic_fps),
+            "thresholds": {"tau_iter": th.tau_iter,
+                           "tau_join": th.tau_join,
+                           "tau_sel": th.tau_sel,
+                           "nested_join_max": th.nested_join_max},
+            "cost_model": {"join_est_scale": cm.join_est_scale,
+                           "conn_sel_scale": cm.conn_sel_scale,
+                           "reach_scale": cm.reach_scale,
+                           "cross_scale": cm.cross_scale},
+            "ewma": {name: {"alpha": e.alpha, "value": e.value, "n": e.n}
+                     for name, e in (("join_bias", self._join_bias),
+                                     ("conn_sel", self._conn_sel),
+                                     ("reach", self._reach))},
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore `save_state` output IN PLACE on the same Thresholds /
+        CostModel objects the engine plans with."""
+        th, cm = self.thresholds, self.cost_model
+        for k, v in state.get("thresholds", {}).items():
+            setattr(th, k, v)
+        for k, v in state.get("cost_model", {}).items():
+            setattr(cm, k, v)
+        for name, e in (("join_bias", self._join_bias),
+                        ("conn_sel", self._conn_sel),
+                        ("reach", self._reach)):
+            s = state.get("ewma", {}).get(name)
+            if s is not None:
+                e.alpha = float(s["alpha"])
+                e.value = None if s["value"] is None else float(s["value"])
+                e.n = int(s["n"])
+        self.version = int(state.get("version", 0))
+        self.observed = int(state.get("observed", 0))
+        self.degraded_skipped = int(state.get("degraded_skipped", 0))
+        self.chronic_notices = int(state.get("chronic_notices", 0))
+        self.chronic_fps = [str(f) for f in state.get("chronic_fps", [])]
+
     def snapshot(self) -> dict:
         th, cm = self.thresholds, self.cost_model
         return {
             "observed": self.observed,
             "degraded_skipped": self.degraded_skipped,
+            "chronic_notices": self.chronic_notices,
             "version": self.version,
             "tau_iter": th.tau_iter,
             "tau_join": th.tau_join,

@@ -207,6 +207,7 @@ class PlanCache:
         self.evictions = 0
         self.revalidations = 0          # stale entries re-decided
         self.invalidations = 0          # ... whose decision flipped
+        self.drops = 0                  # chronic-degradation re-plans
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -230,6 +231,20 @@ class PlanCache:
             self._entries.popitem(last=False)
             self.evictions += 1
 
+    def drop(self, dataset_id: str, fingerprint: str) -> bool:
+        """Remove one entry (chronic-degradation re-planning: the next
+        request on this fingerprint prepares fresh).  Returns whether an
+        entry was present."""
+        if self._entries.pop((dataset_id, fingerprint), None) is None:
+            return False
+        self.drops += 1
+        return True
+
+    def entries(self):
+        """((dataset_id, fingerprint), PreparedQuery) pairs in LRU order
+        (least recent first) — snapshot serialization preserves it."""
+        return list(self._entries.items())
+
     def snapshot(self) -> dict:
         total = self.hits + self.misses
         return {
@@ -240,6 +255,7 @@ class PlanCache:
             "evictions": self.evictions,
             "revalidations": self.revalidations,
             "invalidations": self.invalidations,
+            "drops": self.drops,
         }
 
 

@@ -38,6 +38,7 @@ degraded-retry) with the original as __cause__.
 """
 from __future__ import annotations
 
+import random
 import time
 from collections import deque
 from dataclasses import replace
@@ -167,6 +168,9 @@ class QueryServer:
         self.queries_served = 0
         self.query_errors = 0
         self.queries_shed = 0
+        # (action, format version, monotonic stamp) of the last
+        # save_snapshot/restore_snapshot, for telemetry age reporting
+        self._snapshot_meta: tuple[str, int, float] | None = None
 
     # ------------------------------------------------------------------ #
     def submit(self, query: QueryTemplate) -> ResultFuture:
@@ -294,21 +298,23 @@ class QueryServer:
         gov = self.governor
         t0 = time.perf_counter()
         if gov is not None:
-            verdict = gov.breaker.admit(pq.fingerprint)
+            verdict = gov.breaker.admit(pq.fingerprint, now=gov.clock())
             if verdict == "deny":
                 return QuarantinedError(
                     pq.fingerprint or "?",
-                    gov.breaker.retry_after(pq.fingerprint)), \
+                    gov.breaker.retry_after(pq.fingerprint,
+                                            now=gov.clock())), \
                     time.perf_counter() - t0
         try:
             res = self._execute_governed(pq)
         except Exception as e:               # noqa: BLE001
             if gov is not None:
-                gov.breaker.record(pq.fingerprint, ok=False)
+                gov.breaker.record(pq.fingerprint, ok=False,
+                                   now=gov.clock())
             return e, time.perf_counter() - t0
         lat = time.perf_counter() - t0
         if gov is not None:
-            gov.breaker.record(pq.fingerprint, ok=True)
+            gov.breaker.record(pq.fingerprint, ok=True, now=gov.clock())
         if self.calibrator is not None:
             self.calibrator.observe(res.stats)
         self._observe_stats(res.stats)
@@ -317,32 +323,103 @@ class QueryServer:
     def _execute_governed(self, pq) -> MatchResult:
         """Primary execution under the configured budget; on any failure
         (budget abort, capacity blow-up, kernel error) walk the
-        degradation ladder instead of failing outright."""
+        degradation ladder instead of failing outright.
+
+        Rung memory routes repeat traffic first: a fingerprint known to
+        be degraded jumps straight to its last-good rung (no primary
+        attempt, no intermediate rungs); once per re-probe interval the
+        primary config is probed instead — success claws full quality
+        back, failure falls straight back to the remembered rung.
+        Probes skip the transient retry (at most ONE primary attempt
+        per interval is the contract)."""
         gov = self.governor
         if gov is None:
             return self.engine.execute_prepared(pq)
-        budget = gov.make_budget()
+        mem = gov.rung_memory
+        if mem is not None and pq.fingerprint is not None:
+            verdict, rung = mem.route(pq.fingerprint, gov.clock())
+            if verdict == "jump":
+                return self._degraded_retry(pq, None, start=rung)
+            if verdict == "probe":
+                try:
+                    res = self._attempt_primary(pq, retry=False)
+                except Exception as primary:     # noqa: BLE001
+                    if isinstance(primary, BudgetExceeded):
+                        gov.budget_exceeded += 1
+                    mem.record_probe_failed(pq.fingerprint)
+                    return self._degraded_retry(pq, primary, start=rung)
+                mem.record_primary_ok(pq.fingerprint)
+                return res
         try:
-            if budget is None:
-                return self.engine.execute_prepared(pq)
-            return self.engine.execute_prepared(pq, budget=budget)
-        except Exception as primary:         # noqa: BLE001
+            return self._attempt_primary(pq, retry=gov.cfg.transient_retry)
+        except Exception as primary:             # noqa: BLE001
             if isinstance(primary, BudgetExceeded):
                 gov.budget_exceeded += 1
             return self._degraded_retry(pq, primary)
 
-    def _degraded_retry(self, pq, primary: BaseException) -> MatchResult:
+    def _attempt_primary(self, pq, retry: bool) -> MatchResult:
+        """One primary execution under a fresh budget; with `retry`,
+        a failure that is NOT budget/capacity-typed gets exactly one
+        jittered-backoff retry on the primary config with a FRESH
+        prepare and a fresh budget — a transient kernel blip costs
+        neither a ladder walk, nor a degraded-result stamp, nor a
+        breaker strike.  A budget abort is deterministic (re-running
+        can only re-blow the same bound), so it goes straight to the
+        ladder; so does a repeat failure."""
+        gov = self.governor
+        budget = gov.make_budget()
+        try:
+            return (self.engine.execute_prepared(pq) if budget is None
+                    else self.engine.execute_prepared(pq, budget=budget))
+        except BudgetExceeded:
+            raise
+        except Exception:                        # noqa: BLE001
+            if not retry:
+                raise
+            gov.transient_retries += 1
+            backoff = gov.cfg.retry_backoff_s
+            if backoff > 0:
+                time.sleep(backoff *
+                           (1.0 + gov.cfg.retry_jitter * random.random()))
+            fresh = self.engine.prepare(pq.query,
+                                        fingerprint=pq.fingerprint,
+                                        version=pq.version)
+            budget = gov.make_budget()
+            res = (self.engine.execute_prepared(fresh) if budget is None
+                   else self.engine.execute_prepared(fresh, budget=budget))
+            gov.transient_recoveries += 1
+            return res
+
+    def _degraded_retry(self, pq, primary: BaseException | None,
+                        start: str | None = None) -> MatchResult:
         """Walk the ladder: each rung gets a sibling engine with the
         rung's exact-but-cheaper config, a FRESH prepare (the primary
         plan may be the thing that failed) and a fresh budget.  The plan
         cache is never polluted with degraded plans, and degraded stats
         carry `degraded_steps` so the Calibrator ignores them.  Raises
         DegradationExhausted (primary error as __cause__) if every rung
-        fails."""
+        fails.
+
+        `start` (a rung name from rung memory) begins the walk at that
+        rung — intermediate rungs are never attempted on a jump; an
+        unknown name falls back to a full walk.  `primary is None`
+        marks a memory jump (no primary failure happened), so it is
+        counted as a jump, not a ladder entry."""
         gov = self.governor
-        attempts: list[tuple[str, BaseException]] = [("primary", primary)]
+        mem = gov.rung_memory
+        attempts: list[tuple[str, BaseException]] = \
+            [] if primary is None else [("primary", primary)]
         steps: list[str] = []
-        for rung in gov.cfg.ladder:
+        ladder = gov.cfg.ladder
+        first = 0
+        if start is not None:
+            for i, rung in enumerate(ladder):
+                if rung.name == start:
+                    first = i
+                    break
+        if primary is not None:
+            gov.ladder_entries += 1
+        for rung in ladder[first:]:
             steps.append(rung.name)
             eng = self.engine.with_config(rung.apply(self.engine.cfg,
                                                      gov.cfg))
@@ -356,9 +433,30 @@ class QueryServer:
                 continue
             res.stats.degraded_steps = list(steps)
             gov.note_degraded(rung.name)
+            if mem is not None and pq.fingerprint is not None:
+                if mem.record_degraded(pq.fingerprint, rung.name,
+                                       gov.clock()):
+                    self._note_chronic(pq)
             return res
         gov.exhausted += 1
-        raise DegradationExhausted(pq.fingerprint, attempts) from primary
+        if mem is not None and pq.fingerprint is not None:
+            # even the remembered rung failed: forget it so the next
+            # request re-walks (the fault moved out from under us)
+            mem.clear(pq.fingerprint)
+        err = DegradationExhausted(pq.fingerprint, attempts)
+        if primary is not None:
+            raise err from primary
+        raise err
+
+    def _note_chronic(self, pq) -> None:
+        """A fingerprint stayed degraded past `chronic_after`: surface
+        it for RE-PLANNING instead of re-trying — drop its cached plan,
+        tell the Calibrator, and forget the rung so the next request
+        plans fresh against the calibrated thresholds."""
+        self.plan_cache.drop(self.dataset_id, pq.fingerprint)
+        if self.calibrator is not None:
+            self.calibrator.note_chronic(pq.fingerprint)
+        self.governor.rung_memory.clear(pq.fingerprint)
 
     def _finish(self, f: ResultFuture, res, order, latency: float) -> None:
         if isinstance(res, BaseException):
@@ -387,6 +485,37 @@ class QueryServer:
                     d[kk] = d.get(kk, 0) + vv
 
     # ------------------------------------------------------------------ #
+    def save_snapshot(self, path) -> dict:
+        """Serialize every piece of learned serving state (calibrator
+        separators/scales, governor rung memory + breaker, plan-cache
+        entries with their learned join/connection plans) to `path`.
+        Returns the snapshot manifest.  See repro.serve.snapshot."""
+        from .snapshot import save_snapshot as _save
+        manifest = _save(self, path)
+        self._snapshot_meta = ("saved", manifest["format_version"],
+                               time.monotonic())
+        return manifest
+
+    def restore_snapshot(self, path, max_age_s: float | None = None) -> dict:
+        """Load learned serving state saved by `save_snapshot`.  A
+        corrupt, version-mismatched, stale, or wrong-dataset snapshot
+        raises SnapshotError and leaves this server untouched (a clean
+        cold start) — never a wrong or stale answer.  Returns the
+        restored manifest."""
+        from .snapshot import restore_snapshot as _restore
+        manifest = _restore(self, path, max_age_s=max_age_s)
+        self._snapshot_meta = ("restored", manifest["format_version"],
+                               time.monotonic())
+        return manifest
+
+    def _snapshot_info(self) -> dict | None:
+        if self._snapshot_meta is None:
+            return None
+        action, version, stamp = self._snapshot_meta
+        return {"action": action, "format_version": version,
+                "age_s": time.monotonic() - stamp}
+
+    # ------------------------------------------------------------------ #
     @staticmethod
     def _pct(lat, q) -> float:
         return float(np.percentile(np.asarray(lat), q)) if lat else 0.0
@@ -397,6 +526,10 @@ class QueryServer:
         batching dedup, calibration state, governance counters, and the
         QueryStats rollup."""
         rc = self.engine.reach_cache
+        gov_t = None
+        if self.governor is not None:
+            gov_t = self.governor.snapshot()
+            gov_t["snapshot"] = self._snapshot_info()
         out = {
             "queries_served": self.queries_served,
             "query_errors": self.query_errors,
@@ -420,8 +553,7 @@ class QueryServer:
             "batch": self.batcher.telemetry.snapshot(),
             "calibration": (None if self.calibrator is None
                             else self.calibrator.snapshot()),
-            "governor": (None if self.governor is None
-                         else self.governor.snapshot()),
+            "governor": gov_t,
             "stats_rollup": dict(self._rollup),
         }
         return out

@@ -39,10 +39,20 @@ Fault kinds:
   delay             sleep `delay_s` then proceed normally — exercises
                     deadline budgets without changing results.
 
-Faults trigger by 1-based per-point call index: `at=k` fires on call k
-exactly once; `every=n` fires on every call whose index is a multiple
-of n (persistent fault).  `FaultInjector` is a context manager; the
-original attributes are always restored on exit.
+Trigger matrix (1-based per-point call index; exactly one of the three
+modes is active per Fault — `first` wins over `every` wins over `at`):
+
+  trigger     fires on calls        models
+  ---------   -------------------   ----------------------------------
+  at=k        k exactly (once)      an isolated one-shot blip
+  every=n     n, 2n, 3n, ...        a persistent / periodic fault
+  first=k     1..k, then clears     a transient fault that heals — the
+                                    retry-classification case: call
+                                    k+1 onward succeeds, so ONE retry
+                                    recovers iff k == 1
+
+`FaultInjector` is a context manager; the original attributes are
+always restored on exit.
 """
 from __future__ import annotations
 
@@ -79,11 +89,14 @@ FAULT_KINDS = ("raise", "corrupt_capacity", "delay")
 @dataclass(frozen=True)
 class Fault:
     """One fault to inject: fire `kind` at injection point `point` on the
-    `at`-th call (1-based), or on every `every`-th call if set."""
+    `at`-th call (1-based), on every `every`-th call, or on the first
+    `first` calls then clear (a healing transient) — see the trigger
+    matrix in the module docstring."""
     point: str
     kind: str
     at: int = 1
     every: int | None = None
+    first: int | None = None
     delay_s: float = 0.05
 
     def __post_init__(self):
@@ -95,6 +108,8 @@ class Fault:
                              f"known: {FAULT_KINDS}")
 
     def triggers(self, call_index: int) -> bool:
+        if self.first is not None:
+            return call_index <= self.first
         if self.every is not None:
             return call_index % self.every == 0
         return call_index == self.at

@@ -1,5 +1,6 @@
-"""Resource governance units: budgets, circuit breaker, degradation
-ladder configs, reach-cache byte budget, and capacity replay.
+"""Resource governance units: budgets, circuit breaker, rung memory,
+degradation ladder configs, reach-cache byte budget, and capacity
+replay.
 
 These are the fast, engine-free (or nearly so) tests of the governance
 building blocks; the end-to-end behavior under injected faults lives in
@@ -14,7 +15,7 @@ from repro.core.engine import EngineConfig
 from repro.core.matching import CandidateTable, planned_join, _pow2
 from repro.data import random_graph, random_query
 from repro.serve import (Budget, BudgetExceeded, CircuitBreaker,
-                         GovernorConfig, default_ladder)
+                         GovernorConfig, RungMemory, default_ladder)
 
 
 # ------------------------------ Budget --------------------------------- #
@@ -110,6 +111,158 @@ def test_breaker_isolates_fingerprints():
     cb.record("bad", ok=False, now=0.0)
     assert cb.admit("bad", now=1.0) == "deny"
     assert cb.admit("good", now=1.0) == "allow"
+
+
+def test_breaker_cooldown_saturates_at_max():
+    """Many consecutive failed probes: the exponential backoff must clamp
+    at max_cooldown_s, not grow without bound."""
+    cb = CircuitBreaker(threshold=1, cooldown_s=10.0, backoff=2.0,
+                        max_cooldown_s=60.0)
+    fp = "fp-sat"
+    now = 0.0
+    cb.record(fp, ok=False, now=now)            # trip, cooldown 10
+    for _ in range(12):                         # 10 -> 20 -> 40 -> 60 -> 60...
+        now = cb._st[fp]["until"] + 0.001
+        assert cb.admit(fp, now=now) == "probe"
+        cb.record(fp, ok=False, now=now)
+        assert cb._st[fp]["cooldown"] <= 60.0
+    assert cb._st[fp]["cooldown"] == 60.0
+    # the open window itself is also bounded by the saturated cooldown
+    assert cb.retry_after(fp, now=now) <= 60.0
+
+
+def test_breaker_backwards_clock_cannot_reopen_recovered():
+    """Injectable-clock monotonicity: after a probe recovery, a `now`
+    passed backwards must not re-open (or extend) anything — observed
+    times are clamped to the high-water mark."""
+    cb = CircuitBreaker(threshold=1, cooldown_s=10.0)
+    fp = "fp-mono"
+    cb.record(fp, ok=False, now=100.0)          # open until 110
+    assert cb.admit(fp, now=111.0) == "probe"
+    cb.record(fp, ok=True, now=111.0)           # recovered
+    assert cb.state(fp) == "closed"
+    # clock runs backwards: still closed, still allowed
+    assert cb.admit(fp, now=50.0) == "allow"
+    assert cb.state(fp) == "closed"
+    assert cb.retry_after(fp, now=50.0) == 0.0
+    # a new trip recorded at a backwards time opens from the high-water
+    # mark, not from the stale clock (no cooldown already half-expired)
+    cb.record(fp, ok=False, now=40.0)
+    assert cb._st[fp]["until"] >= 111.0 + 10.0
+
+
+def test_breaker_eviction_bounds_tracked_states():
+    """Fingerprint churn: closed fully-recovered entries are evicted
+    LRU-style at max_tracked; open/half-open entries are never evicted;
+    evictions are reported in snapshot()."""
+    cb = CircuitBreaker(threshold=1, cooldown_s=1e6, max_tracked=4)
+    cb.record("quarantined", ok=False, now=0.0)  # open forever
+    assert cb.state("quarantined") == "open"
+    for i in range(10):
+        cb.record(f"ok-{i}", ok=True, now=0.0)   # closed, fully recovered
+    assert len(cb._st) == 4
+    assert cb.state("quarantined") == "open"     # survived all eviction
+    assert "quarantined" in cb._st
+    # newest closed entries retained, oldest evicted
+    assert "ok-9" in cb._st and "ok-0" not in cb._st
+    snap = cb.snapshot()
+    assert snap["evictions"] == cb.evictions == 7
+    assert snap["tracked"] == 4
+
+
+def test_breaker_eviction_prefers_fully_recovered():
+    """Closed entries with residual failure counts are evicted only
+    after every fully-recovered entry is gone."""
+    cb = CircuitBreaker(threshold=5, max_tracked=2)
+    cb.record("failing", ok=False, now=0.0)      # closed, failures=1
+    cb.record("clean-1", ok=True, now=0.0)
+    cb.record("clean-2", ok=True, now=0.0)       # over cap: evict a clean
+    assert "failing" in cb._st
+    assert len(cb._st) == 2
+
+
+def test_breaker_state_roundtrip_rebases_cooldowns():
+    """save_state stores remaining cooldown as a relative duration;
+    load_state rebases it on the new process's clock."""
+    cb = CircuitBreaker(threshold=1, cooldown_s=10.0)
+    cb.record("open-fp", ok=False, now=1000.0)   # open until 1010
+    cb.record("ok-fp", ok=True, now=1000.0)
+    state = cb.save_state(now=1004.0)            # 6s remaining
+    cb2 = CircuitBreaker(threshold=1, cooldown_s=10.0)
+    cb2.load_state(state, now=7.0)               # entirely different clock
+    assert cb2.state("open-fp") == "open"
+    assert cb2.retry_after("open-fp", now=7.0) == pytest.approx(6.0)
+    assert cb2.admit("open-fp", now=8.0) == "deny"
+    assert cb2.admit("open-fp", now=13.5) == "probe"
+    assert cb2.admit("ok-fp", now=7.0) == "allow"
+    assert cb2.trips == cb.trips
+
+
+# ---------------------------- RungMemory ------------------------------- #
+def test_rung_memory_routes_primary_then_jump_then_probe():
+    mem = RungMemory(reprobe_interval_s=30.0, chronic_after=100)
+    fp = "fp-r"
+    assert mem.route(fp, now=0.0) == ("primary", None)
+    mem.record_degraded(fp, "force_simple_impls", now=0.0)
+    # inside the re-probe interval: every request jumps to the rung
+    for t in (1.0, 10.0, 29.0):
+        assert mem.route(fp, now=t) == ("jump", "force_simple_impls")
+    # interval elapsed: exactly ONE probe, siblings keep jumping
+    assert mem.route(fp, now=31.0) == ("probe", "force_simple_impls")
+    assert mem.route(fp, now=31.0) == ("jump", "force_simple_impls")
+    snap = mem.snapshot()
+    assert snap["jumps"] == 4 and snap["probes"] == 1
+
+
+def test_rung_memory_probe_recovery_forgets():
+    mem = RungMemory(reprobe_interval_s=10.0, chronic_after=100)
+    mem.record_degraded("fp", "skip_check", now=0.0)
+    assert mem.route("fp", now=11.0)[0] == "probe"
+    mem.record_primary_ok("fp")
+    assert mem.route("fp", now=12.0) == ("primary", None)
+    assert mem.probe_recoveries == 1
+
+
+def test_rung_memory_chronic_fires_exactly_once_at_threshold():
+    mem = RungMemory(chronic_after=3)
+    flags = [mem.record_degraded("fp", "truncate", now=0.0)
+             for _ in range(5)]
+    assert flags == [False, False, True, False, False]
+    assert mem.chronic == 1
+    mem.clear("fp")
+    assert mem.route("fp", now=0.0) == ("primary", None)
+
+
+def test_rung_memory_lru_bound():
+    mem = RungMemory(max_tracked=3)
+    for i in range(6):
+        mem.record_degraded(f"fp-{i}", "skip_check", now=0.0)
+    assert len(mem._st) == 3 and mem.evictions == 3
+    assert mem.rung("fp-5") == "skip_check" and mem.rung("fp-0") is None
+
+
+def test_rung_memory_state_roundtrip_rebases_next_probe():
+    mem = RungMemory(reprobe_interval_s=30.0)
+    mem.record_degraded("fp", "greedy_plan", now=100.0)  # next probe 130
+    state = mem.save_state(now=110.0)                    # 20s remaining
+    mem2 = RungMemory(reprobe_interval_s=30.0)
+    mem2.load_state(state, now=5.0)
+    assert mem2.route("fp", now=6.0) == ("jump", "greedy_plan")
+    assert mem2.route("fp", now=26.0)[0] == "probe"      # 5 + 20 elapsed
+
+
+# --------------------------- Fault triggers ---------------------------- #
+def test_fault_first_trigger_fires_then_clears():
+    from repro.testing import Fault
+    f = Fault("kernel_dispatch", "raise", first=2)
+    assert [f.triggers(i) for i in (1, 2, 3, 4)] == [True, True,
+                                                     False, False]
+    # at/every unchanged
+    assert Fault("kernel_dispatch", "raise", at=3).triggers(3)
+    assert not Fault("kernel_dispatch", "raise", at=3).triggers(4)
+    e = Fault("kernel_dispatch", "raise", every=2)
+    assert [e.triggers(i) for i in (1, 2, 3, 4)] == [False, True,
+                                                     False, True]
 
 
 # ------------------------- degradation ladder -------------------------- #

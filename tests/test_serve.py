@@ -508,6 +508,41 @@ def test_query_stats_to_dict_schema_pinned():
     json.dumps(d)                         # JSON-serializable as-is
 
 
+def test_governor_telemetry_schema_pinned(graph):
+    """The governor section of QueryServer.telemetry() is a consumed
+    wire format (dashboards, BENCH json): pin its flat key set, the
+    breaker/rung-memory sub-schemas, and JSON-serializability."""
+    import json
+    from repro.serve import GovernorConfig
+    srv = QueryServer(graph, impl="ref", governor=GovernorConfig())
+    srv.query(random_query(graph, size=3, seed=50))
+    gov = srv.telemetry()["governor"]
+    assert set(gov) == {
+        "limits", "shed_submit", "shed_flush", "budget_exceeded",
+        "degraded_queries", "degraded_by_rung", "exhausted",
+        "transient_retries", "transient_recoveries", "ladder_entries",
+        "breaker", "rung_memory", "snapshot",
+    }
+    assert set(gov["breaker"]) == {
+        "tracked", "trips", "denials", "probes", "recoveries",
+        "evictions", "open", "half_open",
+    }
+    assert set(gov["rung_memory"]) == {
+        "tracked", "hits", "jumps", "probes", "probe_recoveries",
+        "probe_failures", "chronic", "evictions",
+    }
+    assert gov["snapshot"] is None      # nothing saved/restored yet
+    json.dumps(gov)
+    # after a snapshot round-trip the age/version block appears
+    import tempfile, os
+    path = os.path.join(tempfile.mkdtemp(), "t.snap")
+    srv.save_snapshot(path)
+    snap = srv.telemetry()["governor"]["snapshot"]
+    assert set(snap) == {"action", "format_version", "age_s"}
+    assert snap["action"] == "saved" and snap["age_s"] >= 0.0
+    json.dumps(snap)
+
+
 def test_query_stats_to_dict_from_execution(graph, pool):
     import json
     eng = make_engine(graph, "rdf_h", impl="ref")

@@ -1,0 +1,280 @@
+"""Warm-restart durability: snapshot round trips and their safety rails.
+
+The contract — `restore_snapshot` either yields a server whose first
+execution per cached template runs the WARM path (no prepare, no
+planning DP, no §4.3 decide, no signature check) with results identical
+to a fresh engine, or raises a typed SnapshotError and leaves an exact
+cold start.  Never a silently wrong or stale answer.
+"""
+import os
+import struct
+import time
+
+import numpy as np
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.core import make_engine
+from repro.core.engine import EngineConfig
+from repro.data import random_graph, random_query
+from repro.serve import (QueryServer, GovernorConfig, SnapshotError,
+                         template_fingerprint)
+from repro.serve.snapshot import MAGIC, FORMAT_VERSION
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_graph(n_nodes=80, n_edges=220, n_preds=3,
+                        n_literals=20, seed=7)
+
+
+@pytest.fixture(scope="module")
+def pool(graph):
+    return [random_query(graph, size=4, seed=60 + i, n_connection=i % 2,
+                         d_c=2) for i in range(4)]
+
+
+@pytest.fixture(scope="module")
+def oracle(graph, pool):
+    eng = make_engine(graph, "rdf_h", impl="ref")
+    return [eng.execute(q).result_set() for q in pool]
+
+
+def _server(graph, **kw):
+    kw.setdefault("governor", GovernorConfig())
+    return QueryServer(graph, impl="ref", **kw)
+
+
+def _warm_server(graph, pool):
+    srv = _server(graph)
+    for _ in range(2):                   # cold pass + warm pass
+        for q in pool:
+            srv.query(q)
+    return srv
+
+
+def _canon_rows(res):
+    """Canonical byte-comparable form of a MatchResult: rows projected
+    into sorted-column order, then lexicographically sorted."""
+    order = np.argsort(res.cols)
+    rows = np.asarray(res.rows)[:, order]
+    if rows.shape[0] > 1:
+        rows = rows[np.lexsort(rows.T[::-1])]
+    return rows
+
+
+# --------------------------- happy path -------------------------------- #
+def test_roundtrip_restores_warm_path_byte_identical(graph, pool, oracle,
+                                                     tmp_path, monkeypatch):
+    """The tentpole proof: a restored server's FIRST execution per
+    cached template runs the warm path — prepare / plan / decide /
+    check are monkeypatch-poisoned and never re-entered — and the
+    results are byte-identical to the pre-crash server's and to the
+    fault-free oracle."""
+    srv = _warm_server(graph, pool)
+    before = [srv.query(q) for q in pool]
+    path = tmp_path / "serve.snap"
+    manifest = srv.save_snapshot(path)
+    assert manifest["plans"] == len(pool)
+    assert manifest["format_version"] == FORMAT_VERSION
+
+    srv2 = _server(graph)                # the "restarted process"
+    srv2.restore_snapshot(path)
+
+    def _boom(*a, **k):
+        raise AssertionError("cold path re-entered after restore")
+    for fn in ("plan_table_joins", "plan_connections", "decide",
+               "check_interval_candidates", "connection_selectivity",
+               "endpoint_reach", "choose_connection_impl"):
+        monkeypatch.setattr(engine_mod, fn, _boom)
+    monkeypatch.setattr(srv2.engine, "prepare", _boom)
+
+    for q, res_before, want in zip(pool, before, oracle):
+        res = srv2.query(q)
+        assert res.stats.cache_hit       # first post-restore run is WARM
+        assert res.stats.join_retries == 0
+        assert res.result_set() == want
+        assert res.cols == res_before.cols
+        assert np.array_equal(_canon_rows(res), _canon_rows(res_before))
+    t = srv2.telemetry()
+    assert t["plan_cache"]["misses"] == 0
+    assert t["governor"]["snapshot"]["action"] == "restored"
+
+
+def test_roundtrip_with_signature_masks(graph, tmp_path, monkeypatch):
+    """check_policy='always' plans carry real [N] bool candidate masks;
+    they must round-trip in host form and be rebuilt on-device without
+    re-running the check."""
+    cfg = EngineConfig(check_policy="always", d_check=2, impl="ref")
+    q = random_query(graph, size=4, seed=64, n_connection=0)
+    srv = QueryServer(graph, cfg=cfg, governor=GovernorConfig())
+    want = srv.query(q).result_set()
+    srv.query(q)                         # warm: masks cached on the plan
+    path = tmp_path / "masks.snap"
+    srv.save_snapshot(path)
+
+    srv2 = QueryServer(graph, cfg=cfg, governor=GovernorConfig())
+    srv2.restore_snapshot(path)
+    calls = []
+    monkeypatch.setattr(
+        engine_mod, "check_interval_candidates",
+        lambda *a, **k: calls.append(1) or (_ for _ in ()).throw(
+            AssertionError("signature check re-entered after restore")))
+    res = srv2.query(q)
+    assert res.stats.cache_hit and not calls
+    assert res.result_set() == want
+    assert res.stats.used_check          # stats still attribute the check
+
+
+def test_restore_preserves_learned_state(graph, pool, tmp_path):
+    """Calibrator scales/τ, governor rung memory, breaker entries, and
+    plan-cache join_seq survive the round trip (clocks rebased)."""
+    srv = _warm_server(graph, pool)
+    # plant distinctive learned state
+    srv.calibrator.cost_model.join_est_scale = 0.37
+    srv.calibrator.thresholds.tau_sel = 2.5
+    srv.calibrator.version += 3
+    gov = srv.governor
+    gov.breaker.record("bad-fp", ok=False, now=0.0)
+    gov.breaker.record("bad-fp", ok=False, now=0.0)
+    gov.rung_memory.record_degraded("deg-fp", "greedy_plan", now=0.0)
+    path = tmp_path / "state.snap"
+    srv.save_snapshot(path)
+
+    srv2 = _server(graph)
+    srv2.restore_snapshot(path)
+    assert srv2.calibrator.cost_model.join_est_scale == 0.37
+    assert srv2.calibrator.thresholds.tau_sel == 2.5
+    assert srv2.calibrator.version == srv.calibrator.version
+    assert srv2.governor.rung_memory.rung("deg-fp") == "greedy_plan"
+    assert srv2.governor.breaker._st["bad-fp"]["failures"] == 2
+    # restored plans carry the learned join_seq (not re-learned)
+    fp = template_fingerprint(pool[0])
+    pq = srv2.plan_cache.get(srv2.dataset_id, fp)
+    assert pq is not None and pq.warm and pq.join_seq
+    # the plan keeps its prepare-time version: the restored calibrator
+    # moved past it (we bumped it above), so the first use revalidates
+    # through Engine.revalidate instead of trusting a stale decision
+    assert pq.version == 0 != srv2._version()
+
+
+# ------------------------- typed failure modes ------------------------- #
+def _assert_cold_start_still_exact(graph, pool, oracle, srv):
+    assert len(srv.plan_cache) == 0      # untouched: clean cold start
+    for q, want in zip(pool, oracle):
+        assert srv.query(q).result_set() == want
+
+
+def test_missing_snapshot_raises_io(graph, pool, oracle, tmp_path):
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(tmp_path / "nope.snap")
+    assert ei.value.reason == "io"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+
+
+def test_truncated_snapshot_raises(graph, pool, oracle, tmp_path):
+    path = tmp_path / "trunc.snap"
+    _warm_server(graph, pool).save_snapshot(path)
+    raw = path.read_bytes()
+    path.write_bytes(raw[:20])           # shorter than the header
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path)
+    assert ei.value.reason == "truncated"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+
+
+def test_bad_magic_raises(graph, pool, oracle, tmp_path):
+    path = tmp_path / "magic.snap"
+    _warm_server(graph, pool).save_snapshot(path)
+    raw = path.read_bytes()
+    path.write_bytes(b"NOTASNAP" + raw[len(MAGIC):])
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path)
+    assert ei.value.reason == "magic"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+
+
+def test_format_version_mismatch_raises(graph, pool, oracle, tmp_path):
+    path = tmp_path / "ver.snap"
+    _warm_server(graph, pool).save_snapshot(path)
+    raw = bytearray(path.read_bytes())
+    raw[len(MAGIC):len(MAGIC) + 4] = struct.pack("<I", FORMAT_VERSION + 1)
+    path.write_bytes(bytes(raw))
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path)
+    assert ei.value.reason == "format_version"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+
+
+def test_corrupt_payload_raises_checksum(graph, pool, oracle, tmp_path):
+    path = tmp_path / "corrupt.snap"
+    _warm_server(graph, pool).save_snapshot(path)
+    raw = bytearray(path.read_bytes())
+    raw[-10] ^= 0xFF                     # flip one payload byte
+    path.write_bytes(bytes(raw))
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path)
+    assert ei.value.reason == "checksum"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+
+
+def test_garbage_with_valid_checksum_raises_undecodable(graph, pool,
+                                                        oracle, tmp_path):
+    """A checksum-valid file whose payload isn't a pickle: the checksum
+    rail can't catch it, the decode rail must."""
+    import hashlib
+    payload = b"\x80\x04 this is not a valid pickle stream"
+    head = MAGIC + struct.pack("<I", FORMAT_VERSION) \
+        + hashlib.sha256(payload).digest()
+    path = tmp_path / "garbage.snap"
+    path.write_bytes(head + payload)
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path)
+    assert ei.value.reason == "undecodable"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+
+
+def test_wrong_dataset_raises(graph, pool, oracle, tmp_path):
+    """A snapshot from a different graph must never replay its masks or
+    join sizes here — dataset_key is a content digest, so a lookalike
+    graph with equal node/edge counts is still rejected."""
+    other = random_graph(n_nodes=80, n_edges=220, n_preds=3,
+                         n_literals=20, seed=99)
+    path = tmp_path / "other.snap"
+    srv_other = _server(other)
+    srv_other.query(random_query(other, size=3, seed=61))
+    srv_other.save_snapshot(path)
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path)
+    assert ei.value.reason == "dataset"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+
+
+def test_stale_snapshot_raises(graph, pool, oracle, tmp_path):
+    path = tmp_path / "stale.snap"
+    _warm_server(graph, pool).save_snapshot(path)
+    time.sleep(0.05)
+    srv = _server(graph)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path, max_age_s=0.01)
+    assert ei.value.reason == "stale"
+    _assert_cold_start_still_exact(graph, pool, oracle, srv)
+    # the same file within its age budget restores fine
+    srv2 = _server(graph)
+    srv2.restore_snapshot(path, max_age_s=3600.0)
+    assert len(srv2.plan_cache) == len(pool)
+
+
+def test_save_is_atomic_no_tmp_left_behind(graph, pool, tmp_path):
+    srv = _warm_server(graph, pool)
+    path = tmp_path / "atomic.snap"
+    srv.save_snapshot(path)
+    srv.save_snapshot(path)              # overwrite in place
+    assert sorted(os.listdir(tmp_path)) == ["atomic.snap"]
