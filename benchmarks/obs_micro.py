@@ -1,0 +1,166 @@
+"""Observability overhead micro-benchmark -> BENCH_obs.json.
+
+Tracing must be ~free when off and cheap when on:
+
+  * null_span — ns per disabled span enter/exit (the NULL_TRACER fast
+    path every engine join pays when no tracer is installed) vs. a live
+    span on an enabled tracer;
+  * serve_overhead — the same warm zipfian template stream through two
+    QueryServers, tracer off vs. on, reporting the median-latency
+    overhead of full tracing (submit/prepare/execute segments, governor
+    spans, per-join engine spans) plus a second tracer-off run as the
+    noise floor.  Result sets are asserted identical — tracing must
+    never change semantics;
+  * chrome_export — the enabled run's trace buffer exported to the
+    Chrome trace event format and structurally validated (one thread
+    lane per query, every complete event carrying its trace id).
+
+Smoke mode (REPRO_BENCH_OBS_SMOKE=1, used by CI) shrinks the dataset
+and stream so the module runs in seconds.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.data import DATASETS, random_query
+from repro.obs import Tracer
+from repro.serve import QueryServer
+
+SMOKE = os.environ.get("REPRO_BENCH_OBS_SMOKE", "") not in ("", "0")
+SCALE = 0.03 if SMOKE else float(os.environ.get("REPRO_BENCH_SCALE", "0.08"))
+N_TEMPLATES = 4 if SMOKE else 6
+N_STREAM = 24 if SMOKE else 80
+N_NULL = 50_000 if SMOKE else 200_000
+
+
+def _workload(seed: int = 1):
+    g = DATASETS["dblp"](scale=SCALE, seed=seed)
+    pool = [random_query(g, size=5, seed=100 + i, n_connection=i % 2, d_c=3)
+            for i in range(N_TEMPLATES)]
+    rng = np.random.default_rng(0)
+    ranks = np.minimum(rng.zipf(1.3, N_STREAM), len(pool)) - 1
+    return g, pool, [pool[r] for r in ranks]
+
+
+# ----------------------------- null spans ------------------------------ #
+def _span_cost(tracer, open_segment: bool) -> float:
+    """ns per span enter/exit.  With `open_segment` the span is live
+    (appended, clocked, popped); otherwise it is the shared NULL_SPAN."""
+    tid = tracer.start() if open_segment else None
+    seg = tracer.segment("bench", tid) if open_segment else None
+    n = N_NULL
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tracer.span("x") as sp:
+            if sp.live:
+                sp.set(rows=1)
+    wall = time.perf_counter() - t0
+    if seg is not None:
+        seg.__exit__(None, None, None)
+        tracer.finish(tid)
+    return wall / n * 1e9
+
+
+def _null_span():
+    from repro.obs import NULL_TRACER
+    off_ns = _span_cost(NULL_TRACER, open_segment=False)
+    # live spans under a capacious trace (the span cap would null them)
+    on_ns = _span_cost(Tracer(max_spans_per_trace=N_NULL + 4),
+                       open_segment=True)
+    return {"disabled_ns_per_span": off_ns,
+            "enabled_ns_per_span": on_ns}
+
+
+# --------------------------- serving overhead -------------------------- #
+def _serve(g, pool, stream, tracer):
+    srv = QueryServer(g, calibrate=False, tracer=tracer)
+    for q in pool:                       # warm plans + jit shapes first
+        srv.query(q)
+    lats, sets = [], []
+    for s in range(0, len(stream), 8):
+        for f in srv.submit_many(stream[s:s + 8], wait=True):
+            sets.append(f.result().result_set())
+            lats.append(f.latency)
+    return float(np.median(lats)), sets, srv
+
+
+def _serve_overhead(g, pool, stream):
+    cap = Tracer(max_traces=len(stream) + len(pool) + 4)
+    off1, sets_off, _ = _serve(g, pool, stream, None)
+    on, sets_on, srv_on = _serve(g, pool, stream, cap)
+    off2, sets_off2, _ = _serve(g, pool, stream, None)
+    identical = sets_off == sets_on == sets_off2
+    base = min(off1, off2)
+    noise_pct = abs(off1 - off2) / base * 100.0
+    overhead_pct = (on - base) / base * 100.0
+    return {
+        "off_median_ms": off1 * 1e3,
+        "off_rerun_median_ms": off2 * 1e3,
+        "on_median_ms": on * 1e3,
+        "noise_floor_pct": noise_pct,
+        "overhead_pct": overhead_pct,
+        "overhead_within_5pct": overhead_pct <= max(5.0, noise_pct),
+        "identical_result_sets": identical,
+    }, srv_on
+
+
+# ---------------------------- chrome export ---------------------------- #
+def _chrome_export(srv, n_queries: int):
+    path = os.environ.get("REPRO_BENCH_OBS_TRACE", "BENCH_obs_trace.json")
+    info = srv.tracer.export_chrome(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert sorted(doc) == ["displayTimeUnit", "traceEvents"]
+    by_tid: dict = {}
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "X":
+            assert sorted(ev) == ["args", "dur", "name", "ph", "pid",
+                                  "tid", "ts"]
+            by_tid.setdefault(ev["tid"], set()).add(ev["args"]["trace_id"])
+    assert all(len(ids) == 1 for ids in by_tid.values()), \
+        "a thread lane mixed trace ids"
+    assert info["traces"] >= n_queries, \
+        f"expected >= {n_queries} traces, exported {info['traces']}"
+    return {"path": info["path"], "traces": info["traces"],
+            "events": info["events"], "valid": True}
+
+
+# ---------------------------------------------------------------------- #
+def run():
+    g, pool, stream = _workload()
+    results = {"scale": SCALE, "n_templates": N_TEMPLATES,
+               "n_stream": N_STREAM, "smoke": SMOKE}
+
+    results["null_span"] = _null_span()
+    ns = results["null_span"]
+    yield ("obs.null_span", ns["disabled_ns_per_span"] / 1e3,
+           f"disabled={ns['disabled_ns_per_span']:.0f}ns "
+           f"enabled={ns['enabled_ns_per_span']:.0f}ns")
+
+    results["serve_overhead"], srv_on = _serve_overhead(g, pool, stream)
+    so = results["serve_overhead"]
+    assert so["identical_result_sets"], "tracing changed result sets"
+    yield ("obs.serve_traced", so["on_median_ms"] * 1e3,
+           f"overhead={so['overhead_pct']:.1f}% "
+           f"noise={so['noise_floor_pct']:.1f}% "
+           f"identical={so['identical_result_sets']}")
+
+    results["chrome_export"] = _chrome_export(srv_on,
+                                              len(stream) + len(pool))
+    ce = results["chrome_export"]
+    yield ("obs.chrome_export", float(ce["events"]),
+           f"traces={ce['traces']} events={ce['events']} "
+           f"valid={ce['valid']}")
+
+    out_path = os.environ.get("REPRO_BENCH_OBS_JSON", "BENCH_obs.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

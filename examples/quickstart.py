@@ -64,6 +64,16 @@ def main():
           " add --snapshot PATH there to save the learned state and"
           " warm-restart a fresh server from it)")
 
+    print("== 6. observability: EXPLAIN the plan the server learned ==")
+    # srv.explain(q) renders the §4.3 check decision with its τ terms,
+    # the Selinger join order, and the learned join sequence; pass
+    # tracer=repro.obs.Tracer() to QueryServer (or --trace PATH to
+    # serve_queries.py) for per-query Chrome traces of every pruning
+    # decision and join.
+    print("\n".join("   " + line
+                    for line in srv.explain(q).splitlines()[:6]))
+    print("   ... (srv.explain(q) for the full report)")
+
 
 if __name__ == "__main__":
     main()

@@ -21,6 +21,16 @@ query per template — every one should hit the plan cache warm:
 
     PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_queries.py \\
         --governed --snapshot /tmp/serve.snap
+
+Observability: ``--trace PATH`` records every query (one trace id from
+submit through batching, governor routing, and each engine join) and
+exports a Chrome trace viewable in chrome://tracing or ui.perfetto.dev;
+``--explain`` prints each template's EXPLAIN report — the §4.3 check
+decision with its τ terms, the Selinger join order, and the learned
+join sequence with estimated-vs-observed rows:
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python examples/serve_queries.py \\
+        --governed --chaos --trace /tmp/serve_trace.json --explain
 """
 import argparse
 import json
@@ -62,6 +72,14 @@ def main():
                     help="after the stream, save learned state to PATH, "
                          "restore it into a fresh server, and replay one "
                          "query per template on the warm path")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="trace every query and export a Chrome trace "
+                         "(chrome://tracing / Perfetto) to PATH after "
+                         "the stream")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the EXPLAIN report (check decision, "
+                         "join order, learned join sizes) for each "
+                         "template after the stream")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     governed = (args.governed or args.chaos or args.deadline_ms is not None
@@ -96,6 +114,9 @@ def main():
             check_policy="selective", d_check=2, impl="ref",
             thresholds=Thresholds(nested_join_max=1),
             join_impl="sorted", connection_impl="reach")
+    if args.trace is not None:
+        from repro.obs import Tracer
+        srv_kw["tracer"] = Tracer(max_traces=args.queries + 16)
     srv = QueryServer(g, batching=not args.no_batch,
                       calibrate=not args.no_calibrate, **srv_kw)
     print(f"== serve {args.queries} queries "
@@ -152,6 +173,18 @@ def main():
         print(f"   breaker: trips={br['trips']} denials={br['denials']} "
               f"probes={br['probes']} recoveries={br['recoveries']} "
               f"open={br['open']}")
+
+    if args.trace is not None:
+        info = srv.tracer.export_chrome(args.trace)
+        print(f"== trace: {info['traces']} traces, {info['events']} "
+              f"events -> {info['path']} (open in chrome://tracing or "
+              "ui.perfetto.dev) ==")
+
+    if args.explain:
+        print("== EXPLAIN per template ==")
+        for i, q in enumerate(pool):
+            print(f"-- template {i} --")
+            print(srv.explain(q))
 
     if args.snapshot is not None:
         import time

@@ -44,6 +44,7 @@ from .graph import RDFGraph
 from .ni_index import NIIndex
 from .matching import (Table, DEFAULT_NESTED_MAX, join_tables, planned_join,
                        dedup_project, empty_table, filter_rows, _pow2)
+from ..obs.trace import NULL_TRACER
 from ..kernels import ops
 
 
@@ -443,7 +444,7 @@ def connected_pair_table(graph: RDFGraph, ni: NIIndex,
                          cache: ReachCache | None = None,
                          telemetry=None,
                          info: ReachJoinInfo | None = None,
-                         fuse: bool = True) -> Table:
+                         fuse: bool = True, tracer=None) -> Table:
     """Distinct (a, b) node pairs with a directed path a->b of length
     <= d_c (plus b->a when bidirectional), as a 2-column table over
     `cols` = (src_col, dst_col), sorted by it.
@@ -451,24 +452,31 @@ def connected_pair_table(graph: RDFGraph, ni: NIIndex,
     This is Alg. 3 evaluated set-at-a-time: one sort-merge join on the
     shared reach id replaces the per-pair set intersections."""
     info = info if info is not None else ReachJoinInfo()
-    src_col, dst_col = cols
-    h_fwd, h_bwd = hop_split(d_c)
-    cp = _directed_pairs(graph, ni, a_vals, b_vals, h_fwd, h_bwd,
-                         src_col, dst_col, cap, impl, probe_impl,
-                         nested_max, cache, telemetry, info, fuse)
-    if bidirectional:
-        rev = _directed_pairs(graph, ni, b_vals, a_vals, h_fwd, h_bwd,
-                              dst_col, src_col, cap, impl, probe_impl,
-                              nested_max, cache, telemetry, info, fuse)
-        # union: concat the padded buffers (valid rows need not form a
-        # prefix — dedup_project tolerates that) and re-dedup
-        perm = np.asarray([rev.cols.index(c) for c in cp.cols])
-        both = Table(cols=cp.cols,
-                     rows=jnp.concatenate([cp.rows, rev.rows[:, perm]]),
-                     count=cp.count + rev.count)
-        cp = dedup_project(both, cp.cols)
-        info.peak_cap = max(info.peak_cap, cp.cap)
-    info.connected_pairs = cp.count
+    if tracer is None:
+        tracer = NULL_TRACER
+    with tracer.span("reach_pairs") as sp:
+        src_col, dst_col = cols
+        h_fwd, h_bwd = hop_split(d_c)
+        cp = _directed_pairs(graph, ni, a_vals, b_vals, h_fwd, h_bwd,
+                             src_col, dst_col, cap, impl, probe_impl,
+                             nested_max, cache, telemetry, info, fuse)
+        if bidirectional:
+            rev = _directed_pairs(graph, ni, b_vals, a_vals, h_fwd, h_bwd,
+                                  dst_col, src_col, cap, impl, probe_impl,
+                                  nested_max, cache, telemetry, info, fuse)
+            # union: concat the padded buffers (valid rows need not form a
+            # prefix — dedup_project tolerates that) and re-dedup
+            perm = np.asarray([rev.cols.index(c) for c in cp.cols])
+            both = Table(cols=cp.cols,
+                         rows=jnp.concatenate([cp.rows, rev.rows[:, perm]]),
+                         count=cp.count + rev.count)
+            cp = dedup_project(both, cp.cols)
+            info.peak_cap = max(info.peak_cap, cp.cap)
+        info.connected_pairs = cp.count
+        if sp.live:
+            sp.set(reach_pairs=info.reach_pairs,
+                   connected_pairs=info.connected_pairs,
+                   distinct_a=len(a_vals), distinct_b=len(b_vals))
     return cp
 
 
@@ -482,7 +490,7 @@ def reach_join(graph: RDFGraph, ni: NIIndex, ta: Table, tb: Table,
                probe_impl: str = "auto", cache: ReachCache | None = None,
                telemetry=None, record=None,
                info: ReachJoinInfo | None = None,
-               fuse: bool = True) -> Table:
+               fuse: bool = True, tracer=None) -> Table:
     """Join tables `ta` and `tb` on the connection constraint
     dist(ta.src_col -> tb.dst_col) <= d_c, WITHOUT materializing the
     cross product: equivalent to
@@ -502,16 +510,18 @@ def reach_join(graph: RDFGraph, ni: NIIndex, ta: Table, tb: Table,
                               (src_col, dst_col), cap=cap, impl=impl,
                               probe_impl=probe_impl, nested_max=nested_max,
                               cache=cache, telemetry=telemetry, info=info,
-                              fuse=fuse)
+                              fuse=fuse, tracer=tracer)
     # A |x| pairs on src_col, then |x| B on dst_col: both sized exactly
     # (no estimate: counts are known after each probe, so planned_join
     # allocates the exact pow2 capacity).
     t1 = planned_join(ta, cp, None, row_limit=row_limit, impl=impl,
                       nested_max=nested_max, probe_impl=probe_impl,
-                      record=record, telemetry=telemetry, fuse=fuse)
+                      record=record, telemetry=telemetry, fuse=fuse,
+                      tracer=tracer)
     out = planned_join(t1, tb, None, row_limit=row_limit, impl=impl,
                        nested_max=nested_max, probe_impl=probe_impl,
-                       record=record, telemetry=telemetry, fuse=fuse)
+                       record=record, telemetry=telemetry, fuse=fuse,
+                       tracer=tracer)
     out.truncated |= t1.truncated
     info.peak_cap = max(info.peak_cap, t1.cap, out.cap)
     return out
@@ -526,7 +536,7 @@ def reach_filter(graph: RDFGraph, ni: NIIndex, table: Table,
                  probe_impl: str = "auto", cache: ReachCache | None = None,
                  telemetry=None, record=None,
                  info: ReachJoinInfo | None = None,
-                 fuse: bool = True) -> Table:
+                 fuse: bool = True, tracer=None) -> Table:
     """Intra-table connection filter as a reach-SEMI-join: keep rows whose
     (src_col, dst_col) values appear in the connected-pair table.
     Equivalent to filter_rows(table, connectivity_mask(...)) without the
@@ -544,7 +554,7 @@ def reach_filter(graph: RDFGraph, ni: NIIndex, table: Table,
                               (src_col, dst_col), cap=cap, impl=impl,
                               probe_impl=probe_impl, nested_max=nested_max,
                               cache=cache, telemetry=telemetry, info=info,
-                              fuse=fuse)
+                              fuse=fuse, tracer=tracer)
     if cp.count == 0:
         return filter_rows(table, np.zeros(table.count, bool), kept=0)
     # shared cols = both endpoint cols, no new cols: the equi-join IS the
@@ -552,7 +562,7 @@ def reach_filter(graph: RDFGraph, ni: NIIndex, table: Table,
     # one pair).
     out = planned_join(table, cp, None, impl=impl, nested_max=nested_max,
                        probe_impl=probe_impl, record=record,
-                       telemetry=telemetry, fuse=fuse)
+                       telemetry=telemetry, fuse=fuse, tracer=tracer)
     info.peak_cap = max(info.peak_cap, out.cap)
     return out
 

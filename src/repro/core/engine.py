@@ -58,6 +58,7 @@ from .planner import (Thresholds, CostModel, PlanDecision, decide,
                       choose_connection_impl)
 from .stats import (DatasetStats, compute_stats, connection_selectivity,
                     endpoint_reach)
+from ..obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -247,6 +248,10 @@ class PreparedQuery:
     # depends on sort-run state that only exists mid-execution — stable
     # across warm runs (join_strategies round-trips exactly).
     join_seq: list[tuple[int, int, str]] = field(default_factory=list)
+    # planner estimate per join_seq entry (None for unestimated joins),
+    # recorded cold alongside join_seq — EXPLAIN renders estimated vs.
+    # observed cardinality per join from the two in lockstep
+    join_est_seq: list[int | None] = field(default_factory=list)
 
     @property
     def warm(self) -> bool:
@@ -268,6 +273,9 @@ class Engine:
         # dataset is immutable, so reach sets never go stale); when None
         # each execution gets its own per-query cache as before
         self.reach_cache: ReachCache | None = None
+        # observability: the serving layer installs its Tracer here; the
+        # default no-op tracer keeps bare-engine hot paths at ~zero cost
+        self.tracer = NULL_TRACER
 
     # -------------------------------------------------------------- #
     def prepare(self, query: QueryTemplate,
@@ -318,7 +326,8 @@ class Engine:
         eng._dev_cache = self._dev_cache
         eng._bloom = self._bloom
         eng.reach_cache = None
-        return eng
+        eng.tracer = self.tracer    # degraded-rung spans land in the
+        return eng                  # same trace as the primary attempt
 
     def revalidate(self, pq: PreparedQuery, version: int) -> bool:
         """Refresh a PreparedQuery after the calibrated thresholds moved.
@@ -345,6 +354,7 @@ class Engine:
                 pq.conn_costs = (0.0, 0.0)
                 pq.conn_impls = None
                 pq.join_seq = []
+                pq.join_est_seq = []
                 pq.executions = 0
                 kept = False
             pq.decision = decision
@@ -447,7 +457,13 @@ class Engine:
 
         # ---- candidate masks ------------------------------------------
         t1 = time.perf_counter()
-        pass_masks, pass_np, after = self._candidate_masks(pq)
+        tracer = self.tracer
+        with tracer.span("check") as sp:
+            pass_masks, pass_np, after = self._candidate_masks(pq)
+            if sp.live:
+                sp.set(used_check=pq.use_check,
+                       before=qs.candidates_before, after=after,
+                       warm=pq.warm)
         qs.candidates_after = after
         qs.check_time = time.perf_counter() - t1
         # deadline-only checkpoint: candidate counts are not join rows,
@@ -464,6 +480,7 @@ class Engine:
         warm_replay = pq.warm and bool(pq.join_seq)
         if not warm_replay:
             pq.join_seq = []
+            pq.join_est_seq = []
         estimator = (ReplayEstimator(base_est, pq.join_seq)
                      if warm_replay else base_est)
         qs.plan_mode = cfg.plan_mode
@@ -481,6 +498,7 @@ class Engine:
                 qs.join_est_log_bias += err
                 if not warm_replay:
                     pq.join_seq.append((int(actual), int(cap), str(impl)))
+                    pq.join_est_seq.append(int(est))
             # every estimator-sized join is a budget boundary: actual
             # output rows charge max_rows, the executed capacity is
             # checked against max_capacity, and the deadline is re-read
@@ -490,67 +508,79 @@ class Engine:
         phase[0] = "match"
         for ci, (comp, trees) in enumerate(zip(pq.comps,
                                                pq.trees_per_comp)):
-            if not query.component_edges(comp):
-                # isolated node(s)
-                tab = None
-                for q in comp:
-                    t = single_node_table(q, int(iv[q, 0]), int(iv[q, 1]),
-                                          pass_np[q])
-                    tab = t if tab is None else injective_filter(
-                        self._retry(cross_join, tab, t))
-                comp_tables.append(tab)
-                continue
-            cand_tables = []
-            for tr in trees:
-                tab = dtree_candidates(
-                    self.graph, tr, pass_masks,
-                    row_limit=self.cfg.max_rows,
-                    join_impl=self.cfg.join_impl,
-                    nested_max=self.cfg.thresholds.nested_join_max,
-                    probe_impl=self._probe_impl(),
-                    estimator=estimator.edge_join, record=record_join,
-                    telemetry=tel, fuse=self.cfg.fuse_joins)
-                qs.truncated |= tab.truncated
-                qs.dtree_work += tab.count
-                cand_tables.append(injective_filter(tab))
-            counts = [t.count for t in cand_tables]
-            if cfg.plan_mode == "cost" and len(cand_tables) > 1:
-                if ci in pq.comp_orders:
-                    order = pq.comp_orders[ci]
-                    pc, gc = pq.comp_costs[ci]
+            with tracer.span("component", index=ci) as csp:
+                if not query.component_edges(comp):
+                    # isolated node(s)
+                    tab = None
+                    for q in comp:
+                        t = single_node_table(q, int(iv[q, 0]),
+                                              int(iv[q, 1]), pass_np[q])
+                        tab = t if tab is None else injective_filter(
+                            self._retry(cross_join, tab, t))
+                    comp_tables.append(tab)
+                    continue
+                cand_tables = []
+                for tr in trees:
+                    tab = dtree_candidates(
+                        self.graph, tr, pass_masks,
+                        row_limit=self.cfg.max_rows,
+                        join_impl=self.cfg.join_impl,
+                        nested_max=self.cfg.thresholds.nested_join_max,
+                        probe_impl=self._probe_impl(),
+                        estimator=estimator.edge_join, record=record_join,
+                        telemetry=tel, fuse=self.cfg.fuse_joins,
+                        tracer=tracer)
+                    qs.truncated |= tab.truncated
+                    qs.dtree_work += tab.count
+                    cand_tables.append(injective_filter(tab))
+                counts = [t.count for t in cand_tables]
+                if cfg.plan_mode == "cost" and len(cand_tables) > 1:
+                    if ci in pq.comp_orders:
+                        order = pq.comp_orders[ci]
+                        pc, gc = pq.comp_costs[ci]
+                    else:
+                        greedy = join_order(trees, counts)
+                        plan = plan_table_joins(
+                            [set(tr.nodes) for tr in trees], counts,
+                            base_est,
+                            cfg.thresholds.nested_join_max,
+                            sort_orders=[t.sort_order
+                                         for t in cand_tables],
+                            greedy_order=greedy)
+                        order = plan.order
+                        pc, gc = plan.est_cost, plan.greedy_cost
+                        pq.comp_orders[ci] = order
+                        pq.comp_costs[ci] = (pc, gc)
+                    qs.plan_cost += pc
+                    qs.greedy_plan_cost += gc
                 else:
-                    greedy = join_order(trees, counts)
-                    plan = plan_table_joins(
-                        [set(tr.nodes) for tr in trees], counts, base_est,
-                        cfg.thresholds.nested_join_max,
-                        sort_orders=[t.sort_order for t in cand_tables],
-                        greedy_order=greedy)
-                    order = plan.order
-                    pc, gc = plan.est_cost, plan.greedy_cost
-                    pq.comp_orders[ci] = order
-                    pq.comp_costs[ci] = (pc, gc)
-                qs.plan_cost += pc
-                qs.greedy_plan_cost += gc
-            else:
-                order = join_order(trees, counts)
-            tab = cand_tables[order[0]]
-            for i in order[1:]:
-                qs.join_work += max(tab.count, 1) * max(cand_tables[i].count, 1)
-                tab = injective_filter(self._join(
-                    tab, cand_tables[i], estimator,
-                    row_limit=self.cfg.max_rows, record=record_join,
-                    telemetry=tel))
-                qs.truncated |= tab.truncated
-            comp_tables.append(tab)
-            checkpoint(cap=tab.cap)
+                    order = join_order(trees, counts)
+                tab = cand_tables[order[0]]
+                for i in order[1:]:
+                    qs.join_work += (max(tab.count, 1)
+                                     * max(cand_tables[i].count, 1))
+                    tab = injective_filter(self._join(
+                        tab, cand_tables[i], estimator,
+                        row_limit=self.cfg.max_rows, record=record_join,
+                        telemetry=tel))
+                    qs.truncated |= tab.truncated
+                if csp.live:
+                    csp.set(rows=tab.count, trees=len(trees))
+                comp_tables.append(tab)
+                checkpoint(cap=tab.cap)
         qs.match_time = time.perf_counter() - t2
 
         # ---- connection edges ------------------------------------------
         t3 = time.perf_counter()
         phase[0] = "connections"
-        final = self._process_connections(query, pq.comps, comp_tables, qs,
-                                          record_join, tel, pq=pq,
-                                          checkpoint=checkpoint)
+        with tracer.span("connections",
+                         edges=len(query.connections)) as sp:
+            final = self._process_connections(query, pq.comps,
+                                              comp_tables, qs,
+                                              record_join, tel, pq=pq,
+                                              checkpoint=checkpoint)
+            if sp.live:
+                sp.set(rows=final.count)
         qs.conn_time = time.perf_counter() - t3
         qs.sorts_performed = tel.sorts_performed
         qs.sorts_avoided = tel.sorts_avoided
@@ -581,7 +611,8 @@ class Engine:
                             impl=self.cfg.join_impl,
                             nested_max=self.cfg.thresholds.nested_join_max,
                             probe_impl=self._probe_impl(), record=record,
-                            telemetry=telemetry, fuse=self.cfg.fuse_joins)
+                            telemetry=telemetry, fuse=self.cfg.fuse_joins,
+                            tracer=self.tracer)
 
     def _retry(self, fn, *args, **kw):
         cap = None
@@ -714,39 +745,50 @@ class Engine:
                                           c.bidirectional,
                                           a_nodes=a_vals, b_nodes=b_vals)
 
+        tracer = self.tracer
+
         def intra_filter(gi: int, c) -> None:
             # no early-out on an empty table: both impls handle it, and
             # conn_strategies must count every connection edge processed
-            tab = tables[gi]
-            a_vals = distinct_of(gi, c.src)
-            b_vals = distinct_of(gi, c.dst)
-            info = ReachJoinInfo(rows_a=tab.count, rows_b=tab.count,
-                                 distinct_a=len(a_vals),
-                                 distinct_b=len(b_vals))
-            impl, sel, feat = edge_choice(tab.count, tab.count,
-                                          a_vals, b_vals, c, intra=True)
-            if impl == "reach":
-                tables[gi] = reach_filter(
-                    self.graph, self.ni, tab, c.src, c.dst, c.max_dist,
-                    c.bidirectional, a_vals=a_vals, b_vals=b_vals,
-                    impl=self.cfg.join_impl,
-                    nested_max=self.cfg.thresholds.nested_join_max,
-                    probe_impl=self._probe_impl(), cache=rcache,
-                    telemetry=tel, record=record_join, info=info,
-                    fuse=self.cfg.fuse_joins)
-            else:
-                rows = np.asarray(tab.rows[: tab.count])
-                a = rows[:, tab.cols.index(c.src)]
-                b = rows[:, tab.cols.index(c.dst)]
-                keep = connectivity_mask(self.graph, self.ni, a, b,
-                                         c.max_dist, c.bidirectional,
-                                         impl=self.cfg.impl, cache=rcache)
-                tables[gi] = filter_rows(tab, keep)
-            invalidate(gi)
-            record_conn(impl, info, sel, feat)
-            # connection-edge boundary: deadline + capacity re-check
-            # (rows=0 — a filter materializes no new join rows)
-            ck(cap=tables[gi].cap)
+            with tracer.span("conn_edge", kind="intra") as sp:
+                tab = tables[gi]
+                a_vals = distinct_of(gi, c.src)
+                b_vals = distinct_of(gi, c.dst)
+                info = ReachJoinInfo(rows_a=tab.count, rows_b=tab.count,
+                                     distinct_a=len(a_vals),
+                                     distinct_b=len(b_vals))
+                impl, sel, feat = edge_choice(tab.count, tab.count,
+                                              a_vals, b_vals, c,
+                                              intra=True)
+                if impl == "reach":
+                    tables[gi] = reach_filter(
+                        self.graph, self.ni, tab, c.src, c.dst,
+                        c.max_dist,
+                        c.bidirectional, a_vals=a_vals, b_vals=b_vals,
+                        impl=self.cfg.join_impl,
+                        nested_max=self.cfg.thresholds.nested_join_max,
+                        probe_impl=self._probe_impl(), cache=rcache,
+                        telemetry=tel, record=record_join, info=info,
+                        fuse=self.cfg.fuse_joins, tracer=tracer)
+                else:
+                    rows = np.asarray(tab.rows[: tab.count])
+                    a = rows[:, tab.cols.index(c.src)]
+                    b = rows[:, tab.cols.index(c.dst)]
+                    keep = connectivity_mask(self.graph, self.ni, a, b,
+                                             c.max_dist, c.bidirectional,
+                                             impl=self.cfg.impl,
+                                             cache=rcache)
+                    tables[gi] = filter_rows(tab, keep)
+                invalidate(gi)
+                record_conn(impl, info, sel, feat)
+                if sp.live:
+                    sp.set(impl=impl, src=c.src, dst=c.dst,
+                           max_dist=c.max_dist, rows=tables[gi].count,
+                           reach_pairs=info.reach_pairs,
+                           connected_pairs=info.connected_pairs)
+                # connection-edge boundary: deadline + capacity re-check
+                # (rows=0 — a filter materializes no new join rows)
+                ck(cap=tables[gi].cap)
 
         def apply_connection(c) -> None:
             gi, gj = find(owner[c.src]), find(owner[c.dst])
@@ -754,47 +796,59 @@ class Engine:
                 # merged by an earlier join: now an intra filter
                 intra_filter(gi, c)
                 return
-            ta, tb = tables[gi], tables[gj]
-            a_vals = distinct_of(gi, c.src)
-            b_vals = distinct_of(gj, c.dst)
-            info = ReachJoinInfo(rows_a=ta.count, rows_b=tb.count,
-                                 distinct_a=len(a_vals),
-                                 distinct_b=len(b_vals))
-            impl, sel, feat = edge_choice(ta.count, tb.count,
-                                          a_vals, b_vals, c, intra=False)
-            if impl == "reach":
-                joined = injective_filter(reach_join(
-                    self.graph, self.ni, ta, tb, c.src, c.dst, c.max_dist,
-                    c.bidirectional, a_vals=a_vals, b_vals=b_vals,
-                    row_limit=self.cfg.max_rows, impl=self.cfg.join_impl,
-                    nested_max=self.cfg.thresholds.nested_join_max,
-                    probe_impl=self._probe_impl(), cache=rcache,
-                    telemetry=tel, record=record_join, info=info,
-                    fuse=self.cfg.fuse_joins))
-                qs.join_work += info.reach_pairs + joined.count
-                qs.truncated |= joined.truncated
-            else:
-                qs.join_work += max(ta.count, 1) * max(tb.count, 1)
-                joined = injective_filter(self._retry(
-                    cross_join, ta, tb, row_limit=self.cfg.max_rows))
-                qs.truncated |= joined.truncated
-                # the cross path bypasses record_join, so charge its
-                # materialized rows to the budget here
-                ck(rows=joined.count, cap=joined.cap)
-                if joined.count:
-                    rows = np.asarray(joined.rows[: joined.count])
-                    a = rows[:, joined.cols.index(c.src)]
-                    b = rows[:, joined.cols.index(c.dst)]
-                    keep = connectivity_mask(self.graph, self.ni, a, b,
-                                             c.max_dist, c.bidirectional,
-                                             impl=self.cfg.impl,
-                                             cache=rcache)
-                    joined = filter_rows(joined, keep)
-            invalidate(gi, gj)
-            record_conn(impl, info, sel, feat)
-            group[gj] = gi
-            tables[gi] = joined
-            ck(cap=joined.cap)
+            with tracer.span("conn_edge", kind="merge") as sp:
+                ta, tb = tables[gi], tables[gj]
+                a_vals = distinct_of(gi, c.src)
+                b_vals = distinct_of(gj, c.dst)
+                info = ReachJoinInfo(rows_a=ta.count, rows_b=tb.count,
+                                     distinct_a=len(a_vals),
+                                     distinct_b=len(b_vals))
+                impl, sel, feat = edge_choice(ta.count, tb.count,
+                                              a_vals, b_vals, c,
+                                              intra=False)
+                if impl == "reach":
+                    joined = injective_filter(reach_join(
+                        self.graph, self.ni, ta, tb, c.src, c.dst,
+                        c.max_dist,
+                        c.bidirectional, a_vals=a_vals, b_vals=b_vals,
+                        row_limit=self.cfg.max_rows,
+                        impl=self.cfg.join_impl,
+                        nested_max=self.cfg.thresholds.nested_join_max,
+                        probe_impl=self._probe_impl(), cache=rcache,
+                        telemetry=tel, record=record_join, info=info,
+                        fuse=self.cfg.fuse_joins, tracer=tracer))
+                    qs.join_work += info.reach_pairs + joined.count
+                    qs.truncated |= joined.truncated
+                else:
+                    qs.join_work += max(ta.count, 1) * max(tb.count, 1)
+                    joined = injective_filter(self._retry(
+                        cross_join, ta, tb, row_limit=self.cfg.max_rows))
+                    qs.truncated |= joined.truncated
+                    # the cross path bypasses record_join, so charge its
+                    # materialized rows to the budget here
+                    ck(rows=joined.count, cap=joined.cap)
+                    if joined.count:
+                        rows = np.asarray(joined.rows[: joined.count])
+                        a = rows[:, joined.cols.index(c.src)]
+                        b = rows[:, joined.cols.index(c.dst)]
+                        keep = connectivity_mask(self.graph, self.ni,
+                                                 a, b,
+                                                 c.max_dist,
+                                                 c.bidirectional,
+                                                 impl=self.cfg.impl,
+                                                 cache=rcache)
+                        joined = filter_rows(joined, keep)
+                invalidate(gi, gj)
+                record_conn(impl, info, sel, feat)
+                group[gj] = gi
+                tables[gi] = joined
+                if sp.live:
+                    sp.set(impl=impl, src=c.src, dst=c.dst,
+                           max_dist=c.max_dist, rows=joined.count,
+                           rows_a=info.rows_a, rows_b=info.rows_b,
+                           reach_pairs=info.reach_pairs,
+                           connected_pairs=info.connected_pairs)
+                ck(cap=joined.cap)
 
         intra = [c for c in query.connections
                  if find(owner[c.src]) == find(owner[c.dst])]

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from .graph import RDFGraph
 from .decompose import DTree
+from ..obs.trace import NULL_TRACER
 from ..kernels import ops as kops
 from ..kernels import fused_join as kfused
 from ..kernels import radix_join as krad
@@ -742,7 +743,7 @@ def planned_join(a: Table, b: Table, est: int | None,
                  probe_impl: str = "auto", record=None,
                  chunk: int = 4096, b_chunk: int = 1 << 16,
                  telemetry: JoinTelemetry | None = None,
-                 fuse: bool = True) -> Table:
+                 fuse: bool = True, tracer=None) -> Table:
     """Estimate-pre-sized join with a single exact-size overflow retry.
 
     The capacity hint from `est` is clamped by the worst-case output
@@ -778,13 +779,26 @@ def planned_join(a: Table, b: Table, est: int | None,
                 cap_hint = min(cap_hint, _pow2(row_limit))
     kw = dict(row_limit=row_limit, impl=impl, probe_impl=probe_impl,
               chunk=chunk, b_chunk=b_chunk, telemetry=telemetry, fuse=fuse)
-    retried = False
-    try:
-        out = join_tables(a, b, cap=cap_hint, **kw)
-    except CapacityOverflow as e:
-        retried = True
-        out = join_tables(a, b, cap=_pow2(e.needed),
-                          _resume=getattr(e, "resume", None), **kw)
+    if tracer is None:
+        tracer = NULL_TRACER
+    with tracer.span("join") as sp:
+        sp0 = sa0 = 0
+        if sp.live and telemetry is not None:
+            sp0, sa0 = telemetry.sorts_performed, telemetry.sorts_avoided
+        retried = False
+        try:
+            out = join_tables(a, b, cap=cap_hint, **kw)
+        except CapacityOverflow as e:
+            retried = True
+            out = join_tables(a, b, cap=_pow2(e.needed),
+                              _resume=getattr(e, "resume", None), **kw)
+        if sp.live:
+            sp.set(impl=impl, rows=out.count, cap=out.cap,
+                   retried=retried, a_rows=a.count, b_rows=b.count,
+                   est=None if est is None else int(est))
+            if telemetry is not None:
+                sp.set(sorts_performed=telemetry.sorts_performed - sp0,
+                       sorts_avoided=telemetry.sorts_avoided - sa0)
     if record is not None:
         record(impl, est, out.count, retried, out.cap)
     return out
@@ -865,36 +879,46 @@ def dtree_candidates(graph: RDFGraph, tree: DTree,
                      probe_impl: str = "auto",
                      estimator=None, record=None,
                      telemetry: JoinTelemetry | None = None,
-                     fuse: bool = True) -> Table:
+                     fuse: bool = True, tracer=None) -> Table:
     """Generate all candidate matches of one D-tree by sequential
     edge-parallel pair generation + joins on the root column.
 
     estimator(left_count, pred, outgoing, pair_count) -> estimated join
     rows (or None) pre-sizes each join's capacity so the overflow retry is
     rare; record(impl, est, actual, retried) feeds QueryStats."""
-    table: Table | None = None
-    truncated = False
-    for pred, child, outgoing in tree.edges:
-        if outgoing:
-            pairs = edge_pairs(graph, pred, pass_masks[tree.root],
-                               pass_masks[child], cols=(tree.root, child))
-        else:
-            pairs = edge_pairs(graph, pred, pass_masks[child],
-                               pass_masks[tree.root], cols=(child, tree.root))
-        if table is None:
-            table = pairs
-        else:
-            est = None if estimator is None else estimator(
-                table.count, pred, outgoing, pairs.count)
-            table = planned_join(table, pairs, est, row_limit=row_limit,
-                                 impl=join_impl, nested_max=nested_max,
-                                 probe_impl=probe_impl, record=record,
-                                 telemetry=telemetry, fuse=fuse)
-        truncated |= table.truncated
-        if table.count == 0:
-            break
-    assert table is not None
-    table.truncated = truncated
+    if tracer is None:
+        tracer = NULL_TRACER
+    with tracer.span("dtree", root=tree.root) as sp:
+        table: Table | None = None
+        truncated = False
+        for pred, child, outgoing in tree.edges:
+            if outgoing:
+                pairs = edge_pairs(graph, pred, pass_masks[tree.root],
+                                   pass_masks[child],
+                                   cols=(tree.root, child))
+            else:
+                pairs = edge_pairs(graph, pred, pass_masks[child],
+                                   pass_masks[tree.root],
+                                   cols=(child, tree.root))
+            if table is None:
+                table = pairs
+            else:
+                est = None if estimator is None else estimator(
+                    table.count, pred, outgoing, pairs.count)
+                table = planned_join(table, pairs, est,
+                                     row_limit=row_limit,
+                                     impl=join_impl, nested_max=nested_max,
+                                     probe_impl=probe_impl, record=record,
+                                     telemetry=telemetry, fuse=fuse,
+                                     tracer=tracer)
+            truncated |= table.truncated
+            if table.count == 0:
+                break
+        assert table is not None
+        table.truncated = truncated
+        if sp.live:
+            sp.set(rows=table.count, edges=len(tree.edges),
+                   truncated=truncated)
     return table
 
 

@@ -145,6 +145,27 @@ def decide(query: QueryTemplate, trees_per_comp: list[list[DTree]],
     )
 
 
+def decision_terms(decision: PlanDecision, th: Thresholds) -> list[dict]:
+    """The §4.3 decision decomposed into its three τ comparisons, for
+    EXPLAIN rendering and decision audits.  Each term: {name, value, op,
+    tau, threshold, hit} — `hit` is whether that comparison fired in the
+    direction that pushes toward use_check=True (the complex terms are
+    OR-ed, the power term is AND-ed; see `decide`)."""
+    return [
+        {"name": "complex/iterations", "value": float(decision.est_iterations),
+         "op": ">", "tau": "τ_iter", "threshold": float(th.tau_iter),
+         "hit": decision.est_iterations > th.tau_iter},
+        {"name": "complex/join_product",
+         "value": float(decision.est_join_product),
+         "op": ">", "tau": "τ_join", "threshold": float(th.tau_join),
+         "hit": decision.est_join_product > th.tau_join},
+        {"name": "power/max_selectivity",
+         "value": float(decision.max_selectivity),
+         "op": ">=", "tau": "τ_sel", "threshold": float(th.tau_sel),
+         "hit": decision.max_selectivity >= th.tau_sel},
+    ]
+
+
 class JoinEstimator:
     """Stats-driven join-cardinality estimates (§4.1 features reused for
     execution planning).

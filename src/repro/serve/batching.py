@@ -41,8 +41,11 @@ class ShapeBatcher:
     bucket's first (representative) item; buckets run in ascending
     (capacity class, fingerprint) order."""
 
-    def __init__(self):
+    def __init__(self, metrics=None):
+        # optional obs.metrics.MetricsRegistry: per-bucket size histogram
+        # (how much dedup/shape-sharing each flush actually found)
         self.telemetry = BatchTelemetry()
+        self.metrics = metrics
         self._pending: list[tuple[str, int, object]] = []
 
     def __len__(self) -> int:
@@ -75,6 +78,9 @@ class ShapeBatcher:
         for key in sorted(buckets):
             items = buckets[key]
             self.telemetry.buckets += 1
+            if self.metrics is not None:
+                self.metrics.histogram("batch_bucket_size").observe(
+                    len(items))
             if stopped is None and should_stop is not None:
                 stopped = should_stop()
             if stopped is not None:

@@ -59,7 +59,13 @@ from dataclasses import dataclass, field, replace
 # ---------------------------------------------------------------------- #
 class ServingError(RuntimeError):
     """Base class of every typed serving-layer failure.  Subclasses carry
-    their own context and are raised as-is by ResultFuture.result()."""
+    their own context and are raised as-is by ResultFuture.result().
+
+    `trace_id` is the query trace id (repro.obs.trace) when tracing was
+    enabled — the server stamps it at resolution time, so every chaos-
+    suite failure is attributable to one exported trace."""
+
+    trace_id: str | None = None
 
 
 class RejectedError(ServingError):
@@ -86,11 +92,13 @@ class QueryError(ServingError):
     the __cause__ (``raise ... from``)."""
 
     def __init__(self, fingerprint: str | None, phase: str,
-                 cause: BaseException):
+                 cause: BaseException, trace_id: str | None = None):
         self.fingerprint = fingerprint
         self.phase = phase
+        self.trace_id = trace_id
         fp = "?" if fingerprint is None else fingerprint[:24] + "..."
-        super().__init__(f"query {fp} failed during {phase}: {cause}")
+        tr = "" if trace_id is None else f" [trace {trace_id}]"
+        super().__init__(f"query {fp} failed during {phase}{tr}: {cause}")
 
 
 class IncompleteFlushError(ServingError):
@@ -102,15 +110,24 @@ class IncompleteFlushError(ServingError):
 
 class DegradationExhausted(ServingError):
     """The primary execution and every ladder rung failed.  `attempts`
-    lists (rung name, error) in order; the primary error is __cause__."""
+    lists (rung name, error) in order; the primary error is __cause__.
+    `attempt_history` is the rendered multi-line walk (one line per
+    attempted rung with its full error text) and `trace_id` ties the
+    failure to its exported trace."""
 
     def __init__(self, fingerprint: str | None,
-                 attempts: list[tuple[str, BaseException]]):
+                 attempts: list[tuple[str, BaseException]],
+                 trace_id: str | None = None):
         self.fingerprint = fingerprint
         self.attempts = attempts
+        self.trace_id = trace_id
+        self.attempt_history = "\n".join(
+            f"  {name}: {type(err).__name__}: {err}"
+            for name, err in attempts)
         steps = ", ".join(f"{name}: {type(err).__name__}"
                           for name, err in attempts)
-        super().__init__(f"degradation ladder exhausted ({steps})")
+        tr = "" if trace_id is None else f" [trace {trace_id}]"
+        super().__init__(f"degradation ladder exhausted ({steps}){tr}")
 
 
 class BudgetExceeded(Exception):

@@ -222,6 +222,14 @@ class PlanCache:
         self.hits += 1
         return pq
 
+    def peek(self, dataset_id: str,
+             fingerprint: str) -> PreparedQuery | None:
+        """`get` without side effects: no LRU touch, no hit/miss count.
+        Observability reads (EXPLAIN, the slow-query log) use this so
+        inspecting a plan never perturbs cache telemetry or eviction
+        order."""
+        return self._entries.get((dataset_id, fingerprint))
+
     def put(self, dataset_id: str, fingerprint: str,
             pq: PreparedQuery) -> None:
         key = (dataset_id, fingerprint)

@@ -43,13 +43,15 @@ import time
 from collections import deque
 from dataclasses import replace
 
-import numpy as np
-
 from ..core.engine import Engine, EngineConfig, MatchResult, make_engine
 from ..core.connectivity import ReachCache
 from ..core.matching import _pow2
 from ..core.query import QueryTemplate
-from .plan_cache import PlanCache, dataset_key, prepare_cached, remap_result
+from ..obs.trace import NULL_TRACER
+from ..obs.metrics import MetricsRegistry
+from ..obs.explain import render_explain
+from .plan_cache import (PlanCache, canonicalize, dataset_key,
+                         prepare_cached, remap_result)
 from .batching import ShapeBatcher
 from .calibrate import Calibrator
 from .governor import (Governor, GovernorConfig, BudgetExceeded,
@@ -79,6 +81,7 @@ class ResultFuture:
         self.fingerprint: str | None = None
         self.latency: float | None = None   # seconds, set at resolution
         self.cache_hit: bool = False        # plan-cache hit at flush time
+        self.trace_id: str | None = None    # obs trace id (None when off)
 
     def done(self) -> bool:
         return self._result is not None or self._error is not None
@@ -97,7 +100,8 @@ class ResultFuture:
             err = self._error
             if isinstance(err, ServingError):
                 raise err
-            raise QueryError(self.fingerprint, self._phase, err) from err
+            raise QueryError(self.fingerprint, self._phase, err,
+                             trace_id=self.trace_id) from err
         return self._result
 
     def _resolve(self, result: MatchResult, latency: float) -> None:
@@ -119,7 +123,16 @@ class QueryServer:
     ignored and passing thresholds/impl alongside raises.  `governor`
     (a GovernorConfig) enables resource governance: admission control,
     per-execution budgets, the degradation ladder, and the circuit
-    breaker; None (the default) keeps the ungoverned behavior."""
+    breaker; None (the default) keeps the ungoverned behavior.
+
+    `tracer` (an obs.trace.Tracer) enables per-query tracing: every
+    submission gets a trace id and its submit/prepare/governor/engine
+    spans, exportable via `tracer.export_chrome(path)`; None keeps the
+    ~zero-cost NULL_TRACER.  `slow_query_s` retains any query slower
+    than the threshold in a bounded slow-query log with its rendered
+    EXPLAIN (`slow_queries()`).  `latency_window` is accepted for
+    API compatibility; latency percentiles now come from the metrics
+    registry's O(1)-memory log-bucketed histograms."""
 
     def __init__(self, graph, variant: str = "rdf_h", ni=None, stats=None,
                  thresholds=None, cfg: EngineConfig | None = None,
@@ -129,7 +142,9 @@ class QueryServer:
                  reach_cache_bytes: int | None = None,
                  calibrate: bool = True, batching: bool = True,
                  latency_window: int = 4096,
-                 governor: GovernorConfig | None = None):
+                 governor: GovernorConfig | None = None,
+                 tracer=None, slow_query_s: float | None = None,
+                 slow_log_max: int = 32):
         if cfg is not None:
             # cfg is the complete engine configuration: silently dropping
             # a tuned thresholds/impl next to it would corrupt A/B runs
@@ -156,14 +171,16 @@ class QueryServer:
         self.plan_cache = PlanCache(plan_cache_size)
         self.engine.reach_cache = ReachCache(max_entries=reach_cache_size,
                                              max_bytes=reach_cache_bytes)
-        self.batcher = ShapeBatcher()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.engine.tracer = self.tracer
+        self.metrics = MetricsRegistry()
+        self.slow_query_s = slow_query_s
+        self._slow_log: deque = deque(maxlen=int(slow_log_max))
+        self.batcher = ShapeBatcher(metrics=self.metrics)
         self.batching = batching
         self.governor = Governor(governor) if governor is not None else None
         self.dataset_id = dataset_key(graph)
         self._pending: list[ResultFuture] = []
-        self._lat_all: deque = deque(maxlen=latency_window)
-        self._lat_cold: deque = deque(maxlen=latency_window)
-        self._lat_warm: deque = deque(maxlen=latency_window)
         self._rollup: dict = {}
         self.queries_served = 0
         self.query_errors = 0
@@ -175,18 +192,27 @@ class QueryServer:
     # ------------------------------------------------------------------ #
     def submit(self, query: QueryTemplate) -> ResultFuture:
         f = ResultFuture(self, query)
+        f.trace_id = self.tracer.start()
         gov = self.governor
-        if gov is not None and gov.cfg.max_pending is not None \
-                and len(self._pending) >= gov.cfg.max_pending:
-            # admission control: shed at submit time, before any engine
-            # work — the future resolves immediately with RejectedError
-            gov.shed_submit += 1
-            self.queries_shed += 1
-            f._fail(RejectedError(
-                f"pending queue full ({gov.cfg.max_pending}), "
-                "load shed at admission"), phase="admit")
-            return f
-        self._pending.append(f)
+        with self.tracer.segment("submit", f.trace_id) as sp:
+            if gov is not None and gov.cfg.max_pending is not None \
+                    and len(self._pending) >= gov.cfg.max_pending:
+                # admission control: shed at submit time, before any
+                # engine work — the future resolves immediately with
+                # RejectedError
+                gov.shed_submit += 1
+                self.queries_shed += 1
+                self.metrics.counter("queries_shed").inc()
+                err = RejectedError(
+                    f"pending queue full ({gov.cfg.max_pending}), "
+                    "load shed at admission")
+                err.trace_id = f.trace_id
+                f._fail(err, phase="admit")
+                sp.set(outcome="shed", pending=len(self._pending))
+                self.tracer.finish(f.trace_id)
+                return f
+            self._pending.append(f)
+            sp.set(outcome="admitted", pending=len(self._pending))
         return f
 
     def submit_many(self, queries, wait: bool = False) -> list[ResultFuture]:
@@ -231,24 +257,42 @@ class QueryServer:
         prepped = []
         for f in pending:
             t0 = time.perf_counter()
-            try:
-                pq, order, hit = prepare_cached(self.engine, f.query,
-                                                self.plan_cache,
-                                                self.dataset_id,
-                                                self._version())
-            except Exception as e:           # noqa: BLE001
-                f._fail(e, phase="prepare")
+            failed = None
+            with self.tracer.segment("prepare", f.trace_id) as sp:
+                try:
+                    pq, order, hit = prepare_cached(self.engine, f.query,
+                                                    self.plan_cache,
+                                                    self.dataset_id,
+                                                    self._version())
+                except Exception as e:       # noqa: BLE001
+                    failed = e
+                    sp.set(outcome="error", error_type=type(e).__name__)
+                else:
+                    f.cache_hit = hit
+                    f.fingerprint = pq.fingerprint
+                    sp.set(outcome="ok", cache_hit=hit,
+                           fingerprint=(pq.fingerprint or "")[:40])
+            prep_s = time.perf_counter() - t0
+            if failed is not None:
+                f._fail(failed, phase="prepare")
                 self.query_errors += 1
+                self.metrics.counter("query_errors").inc()
+                self.tracer.finish(f.trace_id)
                 continue
-            f.cache_hit = hit
-            f.fingerprint = pq.fingerprint
-            prepped.append((f, pq, order, time.perf_counter() - t0))
+            self.metrics.histogram("prepare_s").observe(prep_s)
+            prepped.append((f, pq, order, prep_s))
         stopper = self._flush_stopper(t_flush)
         if self.batching:
             for f, pq, order, prep_s in prepped:
                 cap_class = _pow2(sum(pq.cand_sizes.values()))
                 self.batcher.add((f, pq, order, prep_s),
                                  pq.fingerprint, cap_class)
+            # the batcher pairs every member of a bucket with the SAME
+            # result tuple (one execution, fanned out); the first future
+            # seen per result object is the representative whose trace
+            # carries the execute spans — the rest get a "fanout"
+            # segment pointing at it
+            rep_trace: dict[int, str | None] = {}
             for (f, pq, order, prep_s), res in \
                     self.batcher.flush(self._execute_item,
                                        should_stop=stopper):
@@ -256,9 +300,15 @@ class QueryServer:
                     # bucket shed by the flush wall budget: the batcher
                     # pairs unexecuted items with the stop exception
                     self._finish(f, res, order, prep_s)
+                    continue
+                out, lat = res
+                rid = id(res)
+                if rid in rep_trace:
+                    with self.tracer.segment("fanout", f.trace_id) as sp:
+                        sp.set(executed_in=rep_trace[rid])
                 else:
-                    out, lat = res
-                    self._finish(f, out, order, prep_s + lat)
+                    rep_trace[rid] = f.trace_id
+                self._finish(f, out, order, prep_s + lat)
         else:
             for f, pq, order, prep_s in prepped:
                 shed = stopper() if stopper is not None else None
@@ -294,30 +344,41 @@ class QueryServer:
         resolves only its own futures with the error.  The circuit
         breaker gates the execution per template fingerprint; the
         degradation ladder runs inside `_execute_governed`."""
-        _, pq, _, _ = item
+        f, pq, _, _ = item
         gov = self.governor
         t0 = time.perf_counter()
-        if gov is not None:
-            verdict = gov.breaker.admit(pq.fingerprint, now=gov.clock())
-            if verdict == "deny":
-                return QuarantinedError(
-                    pq.fingerprint or "?",
-                    gov.breaker.retry_after(pq.fingerprint,
-                                            now=gov.clock())), \
-                    time.perf_counter() - t0
-        try:
-            res = self._execute_governed(pq)
-        except Exception as e:               # noqa: BLE001
+        with self.tracer.segment("execute", f.trace_id,
+                                 fingerprint=(pq.fingerprint or "")[:40]
+                                 ) as seg:
             if gov is not None:
-                gov.breaker.record(pq.fingerprint, ok=False,
+                with self.tracer.span("breaker") as sp:
+                    verdict = gov.breaker.admit(pq.fingerprint,
+                                                now=gov.clock())
+                    sp.set(verdict=verdict)
+                if verdict == "deny":
+                    seg.set(outcome="quarantined")
+                    return QuarantinedError(
+                        pq.fingerprint or "?",
+                        gov.breaker.retry_after(pq.fingerprint,
+                                                now=gov.clock())), \
+                        time.perf_counter() - t0
+            try:
+                res = self._execute_governed(pq)
+            except Exception as e:           # noqa: BLE001
+                if gov is not None:
+                    gov.breaker.record(pq.fingerprint, ok=False,
+                                       now=gov.clock())
+                seg.set(outcome="error", error_type=type(e).__name__)
+                return e, time.perf_counter() - t0
+            lat = time.perf_counter() - t0
+            if gov is not None:
+                gov.breaker.record(pq.fingerprint, ok=True,
                                    now=gov.clock())
-            return e, time.perf_counter() - t0
-        lat = time.perf_counter() - t0
-        if gov is not None:
-            gov.breaker.record(pq.fingerprint, ok=True, now=gov.clock())
-        if self.calibrator is not None:
-            self.calibrator.observe(res.stats)
-        self._observe_stats(res.stats)
+            if self.calibrator is not None:
+                self.calibrator.observe(res.stats)
+            self._observe_stats(res.stats)
+            seg.set(outcome="ok", warm=bool(res.stats.cache_hit),
+                    rows=res.count)
         return res, lat
 
     def _execute_governed(self, pq) -> MatchResult:
@@ -337,7 +398,9 @@ class QueryServer:
             return self.engine.execute_prepared(pq)
         mem = gov.rung_memory
         if mem is not None and pq.fingerprint is not None:
-            verdict, rung = mem.route(pq.fingerprint, gov.clock())
+            with self.tracer.span("route") as sp:
+                verdict, rung = mem.route(pq.fingerprint, gov.clock())
+                sp.set(verdict=verdict, rung=rung)
             if verdict == "jump":
                 return self._degraded_retry(pq, None, start=rung)
             if verdict == "probe":
@@ -369,26 +432,33 @@ class QueryServer:
         gov = self.governor
         budget = gov.make_budget()
         try:
-            return (self.engine.execute_prepared(pq) if budget is None
-                    else self.engine.execute_prepared(pq, budget=budget))
+            with self.tracer.span("primary") as sp:
+                res = (self.engine.execute_prepared(pq) if budget is None
+                       else self.engine.execute_prepared(pq, budget=budget))
+                sp.set(outcome="ok")
+                return res
         except BudgetExceeded:
             raise
         except Exception:                        # noqa: BLE001
             if not retry:
                 raise
             gov.transient_retries += 1
-            backoff = gov.cfg.retry_backoff_s
-            if backoff > 0:
-                time.sleep(backoff *
-                           (1.0 + gov.cfg.retry_jitter * random.random()))
-            fresh = self.engine.prepare(pq.query,
-                                        fingerprint=pq.fingerprint,
-                                        version=pq.version)
-            budget = gov.make_budget()
-            res = (self.engine.execute_prepared(fresh) if budget is None
-                   else self.engine.execute_prepared(fresh, budget=budget))
-            gov.transient_recoveries += 1
-            return res
+            with self.tracer.span("transient_retry") as sp:
+                backoff = gov.cfg.retry_backoff_s
+                if backoff > 0:
+                    time.sleep(backoff * (1.0 + gov.cfg.retry_jitter
+                                          * random.random()))
+                fresh = self.engine.prepare(pq.query,
+                                            fingerprint=pq.fingerprint,
+                                            version=pq.version)
+                budget = gov.make_budget()
+                res = (self.engine.execute_prepared(fresh)
+                       if budget is None
+                       else self.engine.execute_prepared(fresh,
+                                                         budget=budget))
+                gov.transient_recoveries += 1
+                sp.set(outcome="recovered")
+                return res
 
     def _degraded_retry(self, pq, primary: BaseException | None,
                         start: str | None = None) -> MatchResult:
@@ -419,31 +489,45 @@ class QueryServer:
                     break
         if primary is not None:
             gov.ladder_entries += 1
-        for rung in ladder[first:]:
-            steps.append(rung.name)
-            eng = self.engine.with_config(rung.apply(self.engine.cfg,
-                                                     gov.cfg))
-            budget = gov.make_budget()
-            try:
-                dpq = eng.prepare(pq.query, fingerprint=pq.fingerprint)
-                res = (eng.execute_prepared(dpq) if budget is None
-                       else eng.execute_prepared(dpq, budget=budget))
-            except Exception as e:           # noqa: BLE001
-                attempts.append((rung.name, e))
-                continue
-            res.stats.degraded_steps = list(steps)
-            gov.note_degraded(rung.name)
-            if mem is not None and pq.fingerprint is not None:
-                if mem.record_degraded(pq.fingerprint, rung.name,
-                                       gov.clock()):
-                    self._note_chronic(pq)
-            return res
+        with self.tracer.span(
+                "ladder",
+                entry="jump" if primary is None else "failure",
+                start=start) as lsp:
+            for rung in ladder[first:]:
+                steps.append(rung.name)
+                with self.tracer.span("rung", rung=rung.name) as rsp:
+                    eng = self.engine.with_config(
+                        rung.apply(self.engine.cfg, gov.cfg))
+                    budget = gov.make_budget()
+                    try:
+                        dpq = eng.prepare(pq.query,
+                                          fingerprint=pq.fingerprint)
+                        res = (eng.execute_prepared(dpq)
+                               if budget is None
+                               else eng.execute_prepared(dpq,
+                                                         budget=budget))
+                    except Exception as e:   # noqa: BLE001
+                        attempts.append((rung.name, e))
+                        rsp.set(outcome="failed",
+                                error_type=type(e).__name__)
+                        continue
+                    rsp.set(outcome="ok")
+                res.stats.degraded_steps = list(steps)
+                gov.note_degraded(rung.name)
+                if mem is not None and pq.fingerprint is not None:
+                    if mem.record_degraded(pq.fingerprint, rung.name,
+                                           gov.clock()):
+                        self._note_chronic(pq)
+                lsp.set(outcome="degraded", rung=rung.name)
+                return res
+            lsp.set(outcome="exhausted")
         gov.exhausted += 1
         if mem is not None and pq.fingerprint is not None:
             # even the remembered rung failed: forget it so the next
             # request re-walks (the fault moved out from under us)
             mem.clear(pq.fingerprint)
-        err = DegradationExhausted(pq.fingerprint, attempts)
+        err = DegradationExhausted(pq.fingerprint, attempts,
+                                   trace_id=self.tracer.current_trace_id())
         if primary is not None:
             raise err from primary
         raise err
@@ -463,14 +547,39 @@ class QueryServer:
             phase = ("degraded-retry" if isinstance(res,
                                                     DegradationExhausted)
                      else "execute")
+            if isinstance(res, ServingError) and res.trace_id is None:
+                # stamp the trace id so the raised error names the trace
+                # holding its rung-attempt spans (shed errors shared
+                # across futures keep the first future's id)
+                res.trace_id = f.trace_id
             f._fail(res, phase=phase)
             self.query_errors += 1
+            self.metrics.counter("query_errors").inc()
+            self.tracer.finish(f.trace_id)
             return
+        warm = bool(res.stats.cache_hit)
         f._resolve(remap_result(res, order), latency)
         self.queries_served += 1
-        self._lat_all.append(latency)
-        (self._lat_warm if res.stats.cache_hit
-         else self._lat_cold).append(latency)
+        m = self.metrics
+        m.counter("queries_served").inc()
+        m.histogram("latency_s").observe(latency)
+        m.histogram("latency_warm_s" if warm
+                    else "latency_cold_s").observe(latency)
+        m.histogram("result_rows").observe(res.count)
+        if self.slow_query_s is not None and latency >= self.slow_query_s:
+            m.counter("slow_queries").inc()
+            pq = (self.plan_cache.peek(self.dataset_id, f.fingerprint)
+                  if f.fingerprint is not None else None)
+            self._slow_log.append({
+                "fingerprint": f.fingerprint,
+                "trace_id": f.trace_id,
+                "latency_s": latency,
+                "warm": warm,
+                "explain": (None if pq is None else
+                            render_explain(pq,
+                                           self.engine.cfg.thresholds)),
+            })
+        self.tracer.finish(f.trace_id)
 
     def _observe_stats(self, qs) -> None:
         for k, v in qs.to_dict().items():
@@ -516,34 +625,60 @@ class QueryServer:
                 "age_s": time.monotonic() - stamp}
 
     # ------------------------------------------------------------------ #
-    @staticmethod
-    def _pct(lat, q) -> float:
-        return float(np.percentile(np.asarray(lat), q)) if lat else 0.0
+    def explain(self, query: QueryTemplate) -> str:
+        """Rendered EXPLAIN report for `query`'s plan: the §4.3 check
+        decision with its τ terms, per-node candidate intervals, D-tree
+        decomposition, learned join/connection orders, and the recorded
+        join sequence (estimated vs. observed rows).  Uses the cached
+        plan when present (without perturbing LRU order or hit/miss
+        telemetry); a never-seen template is prepared — and cached — so
+        EXPLAIN shows exactly the plan the next execution will run."""
+        _, _, fingerprint = canonicalize(query)
+        pq = self.plan_cache.peek(self.dataset_id, fingerprint)
+        if pq is None:
+            pq, _, _ = prepare_cached(self.engine, query, self.plan_cache,
+                                      self.dataset_id, self._version())
+        return render_explain(pq, self.engine.cfg.thresholds)
+
+    def slow_queries(self) -> list[dict]:
+        """The bounded slow-query log (oldest first): one dict per query
+        slower than `slow_query_s`, carrying fingerprint, trace id,
+        latency, warm/cold, and the rendered EXPLAIN of the plan that
+        ran it."""
+        return list(self._slow_log)
 
     def telemetry(self) -> dict:
         """One JSON-serializable snapshot of everything the server knows
         about itself: latency percentiles (seconds), cache hit rates,
-        batching dedup, calibration state, governance counters, and the
-        QueryStats rollup."""
+        batching dedup, calibration state, governance counters, the
+        metrics-registry snapshot, and the QueryStats rollup."""
         rc = self.engine.reach_cache
         gov_t = None
         if self.governor is not None:
             gov_t = self.governor.snapshot()
             gov_t["snapshot"] = self._snapshot_info()
+        m = self.metrics
+        m.gauge("pending").set(len(self._pending))
+        m.gauge("plan_cache_entries").set(len(self.plan_cache))
+        m.gauge("reach_cache_bytes").set(rc.total_bytes)
+        lat = m.histogram("latency_s")
+        cold = m.histogram("latency_cold_s")
+        warm = m.histogram("latency_warm_s")
         out = {
             "queries_served": self.queries_served,
             "query_errors": self.query_errors,
             "queries_shed": self.queries_shed,
             "latency": {
-                "p50": self._pct(self._lat_all, 50),
-                "p99": self._pct(self._lat_all, 99),
-                "cold_p50": self._pct(self._lat_cold, 50),
-                "cold_p99": self._pct(self._lat_cold, 99),
-                "warm_p50": self._pct(self._lat_warm, 50),
-                "warm_p99": self._pct(self._lat_warm, 99),
-                "n_cold": len(self._lat_cold),
-                "n_warm": len(self._lat_warm),
+                "p50": lat.percentile(50),
+                "p99": lat.percentile(99),
+                "cold_p50": cold.percentile(50),
+                "cold_p99": cold.percentile(99),
+                "warm_p50": warm.percentile(50),
+                "warm_p99": warm.percentile(99),
+                "n_cold": cold.count,
+                "n_warm": warm.count,
             },
+            "metrics": m.snapshot(),
             "plan_cache": self.plan_cache.snapshot(),
             "reach_cache": {
                 "entries": len(rc), "hits": rc.hits, "misses": rc.misses,

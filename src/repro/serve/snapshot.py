@@ -66,7 +66,17 @@ class SnapshotError(ServingError):
 _PQ_FIELDS = ("query", "iv", "cand_sizes", "comps", "trees_per_comp",
               "decision", "use_check", "fingerprint", "version",
               "prepare_time", "executions", "comp_orders", "comp_costs",
-              "conn_order", "conn_costs", "conn_impls", "join_seq")
+              "conn_order", "conn_costs", "conn_impls", "join_seq",
+              "join_est_seq")
+
+# Fields ADDED to PreparedQuery after snapshot format v1 shipped, with
+# the default a pre-addition snapshot restores to.  Listing a field here
+# (instead of bumping FORMAT_VERSION) keeps older payloads restorable:
+# the learned plan state they carry is still exactly valid, only the new
+# observability field is absent.  join_est_seq added in the tracing PR —
+# an empty history merely renders EXPLAIN's est column as "-" until the
+# next cold run repopulates it.
+_PQ_FIELD_DEFAULTS = {"join_est_seq": list}
 
 
 def _pq_to_blob(pq: PreparedQuery) -> dict:
@@ -84,11 +94,21 @@ def _pq_to_blob(pq: PreparedQuery) -> dict:
     # survives refactors of estimator-internal types
     blob["join_seq"] = [(int(r), int(c), str(i))
                         for r, c, i in pq.join_seq]
+    blob["join_est_seq"] = [None if e is None else int(e)
+                            for e in pq.join_est_seq]
     return blob
 
 
 def _pq_from_blob(blob: dict) -> PreparedQuery:
-    pq = PreparedQuery(**{k: blob[k] for k in _PQ_FIELDS})
+    kwargs = {}
+    for k in _PQ_FIELDS:
+        if k in blob:
+            kwargs[k] = blob[k]
+        elif k in _PQ_FIELD_DEFAULTS:
+            kwargs[k] = _PQ_FIELD_DEFAULTS[k]()
+        else:
+            raise KeyError(k)            # caller wraps as payload error
+    pq = PreparedQuery(**kwargs)
     pq.masks = None
     pq.masks_host = blob.get("masks_host")
     return pq

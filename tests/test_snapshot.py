@@ -278,3 +278,37 @@ def test_save_is_atomic_no_tmp_left_behind(graph, pool, tmp_path):
     srv.save_snapshot(path)
     srv.save_snapshot(path)              # overwrite in place
     assert sorted(os.listdir(tmp_path)) == ["atomic.snap"]
+
+
+# ----------------------- format compatibility -------------------------- #
+def test_restore_pre_observability_payload(graph, pool, oracle, tmp_path):
+    """A snapshot whose PreparedQuery blobs predate `join_est_seq` (the
+    shape written before the observability PR, same format version)
+    still restores: the missing field defaults to an empty estimate
+    history instead of failing the whole restore, and the first
+    execution per template is still warm and byte-identical."""
+    import hashlib
+    import pickle
+
+    srv = _warm_server(graph, pool)
+    path = tmp_path / "old.snap"
+    srv.save_snapshot(path)
+    raw = path.read_bytes()
+    hdr = len(MAGIC) + 4 + hashlib.sha256().digest_size
+    data = pickle.loads(raw[hdr:])
+    for _, blob in data["plans"]:
+        assert "join_est_seq" in blob    # guard: strip something real
+        del blob["join_est_seq"]
+    payload = pickle.dumps(data, protocol=4)
+    path.write_bytes(MAGIC + struct.pack("<I", FORMAT_VERSION)
+                     + hashlib.sha256(payload).digest() + payload)
+
+    srv2 = _server(graph)
+    manifest = srv2.restore_snapshot(path)
+    assert manifest["plans"] == len(pool)
+    for q, want in zip(pool, oracle):
+        res = srv2.query(q)
+        assert res.stats.cache_hit       # warm path survives the compat
+        assert res.result_set() == want
+    for _, pq in srv2.plan_cache.entries():
+        assert pq.join_est_seq == []     # defaulted, not invented
