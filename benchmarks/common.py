@@ -12,7 +12,8 @@ import time
 
 import numpy as np
 
-from repro.core import make_engine, build_ni_index, Thresholds
+from repro.core import (Dataset, ENGINE_VARIANTS, make_engine,
+                        build_ni_index, Thresholds)
 from repro.data import DATASETS, random_query
 
 BENCH_SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.12"))
@@ -22,6 +23,7 @@ VARIANTS = ["stwig+", "spath_ni2", "h2", "h3", "hvc"]
 
 _GRAPH_CACHE: dict = {}
 _NI_CACHE: dict = {}
+_DS_CACHE: dict = {}
 
 
 def get_graph(name: str, scale: float | None = None, seed: int = 1):
@@ -39,12 +41,21 @@ def get_ni(graph, d_max: int, variant: str = "full"):
     return _NI_CACHE[key]
 
 
+def get_dataset(graph, variant: str = "rdf_h"):
+    """Dataset facade for `graph` with the NI the variant needs.  Cached
+    per (graph, NI spec): variants sharing an index shape (e.g. h2 and
+    spath_ni2) share one Dataset, exactly as the old NI cache did."""
+    b = ENGINE_VARIANTS[variant]
+    key = (id(graph), b["d"], b["var"])
+    if key not in _DS_CACHE:
+        _DS_CACHE[key] = Dataset.build(
+            graph, variant=variant,
+            ni=get_ni(graph, b["d"], b["var"]))
+    return _DS_CACHE[key]
+
+
 def engine_for(graph, variant: str, thresholds=None):
-    spec = {"stwig+": (1, "full"), "spath_ni2": (2, "full"),
-            "h2": (2, "full"), "h3": (3, "full"), "hvc": (2, "vc")}
-    d, var = spec[variant]
-    ni = get_ni(graph, d, var)
-    return make_engine(graph, variant, ni=ni,
+    return make_engine(get_dataset(graph, variant), variant,
                        thresholds=thresholds or Thresholds(
                            tau_iter=500, tau_join=1e5, tau_sel=6.0),
                        impl="auto")

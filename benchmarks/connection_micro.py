@@ -24,7 +24,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (build_ni_index, connectivity_mask, cross_join,
-                        filter_rows, make_engine, reach_join, ReachCache,
+                        filter_rows, Dataset, reach_join, ReachCache,
                         ReachJoinInfo)
 from repro.core.matching import Table, _pow2
 from repro.data import random_graph, random_query
@@ -107,9 +107,10 @@ def _engine_identity_grid():
     g = random_graph(n_nodes=400, n_edges=1400, n_preds=3, seed=77)
     q = random_query(g, size=5, seed=5, n_connection=2, d_c=3)
     results = {}
+    ds = Dataset.build(g, variant="h2")
     for ci in ("reach", "cross"):
         for pm in ("cost", "greedy"):
-            eng = make_engine(g, "h2")
+            eng = ds.engine("h2")
             eng.cfg.connection_impl = ci
             eng.cfg.plan_mode = pm
             results[f"{ci}/{pm}"] = eng.execute(q).result_set()

@@ -26,6 +26,7 @@ import time
 
 import numpy as np
 
+from repro.core import Dataset
 from repro.data import DATASETS, random_query
 from repro.obs import Tracer
 from repro.serve import QueryServer
@@ -39,11 +40,12 @@ N_NULL = 50_000 if SMOKE else 200_000
 
 def _workload(seed: int = 1):
     g = DATASETS["dblp"](scale=SCALE, seed=seed)
+    ds = Dataset.build(g, variant="rdf_h")
     pool = [random_query(g, size=5, seed=100 + i, n_connection=i % 2, d_c=3)
             for i in range(N_TEMPLATES)]
     rng = np.random.default_rng(0)
     ranks = np.minimum(rng.zipf(1.3, N_STREAM), len(pool)) - 1
-    return g, pool, [pool[r] for r in ranks]
+    return ds, pool, [pool[r] for r in ranks]
 
 
 # ----------------------------- null spans ------------------------------ #
@@ -76,8 +78,8 @@ def _null_span():
 
 
 # --------------------------- serving overhead -------------------------- #
-def _serve(g, pool, stream, tracer):
-    srv = QueryServer(g, calibrate=False, tracer=tracer)
+def _serve(ds, pool, stream, tracer):
+    srv = QueryServer(ds, calibrate=False, tracer=tracer)
     for q in pool:                       # warm plans + jit shapes first
         srv.query(q)
     lats, sets = [], []
@@ -88,11 +90,11 @@ def _serve(g, pool, stream, tracer):
     return float(np.median(lats)), sets, srv
 
 
-def _serve_overhead(g, pool, stream):
+def _serve_overhead(ds, pool, stream):
     cap = Tracer(max_traces=len(stream) + len(pool) + 4)
-    off1, sets_off, _ = _serve(g, pool, stream, None)
-    on, sets_on, srv_on = _serve(g, pool, stream, cap)
-    off2, sets_off2, _ = _serve(g, pool, stream, None)
+    off1, sets_off, _ = _serve(ds, pool, stream, None)
+    on, sets_on, srv_on = _serve(ds, pool, stream, cap)
+    off2, sets_off2, _ = _serve(ds, pool, stream, None)
     identical = sets_off == sets_on == sets_off2
     base = min(off1, off2)
     noise_pct = abs(off1 - off2) / base * 100.0
@@ -131,7 +133,7 @@ def _chrome_export(srv, n_queries: int):
 
 # ---------------------------------------------------------------------- #
 def run():
-    g, pool, stream = _workload()
+    ds, pool, stream = _workload()
     results = {"scale": SCALE, "n_templates": N_TEMPLATES,
                "n_stream": N_STREAM, "smoke": SMOKE}
 
@@ -141,7 +143,7 @@ def run():
            f"disabled={ns['disabled_ns_per_span']:.0f}ns "
            f"enabled={ns['enabled_ns_per_span']:.0f}ns")
 
-    results["serve_overhead"], srv_on = _serve_overhead(g, pool, stream)
+    results["serve_overhead"], srv_on = _serve_overhead(ds, pool, stream)
     so = results["serve_overhead"]
     assert so["identical_result_sets"], "tracing changed result sets"
     yield ("obs.serve_traced", so["on_median_ms"] * 1e3,

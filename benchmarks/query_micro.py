@@ -27,7 +27,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (RDFGraph, QueryTemplate, QueryEdge, ConnectionEdge,
-                        make_engine, JoinEstimator, JoinTelemetry)
+                        Dataset, JoinEstimator, JoinTelemetry)
 from repro.core.matching import Table, planned_join, _pow2
 from repro.core.planner import plan_table_joins
 
@@ -77,8 +77,9 @@ def _conn3():
         connections=[ConnectionEdge(1, 2, 6), ConnectionEdge(4, 5, 1)])
     out = {}
     result_sets = {}
+    ds = Dataset.build(g, variant="stwig+")
     for pm in ("cost", "greedy"):
-        eng = make_engine(g, "stwig+")
+        eng = ds.engine("stwig+")
         eng.cfg.plan_mode = pm
         r = eng.execute(q)
         result_sets[pm] = r.result_set()

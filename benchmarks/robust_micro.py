@@ -52,7 +52,7 @@ import time
 
 import numpy as np
 
-from repro.core import Thresholds, make_engine
+from repro.core import Dataset, Thresholds
 from repro.core.engine import EngineConfig
 from repro.data import random_graph, random_query
 from repro.serve import (QueryServer, GovernorConfig, QuarantinedError,
@@ -81,9 +81,10 @@ def _workload(seed: int = 1):
                      n_literals=20, seed=seed)
     pool = [random_query(g, size=4, seed=40 + i, n_connection=i % 2,
                          d_c=2) for i in range(N_TEMPLATES)]
-    oracle_eng = make_engine(g, "rdf_h", impl="ref")
+    ds = Dataset.build(g, variant="rdf_h")
+    oracle_eng = ds.engine("rdf_h", impl="ref")
     oracle = [oracle_eng.execute(q).result_set() for q in pool]
-    return g, pool, oracle
+    return ds, pool, oracle
 
 
 def _p(xs, q):
@@ -91,11 +92,11 @@ def _p(xs, q):
 
 
 # --------------------------- overload shed ----------------------------- #
-def _overload_shed(g, pool, oracle):
+def _overload_shed(ds, pool, oracle):
     out = {}
     for mode, gov in (("unbounded", GovernorConfig()),
                       ("bounded", GovernorConfig(max_pending=MAX_PENDING))):
-        srv = QueryServer(g, cfg=_cfg(), governor=gov)
+        srv = QueryServer(ds, cfg=_cfg(), governor=gov)
         for q in pool:                       # warm plans + jit shapes
             srv.query(q)
         walls, shed, served, identical = [], 0, 0, True
@@ -138,7 +139,7 @@ def _overload_shed(g, pool, oracle):
 
 
 # ------------------------- degraded overhead --------------------------- #
-def _degraded_overhead(g, pool, oracle):
+def _degraded_overhead(ds, pool, oracle):
     reps = 2 if SMOKE else 4
     out = {}
     for mode in ("healthy", "degraded"):
@@ -146,7 +147,7 @@ def _degraded_overhead(g, pool, oracle):
         # ladder walk per request; with memory on, repeat traffic would
         # jump to the last-good rung and hide the walk being measured
         # (that saving is what _rung_memory quantifies).
-        srv = QueryServer(g, cfg=_cfg(),
+        srv = QueryServer(ds, cfg=_cfg(),
                           governor=GovernorConfig(rung_memory=False,
                                                   transient_retry=False))
         for q in pool:                       # healthy warm-up both modes
@@ -182,9 +183,9 @@ def _degraded_overhead(g, pool, oracle):
 
 
 # ------------------------ quarantine recovery -------------------------- #
-def _quarantine_recovery(g, pool, oracle):
+def _quarantine_recovery(ds, pool, oracle):
     cooldown = 0.2 if SMOKE else 0.5
-    srv = QueryServer(g, cfg=_cfg(),
+    srv = QueryServer(ds, cfg=_cfg(),
                       governor=GovernorConfig(breaker_threshold=2,
                                               breaker_cooldown_s=cooldown))
     q, ref = pool[1], oracle[1]          # has a connection edge: the
@@ -235,7 +236,7 @@ def _quarantine_recovery(g, pool, oracle):
 
 
 # ---------------------------- rung memory ------------------------------ #
-def _rung_memory(g, pool, oracle):
+def _rung_memory(ds, pool, oracle):
     """Full-ladder-per-request vs. memory-jump under a persistent fault,
     plus recovery within one re-probe interval after the fault clears."""
     reps = 3 if SMOKE else 6
@@ -251,7 +252,7 @@ def _rung_memory(g, pool, oracle):
                                        reprobe_interval_s=interval)),
     )
     for mode, gov in configs:
-        srv = QueryServer(g, cfg=_cfg(), governor=gov)
+        srv = QueryServer(ds, cfg=_cfg(), governor=gov)
         for qq in pool:                  # healthy warm-up: plans + shapes
             srv.query(qq)
         lat, identical = [], True
@@ -300,13 +301,13 @@ def _rung_memory(g, pool, oracle):
 
 
 # -------------------------- snapshot restore --------------------------- #
-def _snapshot_restore(g, pool, oracle):
+def _snapshot_restore(ds, pool, oracle):
     """Restore-vs-relearn: a restored server serves its first pass over
     the pool entirely on the warm path; a cold server pays prepare +
     planning + decide + check for every template."""
     import tempfile
 
-    srv = QueryServer(g, cfg=_cfg(), governor=GovernorConfig())
+    srv = QueryServer(ds, cfg=_cfg(), governor=GovernorConfig())
     for _ in range(2):                   # cold pass + warm pass
         for q in pool:
             srv.query(q)
@@ -314,13 +315,13 @@ def _snapshot_restore(g, pool, oracle):
                         "robust.snap")
     manifest = srv.save_snapshot(path)
 
-    cold = QueryServer(g, cfg=_cfg(), governor=GovernorConfig())
+    cold = QueryServer(ds, cfg=_cfg(), governor=GovernorConfig())
     t0 = time.perf_counter()
     cold_ok = all(cold.query(q).result_set() == want
                   for q, want in zip(pool, oracle))
     relearn_s = time.perf_counter() - t0
 
-    warm = QueryServer(g, cfg=_cfg(), governor=GovernorConfig())
+    warm = QueryServer(ds, cfg=_cfg(), governor=GovernorConfig())
     t0 = time.perf_counter()
     warm.restore_snapshot(path)
     results = [warm.query(q) for q in pool]
@@ -344,11 +345,11 @@ def _snapshot_restore(g, pool, oracle):
 
 # ---------------------------------------------------------------------- #
 def run():
-    g, pool, oracle = _workload()
+    ds, pool, oracle = _workload()
     results = {"n_nodes": N_NODES, "n_templates": N_TEMPLATES,
                "n_bursts": N_BURSTS, "burst_size": BURST, "smoke": SMOKE}
 
-    results["overload_shed"] = _overload_shed(g, pool, oracle)
+    results["overload_shed"] = _overload_shed(ds, pool, oracle)
     ov = results["overload_shed"]
     assert ov["bounded"]["identical_result_sets"], \
         "accepted results diverged under admission control"
@@ -359,7 +360,7 @@ def run():
            f"shed={ov['bounded']['shed']} "
            f"identical={ov['bounded']['identical_result_sets']}")
 
-    results["degraded_overhead"] = _degraded_overhead(g, pool, oracle)
+    results["degraded_overhead"] = _degraded_overhead(ds, pool, oracle)
     dg = results["degraded_overhead"]
     assert dg["all_ladder_served"], \
         "ladder failed to serve exact results under persistent fault"
@@ -368,7 +369,7 @@ def run():
            f"rungs={dg['degraded']['degraded_by_rung']} "
            f"identical={dg['degraded']['identical_result_sets']}")
 
-    results["quarantine_recovery"] = _quarantine_recovery(g, pool, oracle)
+    results["quarantine_recovery"] = _quarantine_recovery(ds, pool, oracle)
     qr = results["quarantine_recovery"]
     assert qr["identical_after_recovery"], \
         "post-recovery result diverged from oracle"
@@ -377,7 +378,7 @@ def run():
            f"recovery={qr['recovery_s']:.2f}s "
            f"recovered={qr['recovered_within_2_cooldowns']}")
 
-    results["rung_memory"] = _rung_memory(g, pool, oracle)
+    results["rung_memory"] = _rung_memory(ds, pool, oracle)
     rm = results["rung_memory"]
     assert rm["memory_jump"]["identical_result_sets"] \
         and rm["full_ladder"]["identical_result_sets"], \
@@ -391,7 +392,7 @@ def run():
            f"jumps={rm['memory_jump']['rung_memory']['jumps']} "
            f"recovery={rm['recovery_s']:.2f}s")
 
-    results["snapshot_restore"] = _snapshot_restore(g, pool, oracle)
+    results["snapshot_restore"] = _snapshot_restore(ds, pool, oracle)
     sr = results["snapshot_restore"]
     assert sr["identical_result_sets"], \
         "restored server's results diverged from oracle"

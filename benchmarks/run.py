@@ -14,12 +14,12 @@ def main() -> None:
                    fig5_dataset_scaling, fig6_template_scaling,
                    sec63_connection_edges, kernel_micro, join_micro,
                    query_micro, connection_micro, serve_micro,
-                   robust_micro, obs_micro)
+                   robust_micro, obs_micro, update_micro)
     modules = [table1_metrics, fig3_index_space, fig4_query_datasets,
                fig5_dataset_scaling, fig6_template_scaling,
                sec63_connection_edges, kernel_micro, join_micro,
                query_micro, connection_micro, serve_micro,
-               robust_micro, obs_micro]
+               robust_micro, obs_micro, update_micro]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in modules:

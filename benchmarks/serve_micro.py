@@ -32,7 +32,7 @@ import time
 
 import numpy as np
 
-from repro.core import Thresholds, make_engine
+from repro.core import Dataset, Thresholds
 from repro.data import DATASETS, random_query
 from repro.serve import QueryServer
 
@@ -45,9 +45,10 @@ WARM_REPS = 3
 
 def _workload(seed: int = 1):
     g = DATASETS["dblp"](scale=SCALE, seed=seed)
+    ds = Dataset.build(g, variant="rdf_h")
     pool = [random_query(g, size=5, seed=100 + i, n_connection=i % 2, d_c=3)
             for i in range(N_TEMPLATES)]
-    return g, pool
+    return ds, pool
 
 
 def _zipf_stream(pool, n, alpha=1.3, seed=0):
@@ -61,8 +62,8 @@ def _result_sets(engine, pool):
 
 
 # --------------------------- cold vs warm ------------------------------ #
-def _cold_warm(g, pool, oracle):
-    srv = QueryServer(g, batching=False, calibrate=False)
+def _cold_warm(ds, pool, oracle):
+    srv = QueryServer(ds, batching=False, calibrate=False)
     cold, warm, identical = [], [], True
     for q, ref in zip(pool, oracle):
         t0 = time.perf_counter()
@@ -106,13 +107,13 @@ def _run_stream(srv, stream, chunk=8):
     return time.perf_counter() - t0, counts, sets
 
 
-def _batched_serial(g, pool, oracle):
+def _batched_serial(ds, pool, oracle):
     stream = _zipf_stream(pool, N_STREAM)
     ref = {id(q): s for q, s in zip(pool, oracle)}
     out = {}
     sets_by_mode = {}
     for mode, batching in (("serial", False), ("batched", True)):
-        srv = QueryServer(g, batching=batching, calibrate=False)
+        srv = QueryServer(ds, batching=batching, calibrate=False)
         # warm the plan cache and jit shapes once per template so the
         # comparison isolates steady-state throughput, not compilation
         for q in pool:
@@ -137,16 +138,17 @@ def _batched_serial(g, pool, oracle):
 # ---------------------------- calibration ------------------------------ #
 _CAL_WORKER = r"""
 import json, sys, time
-from repro.core import Thresholds, make_engine
+from repro.core import Dataset, Thresholds
 from repro.data import DATASETS, random_query
 from repro.serve import QueryServer
 
 mode, scale, n = sys.argv[1], float(sys.argv[2]), int(sys.argv[3])
 g = DATASETS["lubm"](scale=scale, seed=1)
+ds = Dataset.build(g, variant="rdf_h")
 stream = [random_query(g, size=4, seed=300 + i) for i in range(n)]
 # tau forced so the planner marks every template complex AND selective:
 # the check runs unconditionally until calibration raises tau_sel
-srv = QueryServer(g, thresholds=Thresholds(tau_iter=1.0, tau_join=1.0,
+srv = QueryServer(ds, thresholds=Thresholds(tau_iter=1.0, tau_join=1.0,
                                            tau_sel=0.01),
                   batching=False, calibrate=(mode == "calibrated"),
                   plan_cache_size=2 * n)
@@ -154,7 +156,7 @@ srv = QueryServer(g, thresholds=Thresholds(tau_iter=1.0, tau_join=1.0,
 # on out-of-stream templates, so the timed comparison is not dominated
 # by which mode happens to compile which path: a frozen server only
 # ever compiles the mask path, a calibrated one compiles both
-warm_eng = make_engine(g, "rdf_h")
+warm_eng = ds.engine("rdf_h")
 for i in range(4):
     wq = random_query(g, size=4, seed=900 + i)
     for policy in ("always", "never"):
@@ -163,7 +165,7 @@ for i in range(4):
 t0 = time.perf_counter()
 sets = [srv.query(q).result_set() for q in stream]
 wall = time.perf_counter() - t0
-oracle = make_engine(g, "rdf_h")
+oracle = ds.engine("rdf_h")
 identical = all(s == oracle.execute(q).result_set()
                 for q, s in zip(stream, sets))
 t = srv.telemetry()
@@ -205,20 +207,20 @@ def _calibration():
 
 # ---------------------------------------------------------------------- #
 def run():
-    g, pool = _workload()
-    oracle_engine = make_engine(g, "rdf_h")
+    ds, pool = _workload()
+    oracle_engine = ds.engine("rdf_h")
     oracle = _result_sets(oracle_engine, pool)
     results = {"scale": SCALE, "n_templates": N_TEMPLATES,
                "n_stream": N_STREAM, "smoke": SMOKE}
 
-    results["cold_warm"] = _cold_warm(g, pool, oracle)
+    results["cold_warm"] = _cold_warm(ds, pool, oracle)
     cw = results["cold_warm"]
     assert cw["identical_result_sets"], "cold/warm result sets diverged"
     yield ("serve.cold_warm", cw["warm_median_ms"] * 1e3,
            f"cold/warm={cw['speedup']:.1f}x "
            f"identical={cw['identical_result_sets']}")
 
-    results["batched_serial"] = _batched_serial(g, pool, oracle)
+    results["batched_serial"] = _batched_serial(ds, pool, oracle)
     bs = results["batched_serial"]
     assert bs["identical_result_sets"], "batched/serial result sets diverged"
     yield ("serve.batched", 1e6 / bs["batched"]["qps"],

@@ -5,7 +5,7 @@ and run template queries through every engine variant.
 """
 import time
 
-from repro.core import compute_stats, make_engine
+from repro.core import Dataset
 from repro.data import dblp_like, random_query
 from repro.serve import QueryServer
 
@@ -17,7 +17,10 @@ def main():
           f"avg degree {g.avg_degree:.2f}")
 
     print("== 2. dataset evaluation metrics (paper §5) ==")
-    st = compute_stats(g)
+    # Dataset owns everything derived from the graph: stats, the NI
+    # index, signatures, and a (digest, version) identity for caches
+    ds = Dataset.build(g, variant="rdf_h")
+    st = ds.stats
     print(f"   coherence={st.coherence:.3f}  specialty={st.specialty:.1f}  "
           f"diversity={st.diversity}")
     print("   (high coherence + low specialty + low diversity would predict "
@@ -27,7 +30,8 @@ def main():
     q = random_query(g, size=6, seed=11)
     print(f"   keywords: {q.keywords}")
     for variant in ("stwig+", "spath_ni2", "h2", "h3", "hvc", "rdf_h"):
-        eng = make_engine(g, variant, stats=st)
+        # each variant gets the NI depth/shape it needs
+        eng = Dataset.build(g, variant=variant).engine(variant)
         eng.execute(q)                      # warm jit caches
         t0 = time.perf_counter()
         res = eng.execute(q)
@@ -37,7 +41,7 @@ def main():
               f"join_work={res.stats.join_work + res.stats.dtree_work}")
 
     print("== 4. the RDF-h planner decision ==")
-    eng = make_engine(g, "rdf_h", stats=st)
+    eng = ds.engine("rdf_h")
     # Joins default to join_impl="auto": the cost model picks nested-loop,
     # fused sort-merge, or the radix hash join per table pair (radix wins
     # when a large probe side meets a small build side on a single-column
@@ -51,7 +55,7 @@ def main():
               f"-> use_check={plan.use_check}")
 
     print("== 5. serving: plan cache makes repeat templates cheap ==")
-    srv = QueryServer(g, stats=st)
+    srv = QueryServer(ds)
     for label in ("cold", "warm", "warm"):
         t0 = time.perf_counter()
         r = srv.query(q)

@@ -8,18 +8,19 @@ connection-edge query evaluated through the NI index.
 """
 import time
 
-from repro.core import compute_stats, make_engine
+from repro.core import Dataset
 from repro.core.query import QueryTemplate, QueryEdge, ConnectionEdge
 from repro.data import lubm_like, dblp_like, random_query
 
 
 def workload(name, g):
-    st = compute_stats(g)
+    ds = Dataset.build(g, variant="spath_ni2")   # d=2 NI serves all three
+    st = ds.stats
     print(f"-- {name}: coherence={st.coherence:.3f} "
           f"specialty={st.specialty:.1f} diversity={st.diversity}")
-    never = make_engine(g, "stwig+", stats=st)
-    always = make_engine(g, "spath_ni2", stats=st)
-    hybrid = make_engine(g, "rdf_h", stats=st)
+    never = ds.engine("stwig+")
+    always = ds.engine("spath_ni2")
+    hybrid = ds.engine("rdf_h")
     tot = {"never": 0.0, "always": 0.0, "hybrid": 0.0}
     pruned = kept = 0
     for s in range(6):
@@ -52,7 +53,7 @@ def connection_edge_demo(g):
         edges=[QueryEdge(0, 1, pa), QueryEdge(2, 3, pa)],
         connections=[ConnectionEdge(0, 2, max_dist=4)],
     )
-    eng = make_engine(g, "h3")
+    eng = Dataset.build(g, variant="h3").engine("h3")
     t0 = time.perf_counter()
     r = eng.execute(q)
     print(f"   authors: {a1!r} / {a2!r}")

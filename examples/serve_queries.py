@@ -37,6 +37,7 @@ import json
 
 import numpy as np
 
+from repro.core import Dataset
 from repro.data import DATASETS, random_query
 from repro.serve import GovernorConfig, QueryServer, ServingError
 
@@ -68,6 +69,10 @@ def main():
                          "during the stream: traffic is served exactly "
                          "through the degradation ladder (implies "
                          "--governed)")
+    ap.add_argument("--delta", action="store_true",
+                    help="after the stream, apply a triple delta to the "
+                         "live server (apply_delta) and show warm-state "
+                         "migration plus the exact-repeat result cache")
     ap.add_argument("--snapshot", metavar="PATH", default=None,
                     help="after the stream, save learned state to PATH, "
                          "restore it into a fresh server, and replay one "
@@ -87,7 +92,9 @@ def main():
 
     print(f"== build {args.dataset} graph (scale={args.scale}) ==")
     g = DATASETS[args.dataset](scale=args.scale, seed=1)
-    print(f"   {g.num_nodes} nodes, {g.num_edges} triples")
+    ds = Dataset.build(g, variant="rdf_h")
+    print(f"   {g.num_nodes} nodes, {g.num_edges} triples  "
+          f"(dataset {ds.cache_key})")
 
     print(f"== template pool: {args.templates} templates ==")
     pool = [random_query(g, size=args.size, seed=100 + i,
@@ -117,7 +124,11 @@ def main():
     if args.trace is not None:
         from repro.obs import Tracer
         srv_kw["tracer"] = Tracer(max_traces=args.queries + 16)
-    srv = QueryServer(g, batching=not args.no_batch,
+    if args.delta:
+        # exact repeats after the delta should be served from stored
+        # rows without touching the engine
+        srv_kw["result_cache_size"] = 64
+    srv = QueryServer(ds, batching=not args.no_batch,
                       calibrate=not args.no_calibrate, **srv_kw)
     print(f"== serve {args.queries} queries "
           f"(zipf alpha={args.zipf}, batching={srv.batching}, "
@@ -186,13 +197,52 @@ def main():
             print(f"-- template {i} --")
             print(srv.explain(q))
 
+    if args.delta:
+        print("== delta ingest: mutate the live dataset ==")
+        lab, prd = g.labels, g.predicates
+        k = max(6, g.num_edges // 200)
+        rng2 = np.random.default_rng(args.seed + 1)
+        # deletable = edges whose endpoints stay mentioned afterwards
+        # (dropping a node's last edge would renumber ids => full rebuild)
+        subj = np.bincount(g.src, minlength=g.num_nodes)
+        ment = subj + np.bincount(g.dst, minlength=g.num_nodes)
+        safe = np.flatnonzero((subj[g.src] >= 2) & (ment[g.src] >= 3)
+                              & (ment[g.dst] >= 3))
+        pick = rng2.choice(g.num_edges, size=2 * k, replace=False)
+        dels = rng2.choice(safe, size=min(k, safe.size), replace=False)
+        deletes = [(lab[g.src[i]], prd[g.pred[i]], lab[g.dst[i]])
+                   for i in dels]
+        # inserts recombine subject/object pairs within one predicate so
+        # node kinds stay consistent and the incremental path can run
+        inserts = [(lab[g.src[i]], prd[g.pred[i]], lab[g.dst[j]])
+                   for i, j in zip(pick[k:], np.roll(pick[k:], 1))
+                   if g.pred[i] == g.pred[j]]
+        q0 = pool[0]
+        srv.query(q0)                        # warm an exact-repeat entry
+        info = srv.apply_delta(inserts, deletes)
+        print(f"   {len(inserts)} inserts / {len(deletes)} deletes -> "
+              f"mode={info['mode']}, now {info['dataset_id']}")
+        print(f"   plans kept={info['plans_kept']} "
+              f"invalidated={info['plans_invalidated']} "
+              f"dropped={info['plans_dropped']}; "
+              f"reach entries dropped={info['reach_dropped']}; "
+              f"results kept={info['results_kept']} "
+              f"dropped={info['results_dropped']}")
+        srv.query(q0)                        # first post-delta execution
+        r2 = srv.query(q0)                   # exact repeat
+        rcache = srv.telemetry()["result_cache"]
+        print(f"   repeat after delta: result_cache_hit="
+              f"{r2.stats.result_cache_hit} "
+              f"(cache: {rcache['hits']} hits, "
+              f"{rcache['entries']} entries, {rcache['bytes']}B)")
+
     if args.snapshot is not None:
         import time
         print(f"== snapshot round trip: {args.snapshot} ==")
         manifest = srv.save_snapshot(args.snapshot)
         print(f"   saved {manifest['plans']} plans, "
               f"{manifest['bytes']}B (format v{manifest['format_version']})")
-        srv2 = QueryServer(g, batching=not args.no_batch,
+        srv2 = QueryServer(srv.dataset, batching=not args.no_batch,
                            calibrate=not args.no_calibrate, **srv_kw)
         t0 = time.perf_counter()
         srv2.restore_snapshot(args.snapshot)

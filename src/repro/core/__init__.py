@@ -1,6 +1,9 @@
 """RDF-ℏ core: the paper's contribution as a composable JAX library."""
-from .graph import RDFGraph, IDMap, RESOURCE, LITERAL, REL, ATTR
-from .ni_index import NIIndex, NIEntry, build_ni_index, vertex_cover_2approx
+from .graph import RDFGraph, IDMap, RESOURCE, LITERAL, REL, ATTR, csr_patch
+from .ni_index import NIIndex, NIEntry, build_ni_index, \
+    vertex_cover_2approx, khop_rows, patch_entry
+from .dataset import (Dataset, ENGINE_VARIANTS, content_digest,
+                      interval_footprint_hit)
 from .query import QueryTemplate, QueryEdge, ConnectionEdge, brute_force_match
 from .signature import build_requirements, check_interval_candidates
 from .decompose import DTree, decompose, join_order
@@ -16,7 +19,8 @@ from .connectivity import (connectivity_mask, reach_sets,
 from .stats import DatasetStats, compute_stats, predicate_selectivity, \
     literal_selectivity, coherence, relationship_specialty, \
     literal_diversity, connection_selectivity, expected_reach, \
-    endpoint_reach, node_degrees
+    endpoint_reach, node_degrees, coherence_terms, coherence_from_terms, \
+    specialty_terms, specialty_from_terms
 from .planner import Thresholds, CostModel, PlanDecision, decide, \
     neighborhood_selectivity, tune_thresholds, JoinEstimator, \
     ReplayEstimator, CapEstimate, JoinPlan, PlannedStep, plan_table_joins, \

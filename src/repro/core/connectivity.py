@@ -247,6 +247,50 @@ class ReachCache:
         self._account(key)
         self._touch(key)
 
+    # ------------------------------------------------------------------ #
+    def clear(self) -> int:
+        """Drop every entry (full-rebuild delta: all ids may have moved).
+        Returns the number of entries dropped."""
+        n = len(self._lru)
+        self.sets.clear()
+        self.arrays.clear()
+        self._lru.clear()
+        self._nbytes.clear()
+        self.total_bytes = 0
+        self.evictions += n
+        return n
+
+    def invalidate_delta(self, endpoints: np.ndarray) -> int:
+        """Drop entries an incremental Dataset delta may have changed.
+
+        A changed edge u→v can only alter reach(n, h, sign) if the edge's
+        near endpoint was already within h-1 hops of n — and anything
+        within h-1 hops is in the stored reach set (or is n itself).  So
+        an entry is stale only if {n} ∪ stored set intersects the delta's
+        edge endpoints; everything else is provably unchanged and stays.
+        Returns the number of entries dropped."""
+        eps = set(int(x) for x in np.asarray(endpoints).ravel())
+        if not eps:
+            return 0
+        stale = []
+        for key in self._lru:
+            node = int(key[0])
+            if node in eps:
+                stale.append(key)
+                continue
+            s = self.sets.get(key)
+            if s is not None:
+                if not eps.isdisjoint(s):
+                    stale.append(key)
+                continue
+            a = self.arrays.get(key)
+            if a is not None and len(a) and np.isin(a, list(eps)).any():
+                stale.append(key)
+        for key in stale:
+            self._evict(key)
+            del self._lru[key]
+        return len(stale)
+
 
 def _exact_reach(graph: RDFGraph, ni: NIIndex, node: int, hops: int,
                  sign: int, cache: ReachCache | None = None) -> set:

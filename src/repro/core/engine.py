@@ -34,13 +34,15 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 import jax.numpy as jnp
 
-from .graph import RDFGraph, IDMap
-from .ni_index import NIIndex, build_ni_index
+from .graph import RDFGraph
+from .ni_index import NIIndex
+from .dataset import Dataset, ENGINE_VARIANTS, interval_footprint_hit
 from .query import QueryTemplate, ConnectionEdge
 from .signature import (build_requirements, check_interval_candidates,
                         build_bloom, bloom_prefilter)
@@ -56,8 +58,7 @@ from .planner import (Thresholds, CostModel, PlanDecision, decide,
                       JoinEstimator, ReplayEstimator,
                       plan_table_joins, plan_connections, ConnFeatures,
                       choose_connection_impl)
-from .stats import (DatasetStats, compute_stats, connection_selectivity,
-                    endpoint_reach)
+from .stats import DatasetStats, connection_selectivity, endpoint_reach
 from ..obs.trace import NULL_TRACER
 
 
@@ -100,6 +101,7 @@ class QueryStats:
     conn_time: float = 0.0
     total_time: float = 0.0
     cache_hit: bool = False             # executed from a warm PreparedQuery
+    result_cache_hit: bool = False      # served from the ResultCache
     join_work: int = 0                  # Σ |A|*|B| over joins (work proxy)
     dtree_work: int = 0                 # Σ D-tree candidate rows generated
     # join planner telemetry
@@ -135,7 +137,7 @@ class QueryStats:
     # consume this instead of re-plucking fields ad hoc; a schema test
     # pins the key set, so extend it deliberately.
     _SCALAR_FIELDS = (
-        "used_check", "truncated", "cache_hit",
+        "used_check", "truncated", "cache_hit", "result_cache_hit",
         "candidates_before", "candidates_after",
         "prepare_time", "check_time", "match_time", "conn_time",
         "total_time",
@@ -257,21 +259,58 @@ class PreparedQuery:
     def warm(self) -> bool:
         return self.executions > 0
 
+    def reset_learned(self) -> None:
+        """Drop everything the first execution learned (masks, join
+        orders, join_seq) while keeping the template-level fields.  Used
+        when a revalidation decides the learned state can't be replayed —
+        a flipped §4.3 decision, or a delta that touched the template's
+        candidate footprint."""
+        self.masks = None
+        self.masks_host = None
+        self.comp_orders = {}
+        self.comp_costs = {}
+        self.conn_order = None
+        self.conn_costs = (0.0, 0.0)
+        self.conn_impls = None
+        self.join_seq = []
+        self.join_est_seq = []
+        self.executions = 0
+
 
 class Engine:
-    def __init__(self, graph: RDFGraph, ni: NIIndex,
+    def __init__(self, dataset: "Dataset | RDFGraph",
+                 ni: "NIIndex | EngineConfig | None" = None,
                  cfg: EngineConfig | None = None,
                  stats: DatasetStats | None = None):
-        self.graph = graph
-        self.ni = ni
+        """Primary form: ``Engine(dataset, cfg)`` over a
+        ``repro.core.Dataset``.  The legacy ``Engine(graph, ni, cfg,
+        stats)`` form still works and wraps its pieces in a version-0
+        Dataset."""
+        if isinstance(dataset, Dataset):
+            if isinstance(ni, EngineConfig) and cfg is None:
+                cfg = ni
+                ni = None
+            if ni is not None or stats is not None:
+                raise ValueError(
+                    "pass ni/stats via the Dataset, not alongside it")
+            ds = dataset
+        else:
+            if not isinstance(ni, NIIndex):
+                raise TypeError("Engine(graph, ...) requires an NI index; "
+                                "construct a repro.core.Dataset instead")
+            ds = Dataset.build(dataset, ni=ni, stats=stats)
+        self.dataset = ds
+        self.graph = ds.graph
+        self.ni = ds.ni
         self.cfg = cfg or EngineConfig()
-        self.idmap = IDMap(graph)
-        self.stats = stats if stats is not None else compute_stats(graph)
+        self.idmap = ds.idmap
+        self.stats = ds.stats
         self._dev_cache: dict = {}      # device-resident NI tensors
         self._bloom = None              # lazy 1-hop bloom signatures
-        # optional server-owned reach cache shared across queries (the
-        # dataset is immutable, so reach sets never go stale); when None
-        # each execution gets its own per-query cache as before
+        # optional server-owned reach cache shared across queries (reach
+        # sets go stale only via Dataset.apply_delta, which the serving
+        # tier pairs with ReachCache.invalidate_delta); when None each
+        # execution gets its own per-query cache as before
         self.reach_cache: ReachCache | None = None
         # observability: the serving layer installs its Tracer here; the
         # default no-op tracer keeps bare-engine hot paths at ~zero cost
@@ -318,6 +357,7 @@ class Engine:
         from state a faulty primary run may have touched, so the sibling
         falls back to per-query reach caches."""
         eng = object.__new__(Engine)
+        eng.dataset = self.dataset
         eng.graph = self.graph
         eng.ni = self.ni
         eng.cfg = cfg
@@ -346,21 +386,33 @@ class Engine:
             decision = decide(pq.query, pq.trees_per_comp, pq.cand_sizes,
                               self.stats, cfg.thresholds, k=cfg.d_check)
             if decision.use_check != pq.use_check:
-                pq.masks = None
-                pq.masks_host = None
-                pq.comp_orders = {}
-                pq.comp_costs = {}
-                pq.conn_order = None
-                pq.conn_costs = (0.0, 0.0)
-                pq.conn_impls = None
-                pq.join_seq = []
-                pq.join_est_seq = []
-                pq.executions = 0
+                pq.reset_learned()
                 kept = False
             pq.decision = decision
             pq.use_check = decision.use_check
         pq.version = version
         return kept
+
+    def revalidate_delta(self, pq: PreparedQuery,
+                         touched: np.ndarray | None) -> bool:
+        """Refresh a PreparedQuery after a Dataset delta (same digest
+        lineage, bumped version, stable label space).
+
+        The only learned state a data change can make *wrong* is the
+        candidate masks — every pass bit is a function of the NI rows of
+        the candidates in the template's intervals, and stale join
+        orders/capacities/strategies self-heal (planned_join retries on
+        overflow, ReplayEstimator falls back to analytic estimates).  So
+        the plan survives intact iff no touched node falls inside any of
+        its candidate intervals; otherwise the learned state resets and
+        the next execution re-learns against the new data.  Returns True
+        iff the learned state survived."""
+        iv_pairs = [(int(pq.iv[q, 0]), int(pq.iv[q, 1]))
+                    for q in range(pq.query.num_nodes)]
+        if interval_footprint_hit(iv_pairs, touched):
+            pq.reset_learned()
+            return False
+        return True
 
     # -------------------------------------------------------------- #
     def _candidate_masks(self, pq: PreparedQuery) -> tuple:
@@ -904,27 +956,42 @@ class Engine:
 
 
 # ---------------------------------------------------------------------- #
-# Named engine variants (paper §6).
+# Named engine variants (paper §6) — table lives in dataset.ENGINE_VARIANTS
+# so Dataset.build can size the NI index without importing this module.
 # ---------------------------------------------------------------------- #
-def make_engine(graph: RDFGraph, variant: str = "rdf_h",
+def make_engine(dataset: "Dataset | RDFGraph", variant: str = "rdf_h",
                 ni: NIIndex | None = None,
                 stats: DatasetStats | None = None,
                 thresholds: Thresholds | None = None,
                 impl: str = "auto") -> Engine:
-    th = thresholds or Thresholds()
-    builders = {
-        "stwig+":     dict(d=1, policy="never",     var="full", d_check=1),
-        "spath_ni2":  dict(d=2, policy="always",    var="full", d_check=2),
-        "h2":         dict(d=2, policy="selective", var="full", d_check=2),
-        "h3":         dict(d=3, policy="selective", var="full", d_check=3),
-        "hvc":        dict(d=2, policy="selective", var="vc",   d_check=2),
-        "rdf_h":      dict(d=2, policy="selective", var="full", d_check=2),
-    }
-    if variant not in builders:
+    """Engine for a named paper variant over a ``Dataset``.
+
+    Passing a bare ``RDFGraph`` is deprecated: it wraps the graph in a
+    version-0 Dataset (building the variant's NI index and stats) and
+    emits a DeprecationWarning.  Construct the Dataset once and reuse it —
+    that is also what unlocks ``apply_delta`` and the version-scoped
+    serving caches."""
+    if variant not in ENGINE_VARIANTS:
         raise ValueError(f"unknown variant {variant!r}")
-    b = builders[variant]
-    if ni is None:
-        ni = build_ni_index(graph, d_max=b["d"], variant=b["var"])
+    b = ENGINE_VARIANTS[variant]
+    th = thresholds or Thresholds()
     cfg = EngineConfig(check_policy=b["policy"], d_check=b["d_check"],
                        impl=impl, thresholds=th)
-    return Engine(graph, ni, cfg, stats=stats)
+    if isinstance(dataset, Dataset):
+        if ni is not None or stats is not None:
+            raise ValueError("pass ni/stats via the Dataset, "
+                             "not alongside it")
+        if dataset.ni.d_max < b["d_check"]:
+            raise ValueError(
+                f"variant {variant!r} checks {b['d_check']} hops but the "
+                f"Dataset's NI index only stores {dataset.ni.d_max}")
+        if b["var"] == "vc" and dataset.ni.variant != "vc":
+            raise ValueError(f"variant {variant!r} needs a vertex-cover NI "
+                             f"index (Dataset.build(ni_variant='vc'))")
+        return Engine(dataset, cfg)
+    warnings.warn(
+        "make_engine(graph, ...) is deprecated; build a repro.core.Dataset "
+        "(Dataset.build(graph, variant=...)) and pass that instead",
+        DeprecationWarning, stacklevel=2)
+    ds = Dataset.build(dataset, variant=variant, ni=ni, stats=stats)
+    return Engine(ds, cfg)

@@ -37,6 +37,48 @@ def _csr(num_nodes: int, key: np.ndarray, nbr: np.ndarray, pred: np.ndarray):
     return indptr, nbr.astype(np.int32), pred.astype(np.int32)
 
 
+def csr_patch(csr, num_nodes: int, num_preds: int,
+              del_key: np.ndarray, del_nbr: np.ndarray, del_pred: np.ndarray,
+              ins_key: np.ndarray, ins_nbr: np.ndarray, ins_pred: np.ndarray):
+    """Patch a `_csr` result for an edge delta without re-sorting kept rows.
+
+    Deletes remove EVERY row matching a (key, nbr, pred) triple; inserts are
+    merge-placed after any equal-(key, nbr) kept rows.  The output is
+    byte-identical to `_csr` over the post-delta edge arrays laid out as
+    old-kept-order followed by appended inserts (lexsort is stable, so kept
+    rows keep their relative order and appended inserts land after their
+    equals).  Returns None when the int64 packing used for matching could
+    overflow — callers then rebuild via `_csr`.
+    """
+    n1 = np.int64(num_nodes + 1)
+    p1 = np.int64(num_preds + 1)
+    if (np.log2(float(n1)) * 2 + np.log2(float(p1))) >= 62:
+        return None
+    indptr, nbr, pred = csr
+    key = np.repeat(np.arange(num_nodes, dtype=np.int64), np.diff(indptr))
+    if len(del_key):
+        pack = (key * n1 + nbr.astype(np.int64)) * p1 + pred.astype(np.int64)
+        dpack = (del_key.astype(np.int64) * n1 + del_nbr.astype(np.int64)) \
+            * p1 + del_pred.astype(np.int64)
+        keep = ~np.isin(pack, dpack)
+        key, nbr, pred = key[keep], nbr[keep], pred[keep]
+    if len(ins_key):
+        order = np.lexsort((ins_nbr, ins_key))   # stable, matches _csr
+        ik = ins_key[order].astype(np.int64)
+        inb = ins_nbr[order]
+        ip = ins_pred[order]
+        kept_sortkey = key * n1 + nbr.astype(np.int64)
+        pos = np.searchsorted(kept_sortkey, ik * n1 + inb.astype(np.int64),
+                              side="right")
+        nbr = np.insert(nbr, pos, inb)
+        pred = np.insert(pred, pos, ip)
+        key = np.insert(key, pos, ik)
+    indptr2 = np.zeros(num_nodes + 1, dtype=np.int64)
+    np.add.at(indptr2, key + 1, 1)
+    np.cumsum(indptr2, out=indptr2)
+    return indptr2, nbr.astype(np.int32), pred.astype(np.int32)
+
+
 @dataclass
 class RDFGraph:
     """Immutable array-form RDF graph.
@@ -139,6 +181,13 @@ class RDFGraph:
             predicates=predicates,
             pred_kind=pred_kind,
         )
+
+    # ------------------------------------------------------------------ #
+    def triples(self) -> list:
+        """(subject, predicate, object) string triples in edge order — the
+        exact list `from_triples` would round-trip back to this graph."""
+        return list(zip(self.labels[self.src], self.predicates[self.pred],
+                        self.labels[self.dst]))
 
     # ------------------------------------------------------------------ #
     def size_bytes(self) -> int:

@@ -117,6 +117,82 @@ def _khop_sets(indptr: np.ndarray, nbr: np.ndarray, d_max: int,
     return hops
 
 
+def khop_rows(csr, d_max: int, nodes: np.ndarray):
+    """Exact k-hop lists for just ``nodes`` — row-for-row what `_khop_sets`
+    would compute for them over the same CSR (same unique/union1d/setdiff1d
+    pipeline, so a patched entry equals a rebuilt one).
+
+    Returns ``rows[d-1][i]`` = ids at distance exactly d from ``nodes[i]``.
+    """
+    indptr, nbr, _ = csr
+    out = [[None] * len(nodes) for _ in range(d_max)]
+    for i, node in enumerate(nodes):
+        n = int(node)
+        d1 = np.unique(nbr[indptr[n]:indptr[n + 1]])
+        out[0][i] = d1
+        if d_max == 1:
+            continue
+        seen_arr = np.union1d(np.asarray([n], dtype=nbr.dtype), d1)
+        frontier = d1
+        for d in range(1, d_max):
+            if frontier.size == 0:
+                out[d][i] = np.empty(0, dtype=nbr.dtype)
+                frontier = out[d][i]
+                continue
+            starts, ends = indptr[frontier], indptr[frontier + 1]
+            sizes = ends - starts
+            if sizes.sum() == 0:
+                nxt = np.empty(0, dtype=nbr.dtype)
+            else:
+                idx = np.concatenate([np.arange(s, e)
+                                      for s, e in zip(starts, ends)])
+                nxt = np.unique(nbr[idx])
+                nxt = np.setdiff1d(nxt, seen_arr, assume_unique=True)
+            out[d][i] = nxt
+            seen_arr = np.union1d(seen_arr, nxt)
+            frontier = nxt
+    return out
+
+
+def patch_entry(entry: "NIEntry", rows: np.ndarray, lists, m: int) -> "NIEntry":
+    """Copy-on-write row update: a new NIEntry whose arrays are copies of
+    ``entry``'s with row ``rows[i]`` rewritten from ``lists[i]``.
+
+    Capacity is kept fixed — a list longer than the entry's cap truncates
+    with overflow=True, which every check treats as an automatic pass
+    (sound: prune only on certain information).  Per-row bin summaries are
+    recomputed exactly as `_pack` does.
+    """
+    ids = entry.ids.copy()
+    count = entry.count.copy()
+    overflow = entry.overflow.copy()
+    bl = entry.bin_lo.copy()
+    bh = entry.bin_hi.copy()
+    cap = entry.cap
+    nbins = bl.shape[1]
+    i32max = np.iinfo(np.int32).max
+    for r, arr in zip(rows, lists):
+        r = int(r)
+        c = int(arr.shape[0])
+        count[r] = c
+        overflow[r] = c > cap
+        k = min(c, cap)
+        ids[r, :k] = arr[:k]
+        ids[r, k:] = INVALID
+        row = ids[r]
+        for b in range(nbins):
+            blk = row[b * m:(b + 1) * m]
+            valid = blk >= 0
+            if valid.any():
+                bl[r, b] = blk[valid].min()
+                bh[r, b] = blk[valid].max()
+            else:
+                bl[r, b] = i32max
+                bh[r, b] = INVALID
+    return NIEntry(ids=ids, count=count, overflow=overflow,
+                   bin_lo=bl, bin_hi=bh)
+
+
 def _pack(lists, cap: int, m: int) -> NIEntry:
     n = len(lists)
     ids = np.full((n, cap), INVALID, dtype=np.int32)

@@ -147,18 +147,24 @@ def node_degrees(graph: RDFGraph) -> tuple[np.ndarray, np.ndarray]:
 
 def literal_selectivity(graph: RDFGraph, ns=(1, 2, 3, 4, 5, 6, 8),
                         sample: int = 20000,
-                        seed: int = 0) -> dict[int, dict[int, float]]:
+                        seed: int = 0,
+                        preds=None) -> dict[int, dict[int, float]]:
     """f_{n,pa}: avg #literals of pa matching a prefix n-gram, over the set
-    of prefix n-grams of pa's literals, normalized by #unique literals."""
-    rng = np.random.default_rng(seed)
+    of prefix n-grams of pa's literals, normalized by #unique literals.
+
+    preds: optional predicate-id subset to compute.  The sampling rng is
+    seeded per predicate, so a single predicate's table is identical
+    whether computed alone (delta patching) or in a full pass.
+    """
     out: dict[int, dict[int, float]] = {}
-    for pa in range(graph.num_predicates):
+    for pa in (range(graph.num_predicates) if preds is None else preds):
         if graph.pred_kind[pa] != ATTR:
             continue
         mask = graph.pred == pa
         lits = np.unique(graph.dst[mask])
         labels = graph.labels[lits]
         if len(labels) > sample:
+            rng = np.random.default_rng((seed, int(pa)))
             labels = rng.choice(labels, size=sample, replace=False)
         if len(labels) == 0:
             continue
@@ -181,26 +187,21 @@ def _find_type_predicate(graph: RDFGraph) -> int | None:
     return None
 
 
-def coherence(graph: RDFGraph, type_pred: int | None = None) -> float:
-    """Duan et al. SIGMOD'11 structuredness: coverage CV(T) = fraction of
-    (instance, predicate) slots filled, weighted by (|P(T)| + |I(T)|)."""
-    if type_pred is None:
-        type_pred = _find_type_predicate(graph)
-    if type_pred is None:
-        return 0.0
+def coherence_terms(graph: RDFGraph, type_pred: int,
+                    types=None) -> dict[int, tuple[float, float]]:
+    """Per-type coherence terms {type_id: (weight, coverage)}.
+
+    ``types`` restricts computation to a subset (delta patching); types with
+    no members or no member edges contribute no term, matching the skips of
+    the historical single-pass loop."""
     tmask = graph.pred == type_pred
     inst, typ = graph.src[tmask], graph.dst[tmask]
     # predicates set per instance (excluding type edges)
     emask = ~tmask
     esrc, epred = graph.src[emask], graph.pred[emask]
 
-    cov_num: dict[int, float] = {}
-    weights_n: dict[int, float] = {}
-    total_w = 0.0
-    score = 0.0
-    types = np.unique(typ)
-    # instance -> row index
-    for t in types:
+    terms: dict[int, tuple[float, float]] = {}
+    for t in (np.unique(typ) if types is None else types):
         members = inst[typ == t]
         if len(members) == 0:
             continue
@@ -214,9 +215,32 @@ def coherence(graph: RDFGraph, type_pred: int | None = None) -> float:
         oc = np.bincount(pairs[0], minlength=len(ps))
         cv = oc.sum() / (len(ps) * len(members))
         w = len(ps) + len(members)
+        terms[int(t)] = (float(w), float(cv))
+    return terms
+
+
+def coherence_from_terms(terms: dict[int, tuple[float, float]]) -> float:
+    """Weighted sum over terms in ascending type order — the same
+    accumulation order (np.unique is sorted) and arithmetic as the
+    single-pass loop, so patched and from-scratch coherence agree
+    bit-for-bit."""
+    total_w = 0.0
+    score = 0.0
+    for t in sorted(terms):
+        w, cv = terms[t]
         score += w * cv
         total_w += w
     return float(score / total_w) if total_w else 0.0
+
+
+def coherence(graph: RDFGraph, type_pred: int | None = None) -> float:
+    """Duan et al. SIGMOD'11 structuredness: coverage CV(T) = fraction of
+    (instance, predicate) slots filled, weighted by (|P(T)| + |I(T)|)."""
+    if type_pred is None:
+        type_pred = _find_type_predicate(graph)
+    if type_pred is None:
+        return 0.0
+    return coherence_from_terms(coherence_terms(graph, type_pred))
 
 
 def _pearson_kurtosis(x: np.ndarray) -> float:
@@ -231,14 +255,14 @@ def _pearson_kurtosis(x: np.ndarray) -> float:
     return float(m4 / (v * v))
 
 
-def relationship_specialty(graph: RDFGraph) -> float:
-    """Weighted Pearson-kurtosis of per-node occurrence counts of each
-    relationship predicate.  Hubs can sit on either end (e.g. a prolific
-    author is the *object* of many `author` edges), so we take the max of
-    subject-side and object-side kurtosis per predicate."""
-    total = 0.0
-    wsum = 0.0
-    for p in range(graph.num_predicates):
+def specialty_terms(graph: RDFGraph,
+                    preds=None) -> dict[int, tuple[float, float]]:
+    """Per-REL-predicate specialty terms {pred_id: (count, kurtosis)}.
+
+    ``preds`` restricts computation to a subset (delta patching); non-REL
+    or empty predicates contribute no term."""
+    terms: dict[int, tuple[float, float]] = {}
+    for p in (range(graph.num_predicates) if preds is None else preds):
         if graph.pred_kind[p] != REL:
             continue
         mask = graph.pred == p
@@ -249,9 +273,28 @@ def relationship_specialty(graph: RDFGraph) -> float:
             np.bincount(graph.src[mask]) > 0])
         ko = _pearson_kurtosis(np.bincount(graph.dst[mask]).astype(float)[
             np.bincount(graph.dst[mask]) > 0])
-        total += cnt * max(ks, ko)
+        terms[int(p)] = (float(cnt), max(ks, ko))
+    return terms
+
+
+def specialty_from_terms(terms: dict[int, tuple[float, float]]) -> float:
+    """Weighted mean over terms in ascending predicate order — same
+    accumulation order and arithmetic as the single-pass loop."""
+    total = 0.0
+    wsum = 0.0
+    for p in sorted(terms):
+        cnt, kurt = terms[p]
+        total += cnt * kurt
         wsum += cnt
     return float(total / wsum) if wsum else 0.0
+
+
+def relationship_specialty(graph: RDFGraph) -> float:
+    """Weighted Pearson-kurtosis of per-node occurrence counts of each
+    relationship predicate.  Hubs can sit on either end (e.g. a prolific
+    author is the *object* of many `author` edges), so we take the max of
+    subject-side and object-side kurtosis per predicate."""
+    return specialty_from_terms(specialty_terms(graph))
 
 
 def literal_diversity(graph: RDFGraph, m_sample: int = 100_000,

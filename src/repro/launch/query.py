@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from ..core import make_engine, compute_stats, tune_thresholds, Thresholds
+from ..core import Dataset, tune_thresholds, Thresholds
 from ..data import DATASETS, random_query
 
 
@@ -31,7 +31,8 @@ def main():
     args = ap.parse_args()
 
     g = DATASETS[args.dataset](scale=args.scale, seed=1)
-    st = compute_stats(g)
+    ds = Dataset.build(g, variant=args.variant)
+    st = ds.stats
     print(f"dataset={args.dataset} triples={g.num_edges} "
           f"coherence={st.coherence:.3f} specialty={st.specialty:.1f}")
 
@@ -41,7 +42,7 @@ def main():
                   for i in range(4)]
 
         def cost(q, th):
-            eng = make_engine(g, "rdf_h", stats=st, thresholds=th)
+            eng = ds.engine(args.variant, thresholds=th)
             t0 = time.perf_counter()
             eng.execute(q)
             return time.perf_counter() - t0
@@ -49,7 +50,7 @@ def main():
         print(f"tuned thresholds: iter={thresholds.tau_iter} "
               f"join={thresholds.tau_join} sel={thresholds.tau_sel}")
 
-    eng = make_engine(g, args.variant, stats=st, thresholds=thresholds)
+    eng = ds.engine(args.variant, thresholds=thresholds)
     queries = [random_query(g, size=args.size, seed=100 + i)
                for i in range(args.queries)]
     # warm jit caches on one query

@@ -22,7 +22,12 @@ learn from its own executions.  This package is that setting:
                     control, and the per-fingerprint circuit breaker.
   * `server`      — the user-facing `QueryServer` (submit / submit_many,
                     sync + async result futures, LRU-bounded plan and
-                    reach caches, p50/p99 latency + cache-hit telemetry).
+                    reach caches, p50/p99 latency + cache-hit telemetry,
+                    and `apply_delta` for in-place dataset version bumps
+                    with warm-state migration).
+  * `result_cache`— opt-in exact-repeat result rows keyed by versioned
+                    dataset id + template fingerprint, migrated across
+                    deltas by interval-footprint proof.
   * `snapshot`    — warm-restart durability: versioned, checksummed
                     serialization of all learned serving state
                     (calibration, rung memory, breaker, cached plans),
@@ -31,6 +36,7 @@ learn from its own executions.  This package is that setting:
 """
 from .plan_cache import (PreparedQuery, PlanCache, template_fingerprint,
                          canonicalize, prepare_cached, dataset_key)
+from .result_cache import ResultCache
 from .batching import ShapeBatcher, BatchTelemetry
 from .calibrate import Calibrator, Ewma
 from .governor import (Budget, BudgetExceeded, CircuitBreaker,
@@ -43,7 +49,8 @@ from .snapshot import SnapshotError, save_snapshot, restore_snapshot
 
 __all__ = [
     "PreparedQuery", "PlanCache", "template_fingerprint", "canonicalize",
-    "prepare_cached", "dataset_key", "ShapeBatcher", "BatchTelemetry",
+    "prepare_cached", "dataset_key", "ResultCache",
+    "ShapeBatcher", "BatchTelemetry",
     "Calibrator", "Ewma", "QueryServer", "ResultFuture",
     "Budget", "BudgetExceeded", "CircuitBreaker", "DegradationExhausted",
     "Governor", "GovernorConfig", "IncompleteFlushError", "LadderRung",

@@ -194,6 +194,14 @@ class Calibrator:
             del self.chronic_fps[:-64]
         self.version += 1
 
+    def note_delta(self) -> None:
+        """The dataset absorbed a delta: stats shifted, so the §4.3
+        decision baked into every cached plan may have flipped even
+        though no threshold moved.  Bumping the version routes each
+        cached entry through `Engine.revalidate` on its next use (and
+        lets the server re-decide eagerly during plan-cache migration)."""
+        self.version += 1
+
     def save_state(self) -> dict:
         """Serializable learned state (thresholds, scales, EWMAs) for
         warm-restart snapshots; restored by `load_state`."""

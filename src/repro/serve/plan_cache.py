@@ -18,8 +18,6 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
-import numpy as np
-
 from ..core.engine import Engine, MatchResult, PreparedQuery  # noqa: F401
 from ..core.query import QueryTemplate, QueryEdge, ConnectionEdge
 
@@ -166,7 +164,7 @@ def template_fingerprint(query: QueryTemplate) -> str:
     return canonicalize(query)[2]
 
 
-def dataset_key(graph) -> str:
+def dataset_key(dataset) -> str:
     """Cache key component identifying one loaded dataset by CONTENT.
 
     Keying on id(graph) would be a wrong-results trap for caches that
@@ -175,13 +173,16 @@ def dataset_key(graph) -> str:
     sizes).  The digest covers the FULL edge arrays — a sampled digest
     would re-open the same trap for graphs differing only outside the
     sample — at ~tens of ms per GB of edges, paid once per server.
-    Equal datasets sharing cache entries is a bonus."""
-    import hashlib
-    h = hashlib.sha1()
-    h.update(f"{graph.num_nodes}n-{graph.num_edges}e".encode())
-    for arr in (graph.src, graph.dst, graph.pred):
-        h.update(np.ascontiguousarray(arr).tobytes())
-    return h.hexdigest()[:16]
+    Equal datasets sharing cache entries is a bonus.
+
+    A `repro.core.Dataset` additionally carries a delta version, so its
+    key is the versioned ``digest:vN`` form (`Dataset.cache_key`): two
+    states of one mutable dataset never share cache entries.  A bare
+    graph keys to the plain content digest."""
+    from ..core.dataset import Dataset, content_digest
+    if isinstance(dataset, Dataset):
+        return dataset.cache_key
+    return content_digest(dataset)
 
 
 # ---------------------------------------------------------------------- #
@@ -252,6 +253,26 @@ class PlanCache:
         """((dataset_id, fingerprint), PreparedQuery) pairs in LRU order
         (least recent first) — snapshot serialization preserves it."""
         return list(self._entries.items())
+
+    def migrate(self, old_id: str, new_id: str,
+                revalidate=None) -> tuple[int, int]:
+        """Dataset-delta migration: move every entry keyed under `old_id`
+        to `new_id`, preserving their relative LRU order.  `revalidate`
+        (if given) is called with each PreparedQuery before the move and
+        may return False to drop the entry instead (counted in `drops`).
+        Returns (moved, dropped)."""
+        moved = dropped = 0
+        for (dsid, fp), pq in list(self._entries.items()):
+            if dsid != old_id:
+                continue
+            del self._entries[(dsid, fp)]
+            if revalidate is not None and revalidate(pq) is False:
+                self.drops += 1
+                dropped += 1
+                continue
+            self._entries[(new_id, fp)] = pq
+            moved += 1
+        return moved, dropped
 
     def snapshot(self) -> dict:
         total = self.hits + self.misses

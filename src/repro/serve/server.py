@@ -43,15 +43,18 @@ import time
 from collections import deque
 from dataclasses import replace
 
-from ..core.engine import Engine, EngineConfig, MatchResult, make_engine
+from ..core.engine import (Engine, EngineConfig, MatchResult, QueryStats,
+                           make_engine)
 from ..core.connectivity import ReachCache
+from ..core.dataset import Dataset
 from ..core.matching import _pow2
 from ..core.query import QueryTemplate
 from ..obs.trace import NULL_TRACER
 from ..obs.metrics import MetricsRegistry
 from ..obs.explain import render_explain
-from .plan_cache import (PlanCache, canonicalize, dataset_key,
+from .plan_cache import (PlanCache, canonicalize, dataset_key,  # noqa: F401
                          prepare_cached, remap_result)
+from .result_cache import ResultCache
 from .batching import ShapeBatcher
 from .calibrate import Calibrator
 from .governor import (Governor, GovernorConfig, BudgetExceeded,
@@ -114,7 +117,15 @@ class ResultFuture:
 
 
 class QueryServer:
-    """Serve template queries over one RDF graph.
+    """Serve template queries over one `repro.core.Dataset`.
+
+    Construct from a Dataset (`QueryServer(Dataset.build(graph, ...))`);
+    passing a bare graph still works as a deprecated shim that wraps it
+    in a version-0 Dataset.  `apply_delta` moves the server to the next
+    dataset version in place, migrating warm state (see its docstring).
+    `result_cache_size > 0` enables the exact-repeat ResultCache: a
+    repeated template on an unchanged dataset version is answered from
+    stored rows without any engine execution.
 
     calibrate=False freezes the thresholds/cost model at their configured
     values (A/B baseline); batching=False executes submissions one at a
@@ -134,12 +145,14 @@ class QueryServer:
     API compatibility; latency percentiles now come from the metrics
     registry's O(1)-memory log-bucketed histograms."""
 
-    def __init__(self, graph, variant: str = "rdf_h", ni=None, stats=None,
+    def __init__(self, dataset, variant: str = "rdf_h", ni=None, stats=None,
                  thresholds=None, cfg: EngineConfig | None = None,
                  impl: str = "auto",
                  plan_cache_size: int = 64,
                  reach_cache_size: int = 200_000,
                  reach_cache_bytes: int | None = None,
+                 result_cache_size: int = 0,
+                 result_cache_bytes: int | None = None,
                  calibrate: bool = True, batching: bool = True,
                  latency_window: int = 4096,
                  governor: GovernorConfig | None = None,
@@ -151,13 +164,20 @@ class QueryServer:
             if thresholds is not None or impl != "auto":
                 raise ValueError("pass either cfg or thresholds/impl, "
                                  "not both (cfg already carries them)")
-            if ni is None:
-                from ..core.ni_index import build_ni_index
-                ni = build_ni_index(graph, d_max=cfg.d_check)
-            self.engine = Engine(graph, ni, cfg, stats=stats)
+            if isinstance(dataset, Dataset):
+                if ni is not None or stats is not None:
+                    raise ValueError("pass ni/stats via the Dataset, "
+                                     "not alongside it")
+                self.engine = Engine(dataset, cfg)
+            else:
+                if ni is None:
+                    from ..core.ni_index import build_ni_index
+                    ni = build_ni_index(dataset, d_max=cfg.d_check)
+                self.engine = Engine(dataset, ni, cfg, stats=stats)
         else:
-            self.engine = make_engine(graph, variant, ni=ni, stats=stats,
+            self.engine = make_engine(dataset, variant, ni=ni, stats=stats,
                                       thresholds=thresholds, impl=impl)
+        self.dataset = self.engine.dataset
         # the calibrator mutates Thresholds/CostModel in place so every
         # later plan sees calibrated values — give the engine private
         # copies first, so a caller-supplied (possibly shared or tuned)
@@ -169,6 +189,12 @@ class QueryServer:
                                       self.engine.cfg.cost_model)
                            if calibrate else None)
         self.plan_cache = PlanCache(plan_cache_size)
+        # the result cache is opt-in (size 0 disables): serving rows
+        # without execution also skips calibration observations and the
+        # governor, which a tuning-focused deployment may not want
+        self.result_cache = (ResultCache(result_cache_size,
+                                         result_cache_bytes)
+                             if result_cache_size else None)
         self.engine.reach_cache = ReachCache(max_entries=reach_cache_size,
                                              max_bytes=reach_cache_bytes)
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -179,7 +205,7 @@ class QueryServer:
         self.batcher = ShapeBatcher(metrics=self.metrics)
         self.batching = batching
         self.governor = Governor(governor) if governor is not None else None
-        self.dataset_id = dataset_key(graph)
+        self.dataset_id = self.dataset.cache_key
         self._pending: list[ResultFuture] = []
         self._rollup: dict = {}
         self.queries_served = 0
@@ -280,6 +306,25 @@ class QueryServer:
                 self.tracer.finish(f.trace_id)
                 continue
             self.metrics.histogram("prepare_s").observe(prep_s)
+            if self.result_cache is not None:
+                cached = self.result_cache.get(self.dataset_id,
+                                               pq.fingerprint)
+                if cached is not None:
+                    # exact repeat on the current dataset version: serve
+                    # the stored canonical rows without any engine work
+                    # (no batcher, no governor, no calibration observe —
+                    # nothing executed, so there is nothing to learn from)
+                    cols, rows = cached
+                    qs = QueryStats(used_check=pq.use_check,
+                                    cache_hit=True, result_cache_hit=True,
+                                    plan=pq.decision)
+                    qs.candidates_before = sum(pq.cand_sizes.values())
+                    self.metrics.counter("result_cache_hits").inc()
+                    self._observe_stats(qs)
+                    self._finish(f, MatchResult(cols=cols, rows=rows,
+                                                stats=qs),
+                                 order, time.perf_counter() - t0)
+                    continue
             prepped.append((f, pq, order, prep_s))
         stopper = self._flush_stopper(t_flush)
         if self.batching:
@@ -377,6 +422,14 @@ class QueryServer:
             if self.calibrator is not None:
                 self.calibrator.observe(res.stats)
             self._observe_stats(res.stats)
+            if self.result_cache is not None and not res.stats.truncated \
+                    and not res.stats.degraded_steps:
+                # only clean primary results are cached: truncated rows
+                # are not THE answer, and degraded-rung results came from
+                # a sibling plan we don't want to pin as the repeat answer
+                self.result_cache.put(self.dataset_id, pq.fingerprint,
+                                      res.cols, res.rows,
+                                      bool(pq.query.connections), pq.iv)
             seg.set(outcome="ok", warm=bool(res.stats.cache_hit),
                     rows=res.count)
         return res, lat
@@ -594,6 +647,104 @@ class QueryServer:
                     d[kk] = d.get(kk, 0) + vv
 
     # ------------------------------------------------------------------ #
+    def apply_delta(self, inserts=(), deletes=(),
+                    churn_threshold: float = 0.05) -> dict:
+        """Absorb a triple delta into the served dataset WITHOUT a cold
+        start: pending work is flushed, `Dataset.apply_delta` produces
+        the next immutable dataset version (incremental when the delta is
+        small, full rebuild past the churn threshold), and every warm
+        structure is migrated rather than thrown away:
+
+          * device-resident NI tensors and the bloom prefilter carry over
+            for every NI entry the incremental path left untouched
+            (shared by object identity with the old dataset);
+          * reach-cache entries survive unless their stored reach set (or
+            seed node) intersects the delta's edge endpoints; a rebuild
+            clears the cache;
+          * plan-cache entries are re-keyed to the new versioned dataset
+            id, their learned state kept when the delta provably missed
+            their candidate intervals AND the recomputed §4.3 decision is
+            unchanged (otherwise the entry stays cached but its learned
+            masks/orders reset); a rebuild drops all plans — node ids may
+            have been renumbered;
+          * result-cache entries survive only with an untouched interval
+            footprint and no connection edges (see ResultCache.migrate);
+          * governor rung memory and breaker state are fingerprint-keyed
+            and survive as-is (worst case the next probe re-learns).
+
+        The previous Dataset object is untouched — anything still holding
+        it keeps getting pre-delta answers (snapshot isolation).  Returns
+        an info dict: the delta mode/reason plus per-cache migration
+        counts."""
+        self.flush()
+        old_ds, old_engine = self.dataset, self.engine
+        old_id = self.dataset_id
+        new_ds = old_ds.apply_delta(inserts, deletes,
+                                    churn_threshold=churn_threshold)
+        # same cfg object: the Calibrator keeps mutating the live
+        # thresholds/cost model the new engine plans with
+        eng = Engine(new_ds, old_engine.cfg)
+        eng.tracer = self.tracer
+        for (sign, d), dev in old_engine._dev_cache.items():
+            if new_ds.ni.entries.get(sign * d) is \
+                    old_ds.ni.entries.get(sign * d):
+                eng._dev_cache[(sign, d)] = dev
+        if new_ds.ni.entries.get(1) is old_ds.ni.entries.get(1):
+            eng._bloom = old_engine._bloom
+        rc = old_engine.reach_cache
+        if new_ds.touched is None:
+            reach_dropped = rc.clear()
+        else:
+            reach_dropped = rc.invalidate_delta(new_ds.delta_endpoints)
+        eng.reach_cache = rc
+        if self.calibrator is not None:
+            self.calibrator.note_delta()
+        new_version = self._version()
+        new_id = new_ds.cache_key
+        plans_kept = plans_invalidated = 0
+        if new_ds.touched is None:
+            _, plans_dropped = self.plan_cache.migrate(
+                old_id, new_id, revalidate=lambda pq: False)
+        else:
+            touched = new_ds.touched
+
+            def _reval(pq):
+                nonlocal plans_kept, plans_invalidated
+                ok = eng.revalidate_delta(pq, touched)
+                ok = eng.revalidate(pq, new_version) and ok
+                self.plan_cache.revalidations += 1
+                if ok:
+                    plans_kept += 1
+                else:
+                    plans_invalidated += 1
+                    self.plan_cache.invalidations += 1
+                return True
+
+            _, plans_dropped = self.plan_cache.migrate(old_id, new_id,
+                                                       revalidate=_reval)
+        results_kept = results_dropped = 0
+        if self.result_cache is not None:
+            results_kept, results_dropped = self.result_cache.migrate(
+                old_id, new_id, new_ds.touched)
+        self.dataset = new_ds
+        self.dataset_id = new_id
+        self.engine = eng
+        self.metrics.counter("deltas_applied").inc()
+        self.metrics.gauge("dataset_version").set(new_ds.version)
+        info = dict(new_ds.delta_info)
+        info.update({
+            "version": new_ds.version,
+            "dataset_id": new_id,
+            "plans_kept": plans_kept,
+            "plans_invalidated": plans_invalidated,
+            "plans_dropped": plans_dropped,
+            "reach_dropped": reach_dropped,
+            "results_kept": results_kept,
+            "results_dropped": results_dropped,
+        })
+        return info
+
+    # ------------------------------------------------------------------ #
     def save_snapshot(self, path) -> dict:
         """Serialize every piece of learned serving state (calibrator
         separators/scales, governor rung memory + breaker, plan-cache
@@ -679,7 +830,16 @@ class QueryServer:
                 "n_warm": warm.count,
             },
             "metrics": m.snapshot(),
+            "dataset": {
+                "id": self.dataset_id,
+                "digest": self.dataset.digest,
+                "version": self.dataset.version,
+                "nodes": self.dataset.num_nodes,
+                "edges": self.dataset.num_edges,
+            },
             "plan_cache": self.plan_cache.snapshot(),
+            "result_cache": (None if self.result_cache is None
+                             else self.result_cache.snapshot()),
             "reach_cache": {
                 "entries": len(rc), "hits": rc.hits, "misses": rc.misses,
                 "evictions": rc.evictions,

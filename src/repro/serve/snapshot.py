@@ -24,9 +24,11 @@ Safety invariants:
     is left exactly as it was (a clean cold start), never serving a
     wrong or stale answer.  Restore is all-or-nothing: every object is
     rebuilt and validated BEFORE any server state is touched.
-  * The dataset is identified by `plan_cache.dataset_key` (a content
-    digest of the full edge arrays), so a snapshot can never replay
-    another graph's masks or join sizes onto a lookalike graph.
+  * The dataset is identified by its content digest (`Dataset.digest`,
+    over the full edge arrays) PLUS its delta version, so a snapshot can
+    never replay another graph's masks or join sizes onto a lookalike
+    graph, nor onto a same-origin dataset that has since absorbed
+    `apply_delta` updates (reason 'version').
   * Device arrays are never serialized: candidate masks travel in host
     (numpy) form and `Engine._candidate_masks` rebuilds the device side
     lazily on first post-restore use.
@@ -53,7 +55,7 @@ FORMAT_VERSION = 1
 class SnapshotError(ServingError):
     """A snapshot could not be written or safely restored.  `reason` is
     one of: 'io', 'truncated', 'magic', 'format_version', 'checksum',
-    'undecodable', 'dataset', 'stale', 'payload'."""
+    'undecodable', 'dataset', 'version', 'stale', 'payload'."""
 
     def __init__(self, reason: str, detail: str):
         self.reason = reason
@@ -124,7 +126,8 @@ def _collect(server) -> dict:
             continue
         plans.append((fp, _pq_to_blob(pq)))
     return {
-        "dataset_key": server.dataset_id,
+        "dataset_key": server.dataset.digest,
+        "dataset_version": server.dataset.version,
         "saved_at": time.time(),
         "calibration_version": server._version(),
         "calibrator": (None if server.calibrator is None
@@ -158,7 +161,8 @@ def save_snapshot(server, path) -> dict:
             pass
         raise SnapshotError("io", str(e)) from e
     return {"path": path, "format_version": FORMAT_VERSION,
-            "dataset_key": server.dataset_id,
+            "dataset_key": server.dataset.digest,
+            "dataset_version": server.dataset.version,
             "plans": len(data["plans"]),
             "bytes": len(head) + len(payload)}
 
@@ -201,11 +205,24 @@ def restore_snapshot(server, path, max_age_s: float | None = None) -> dict:
     staleness past `max_age_s`."""
     path = os.fspath(path)
     data = _read_payload(path)
-    if data["dataset_key"] != server.dataset_id:
+    # The delta version is checked before the content digest: once the
+    # server's dataset has absorbed apply_delta round-trips the snapshot
+    # never saw, "this snapshot predates your deltas" is the actionable
+    # error even though the content digest (which tracks the edge set)
+    # has necessarily moved too.  A digest mismatch at the SAME version
+    # means a genuinely different dataset.  (Pre-version payloads carry
+    # no dataset_version: they could only have been taken at version 0.)
+    snap_version = int(data.get("dataset_version", 0))
+    if snap_version != server.dataset.version:
+        raise SnapshotError(
+            "version",
+            f"snapshot at dataset version {snap_version}, server is at "
+            f"v{server.dataset.version}")
+    if data["dataset_key"] != server.dataset.digest:
         raise SnapshotError(
             "dataset",
             f"snapshot for {data['dataset_key']!r}, server is on "
-            f"{server.dataset_id!r}")
+            f"{server.dataset.digest!r}")
     age = time.time() - float(data.get("saved_at", 0.0))
     if max_age_s is not None and age > max_age_s:
         raise SnapshotError("stale",

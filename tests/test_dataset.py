@@ -1,0 +1,271 @@
+"""Dataset facade + delta ingest: incremental maintenance must be
+indistinguishable from a from-scratch rebuild.
+
+The oracle for every delta test is `Dataset.build` on the post-delta
+triple list: `apply_delta`'s incremental path must reproduce its digest,
+edge arrays, CSRs, NI entries, and stats bit-for-bit, and engines over
+both must return byte-identical results across the §4.3 check grid.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (Dataset, Engine, ENGINE_VARIANTS, content_digest,
+                        interval_footprint_hit, make_engine, csr_patch)
+from repro.data import random_graph, random_query
+
+
+# --------------------------- helpers ----------------------------------- #
+def _mk(seed=3, n_nodes=150, n_edges=450, n_preds=5):
+    g = random_graph(n_nodes=n_nodes, n_edges=n_edges, n_preds=n_preds,
+                     n_literals=25, seed=seed)
+    return Dataset.build(g, variant="rdf_h")
+
+
+def _recombine_delta(ds, rng, n_ins=4, n_del=4):
+    """A delta the incremental path can absorb: inserts recombine
+    subject/object pairs within one predicate (kinds stay legal), and
+    deletes only hit edges whose endpoints stay mentioned afterwards."""
+    g = ds.graph
+    lab, prd = g.labels, g.predicates
+    subj = np.bincount(g.src, minlength=g.num_nodes)
+    ment = subj + np.bincount(g.dst, minlength=g.num_nodes)
+    safe = np.flatnonzero((subj[g.src] >= 2) & (ment[g.src] >= 3)
+                          & (ment[g.dst] >= 3))
+    dels = rng.choice(safe, size=min(n_del, safe.size), replace=False)
+    deletes = [(lab[g.src[i]], prd[g.pred[i]], lab[g.dst[i]])
+               for i in dels]
+    picks = rng.choice(g.num_edges, size=2 * n_ins, replace=False)
+    inserts = [(lab[g.src[i]], prd[g.pred[i]], lab[g.dst[j]])
+               for i, j in zip(picks, np.roll(picks, 1))
+               if g.pred[i] == g.pred[j]]
+    return inserts, deletes
+
+
+def _oracle(ds, inserts, deletes):
+    """From-scratch Dataset on the post-delta triples, in the exact edge
+    order apply_delta's incremental path must reproduce."""
+    post = ds._post_triples(inserts, deletes)
+    return Dataset.from_triples(
+        post, literal_objects=ds.literal_forced, variant="rdf_h")
+
+
+# ------------------------- construction API ----------------------------- #
+def test_build_owns_all_derived_state():
+    ds = _mk()
+    assert ds.version == 0
+    assert ds.digest == content_digest(ds.graph)
+    assert ds.cache_key == f"{ds.digest}:v0"
+    assert ds.ni.d_max == ENGINE_VARIANTS["rdf_h"]["d"]
+    assert ds.stats is not None and ds.idmap is not None
+
+
+def test_engine_accepts_dataset_and_rejects_sidecar_state():
+    ds = _mk()
+    eng = Engine(ds)
+    assert eng.dataset is ds and eng.graph is ds.graph
+    with pytest.raises(ValueError, match="Dataset"):
+        make_engine(ds, "rdf_h", stats=ds.stats)
+    # variant demanding a deeper NI than the dataset carries
+    with pytest.raises(ValueError, match="hops"):
+        make_engine(ds, "h3")
+
+
+def test_make_engine_graph_shim_warns_and_matches():
+    g = random_graph(n_nodes=100, n_edges=300, n_preds=4, seed=7)
+    ds = Dataset.build(g, variant="rdf_h")
+    q = random_query(g, size=4, seed=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = make_engine(g, "rdf_h")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert (legacy.execute(q).result_set()
+            == make_engine(ds, "rdf_h").execute(q).result_set())
+
+
+# --------------------------- csr_patch --------------------------------- #
+def test_csr_patch_matches_full_rebuild():
+    rng = np.random.default_rng(0)
+    g = random_graph(n_nodes=80, n_edges=240, n_preds=4, seed=11)
+    from repro.core.graph import _csr
+    dels = rng.choice(g.num_edges, size=10, replace=False)
+    keep = np.setdiff1d(np.arange(g.num_edges), dels)
+    n_ins = 12
+    ins_src = rng.integers(0, g.num_nodes, n_ins).astype(np.int32)
+    ins_dst = rng.integers(0, g.num_nodes, n_ins).astype(np.int32)
+    ins_pred = rng.integers(0, 4, n_ins).astype(np.int32)
+    new_src = np.concatenate([g.src[keep], ins_src])
+    new_dst = np.concatenate([g.dst[keep], ins_dst])
+    new_pred = np.concatenate([g.pred[keep], ins_pred])
+    want = _csr(g.num_nodes, new_src, new_dst, new_pred)
+    got = csr_patch(g.out_csr, g.num_nodes, 4,
+                    g.src[dels], g.dst[dels], g.pred[dels],
+                    ins_src, ins_dst, ins_pred)
+    assert got is not None
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_csr_patch_declines_on_pack_overflow():
+    g = random_graph(n_nodes=40, n_edges=80, n_preds=2, seed=5)
+    huge = 2 ** 33
+    out = csr_patch(g.out_csr, huge, huge,
+                    g.src[:1], g.dst[:1], g.pred[:1],
+                    g.src[:0], g.dst[:0], g.pred[:0])
+    assert out is None
+
+
+# ------------------------ delta == rebuild ------------------------------ #
+def test_apply_delta_incremental_matches_rebuild_bitwise():
+    ds = _mk(seed=9)
+    rng = np.random.default_rng(1)
+    inserts, deletes = _recombine_delta(ds, rng, n_ins=5, n_del=5)
+    new = ds.apply_delta(inserts, deletes)
+    assert new.delta_info["mode"] == "incremental"
+    assert new.version == 1 and new.cache_key.endswith(":v1")
+    want = _oracle(ds, inserts, deletes)
+    assert new.digest == want.digest
+    g1, g2 = new.graph, want.graph
+    np.testing.assert_array_equal(g1.src, g2.src)
+    np.testing.assert_array_equal(g1.dst, g2.dst)
+    np.testing.assert_array_equal(g1.pred, g2.pred)
+    np.testing.assert_array_equal(g1.pred_kind, g2.pred_kind)
+    for csr1, csr2 in ((g1.out_csr, g2.out_csr), (g1.in_csr, g2.in_csr)):
+        for a, b in zip(csr1, csr2):
+            np.testing.assert_array_equal(a, b)
+    s1, s2 = new.stats, want.stats
+    np.testing.assert_array_equal(s1.pred_selectivity, s2.pred_selectivity)
+    assert s1.coherence == s2.coherence
+    assert s1.specialty == s2.specialty
+    assert s1.diversity == s2.diversity
+    assert s1.literal_selectivity.keys() == s2.literal_selectivity.keys()
+    for k in s1.literal_selectivity:
+        np.testing.assert_array_equal(s1.literal_selectivity[k],
+                                      s2.literal_selectivity[k])
+    for key, e2 in want.ni.entries.items():
+        e1 = new.ni.entries[key]
+        np.testing.assert_array_equal(e1.count, e2.count)
+        np.testing.assert_array_equal(e1.overflow, e2.overflow)
+        for r in range(e1.ids.shape[0]):
+            if not e1.overflow[r]:
+                assert (set(e1.ids[r][:e1.count[r]].tolist())
+                        == set(e2.ids[r][:e2.count[r]].tolist()))
+
+
+@pytest.mark.parametrize("policy", ["always", "never", "selective"])
+@pytest.mark.parametrize("plan_mode", ["cost", "greedy"])
+def test_delta_query_parity_grid(policy, plan_mode):
+    """Randomized oracle: engines over apply_delta and over a rebuilt
+    Dataset return byte-identical results across check x plan modes."""
+    ds = _mk(seed=21, n_nodes=120, n_edges=380)
+    rng = np.random.default_rng(7)
+    inserts, deletes = _recombine_delta(ds, rng)
+    new = ds.apply_delta(inserts, deletes)
+    assert new.delta_info["mode"] == "incremental"
+    want = _oracle(ds, inserts, deletes)
+
+    def eng(d):
+        e = make_engine(d, "rdf_h", impl="ref")
+        e.cfg.check_policy = policy
+        e.cfg.plan_mode = plan_mode
+        return e
+    ea, eb = eng(new), eng(want)
+    for i in range(4):
+        q = random_query(new.graph, size=4, seed=400 + i,
+                         n_connection=i % 2, d_c=2)
+        ra, rb = ea.execute(q), eb.execute(q)
+        assert ra.cols == rb.cols
+        np.testing.assert_array_equal(
+            np.sort(ra.rows, axis=0) if ra.rows.size else ra.rows,
+            np.sort(rb.rows, axis=0) if rb.rows.size else rb.rows)
+
+
+def test_apply_delta_is_pure_snapshot_isolation():
+    """apply_delta returns fresh objects: a query against the OLD
+    Dataset after the delta still sees pre-delta results."""
+    ds = _mk(seed=13)
+    q = random_query(ds.graph, size=4, seed=77)
+    before = make_engine(ds, "rdf_h").execute(q).result_set()
+    digest0 = ds.digest
+    edges0 = ds.graph.num_edges
+    rng = np.random.default_rng(3)
+    inserts, deletes = _recombine_delta(ds, rng)
+    new = ds.apply_delta(inserts, deletes)
+    assert new is not ds and new.graph is not ds.graph
+    assert ds.version == 0 and ds.digest == digest0
+    assert ds.graph.num_edges == edges0
+    after_old = make_engine(ds, "rdf_h").execute(q).result_set()
+    assert after_old == before
+    assert new.digest != digest0
+
+
+# ------------------------- rebuild fallbacks ---------------------------- #
+def test_fallback_new_label():
+    ds = _mk()
+    new = ds.apply_delta(inserts=[("Zz/new-subject-404",
+                                   ds.graph.predicates[0],
+                                   ds.graph.labels[0])])
+    assert new.delta_info["mode"] == "rebuild"
+    assert new.delta_info["reason"] == "new-label"
+    assert new.version == 1 and new.touched is None
+
+
+def test_fallback_churn_threshold():
+    ds = _mk()
+    g = ds.graph
+    lab, prd = g.labels, g.predicates
+    picks = np.arange(g.num_edges)
+    inserts = [(lab[g.src[i]], prd[g.pred[i]], lab[g.dst[j]])
+               for i, j in zip(picks, np.roll(picks, 1))
+               if g.pred[i] == g.pred[j]][:100]
+    new = ds.apply_delta(inserts=inserts, churn_threshold=0.01)
+    assert new.delta_info["mode"] == "rebuild"
+    assert new.delta_info["reason"] == "churn"
+    # the same delta under a permissive threshold goes incremental and
+    # still matches the rebuild bit-for-bit
+    inc = ds.apply_delta(inserts=inserts, churn_threshold=1.0)
+    assert inc.delta_info["mode"] == "incremental"
+    assert inc.digest == new.digest
+
+
+def test_fallback_label_dropped():
+    ds = _mk()
+    g = ds.graph
+    # delete every edge touching the node with the fewest mentions so
+    # its label vanishes (= id renumbering territory)
+    ment = (np.bincount(g.src, minlength=g.num_nodes)
+            + np.bincount(g.dst, minlength=g.num_nodes))
+    ment[ment == 0] = np.iinfo(ment.dtype).max
+    victim = int(np.argmin(ment))
+    idx = np.flatnonzero((g.src == victim) | (g.dst == victim))
+    deletes = [(g.labels[g.src[i]], g.predicates[g.pred[i]],
+                g.labels[g.dst[i]]) for i in idx]
+    new = ds.apply_delta(deletes=deletes)
+    assert new.delta_info["mode"] == "rebuild"
+    assert new.delta_info["reason"] in ("label-dropped", "node-kind")
+    q = random_query(new.graph, size=3, seed=5)
+    want = _oracle(ds, [], deletes)
+    assert (make_engine(new, "rdf_h").execute(q).result_set()
+            == make_engine(want, "rdf_h").execute(q).result_set())
+
+
+def test_delete_unknown_triple_is_noop_insert_existing_duplicates():
+    ds = _mk()
+    g = ds.graph
+    new = ds.apply_delta(deletes=[("No/such", "no-pred", "No/where")])
+    assert new.graph.num_edges == g.num_edges
+    assert new.version == 1
+    t0 = (g.labels[g.src[0]], g.predicates[g.pred[0]], g.labels[g.dst[0]])
+    dup = ds.apply_delta(inserts=[t0])
+    assert dup.graph.num_edges == g.num_edges + 1   # multigraph append
+
+
+# ---------------------- footprint predicate ----------------------------- #
+def test_interval_footprint_hit():
+    touched = np.array([5, 17, 40], dtype=np.int64)
+    assert interval_footprint_hit(None, touched)          # unknown -> hit
+    assert not interval_footprint_hit([], touched)
+    assert interval_footprint_hit([(15, 20)], touched)
+    assert not interval_footprint_hit([(18, 40)], touched)  # hi exclusive
+    assert interval_footprint_hit([(0, 1), (40, 41)], touched)

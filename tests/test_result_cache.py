@@ -1,0 +1,272 @@
+"""ResultCache + server delta migration: exact repeats must be served
+without engine execution, and never across a dataset change they can't
+prove themselves immune to.
+
+Monkeypatch-proof in the test_snapshot.py style: the engine execution
+entry points are poisoned, so a "hit" that secretly re-executes fails
+loudly rather than silently passing on equal results.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Dataset, interval_footprint_hit, make_engine
+from repro.data import random_graph, random_query
+from repro.serve import QueryServer, ResultCache, SnapshotError
+
+
+# --------------------------- fixtures ---------------------------------- #
+@pytest.fixture()
+def dataset():
+    g = random_graph(n_nodes=150, n_edges=450, n_preds=5,
+                     n_literals=25, seed=3)
+    return Dataset.build(g, variant="rdf_h")
+
+
+def _server(ds, **kw):
+    kw.setdefault("result_cache_size", 32)
+    kw.setdefault("calibrate", False)
+    return QueryServer(ds, impl="ref", **kw)
+
+
+def _recombine_delta(ds, rng, n_ins=4, n_del=4):
+    g = ds.graph
+    lab, prd = g.labels, g.predicates
+    subj = np.bincount(g.src, minlength=g.num_nodes)
+    ment = subj + np.bincount(g.dst, minlength=g.num_nodes)
+    safe = np.flatnonzero((subj[g.src] >= 2) & (ment[g.src] >= 3)
+                          & (ment[g.dst] >= 3))
+    dels = rng.choice(safe, size=min(n_del, safe.size), replace=False)
+    deletes = [(lab[g.src[i]], prd[g.pred[i]], lab[g.dst[i]])
+               for i in dels]
+    picks = rng.choice(g.num_edges, size=2 * n_ins, replace=False)
+    inserts = [(lab[g.src[i]], prd[g.pred[i]], lab[g.dst[j]])
+               for i, j in zip(picks, np.roll(picks, 1))
+               if g.pred[i] == g.pred[j]]
+    return inserts, deletes
+
+
+def _poison_execution(monkeypatch, srv):
+    def _boom(*a, **k):
+        raise AssertionError("engine execution re-entered on a repeat "
+                             "the result cache should have served")
+    monkeypatch.setattr(srv.engine, "execute_prepared", _boom)
+
+
+# ------------------------- unit: the cache ------------------------------ #
+def test_result_cache_lru_and_bytes_bounds():
+    rc = ResultCache(max_entries=2, max_bytes=10_000)
+    rows = np.zeros((100, 3), dtype=np.int32)
+    iv = [(0, 10), (20, 30), (40, 50)]
+    rc.put("ds:v0", "a", (0, 1, 2), rows, False, iv)
+    rc.put("ds:v0", "b", (0, 1, 2), rows, False, iv)
+    rc.put("ds:v0", "c", (0, 1, 2), rows, False, iv)   # evicts "a"
+    assert len(rc) == 2 and rc.evictions == 1
+    assert rc.get("ds:v0", "a") is None
+    cols, got = rc.get("ds:v0", "b")
+    assert cols == (0, 1, 2)
+    np.testing.assert_array_equal(got, rows)
+    assert rc.hits == 1 and rc.misses == 1
+    # an oversized row block stays as a cache-of-one, no thrash
+    rc2 = ResultCache(max_entries=8, max_bytes=100)
+    rc2.put("ds:v0", "big", (0,), rows, False, iv)
+    assert len(rc2) == 1 and rc2.total_bytes == rows.nbytes
+
+
+def test_result_cache_migrate_footprint_rules():
+    rc = ResultCache(max_entries=8)
+    rows = np.zeros((4, 2), dtype=np.int32)
+    rc.put("d:v0", "clean", (0, 1), rows, False, [(0, 5)])
+    rc.put("d:v0", "hit", (0, 1), rows, False, [(10, 20)])
+    rc.put("d:v0", "conn", (0, 1), rows, True, [(0, 5)])
+    touched = np.array([12, 40], dtype=np.int64)
+    kept, dropped = rc.migrate("d:v0", "d:v1", touched)
+    assert (kept, dropped) == (1, 2)
+    assert rc.get("d:v1", "clean") is not None
+    assert rc.get("d:v1", "hit") is None       # interval contains 12
+    assert rc.get("d:v1", "conn") is None      # connection edges drop
+    assert rc.get("d:v0", "clean") is None     # old id unreachable
+    # rebuild (touched None) drops everything
+    rc.put("d:v1", "x", (0, 1), rows, False, [(0, 5)])
+    kept, dropped = rc.migrate("d:v1", "d:v2", None)
+    assert kept == 0 and dropped >= 1
+
+
+# ------------------ serving: repeats skip the engine -------------------- #
+def test_repeat_served_without_execution(dataset, monkeypatch):
+    srv = _server(dataset)
+    q = random_query(dataset.graph, size=4, seed=11)
+    first = srv.query(q)
+    assert not first.stats.result_cache_hit
+    _poison_execution(monkeypatch, srv)
+    again = srv.query(q)
+    assert again.stats.result_cache_hit and again.stats.cache_hit
+    assert again.cols == first.cols
+    np.testing.assert_array_equal(again.rows, first.rows)
+    t = srv.telemetry()
+    assert t["result_cache"]["hits"] == 1
+    assert t["metrics"]["counters"]["result_cache_hits"] == 1
+
+
+def test_isomorphic_renumbering_hits_and_remaps(dataset, monkeypatch):
+    """The cache keys on the canonical fingerprint: a renumbered
+    isomorphic template is a hit, with columns remapped per caller."""
+    from repro.core.query import QueryTemplate, QueryEdge
+    q = random_query(dataset.graph, size=4, seed=21)
+    perm = [2, 0, 3, 1][:q.num_nodes]
+    perm += list(range(len(perm), q.num_nodes))
+    inv = {orig: new for new, orig in enumerate(perm)}
+    q2 = QueryTemplate(
+        keywords=[q.keywords[perm[i]] for i in range(q.num_nodes)],
+        edges=[QueryEdge(inv[e.src], inv[e.dst], e.pred)
+               for e in q.edges],
+        connections=list(q.connections))
+    oracle = make_engine(dataset, "rdf_h", impl="ref")
+    want = oracle.execute(q2).result_set()
+    srv = _server(dataset)
+    srv.query(q)
+    _poison_execution(monkeypatch, srv)
+    r2 = srv.query(q2)
+    assert r2.stats.result_cache_hit
+    assert r2.result_set() == want
+
+
+def test_result_cache_off_by_default(dataset):
+    srv = QueryServer(dataset, impl="ref", calibrate=False)
+    q = random_query(dataset.graph, size=4, seed=11)
+    srv.query(q)
+    r = srv.query(q)
+    assert srv.result_cache is None
+    assert not r.stats.result_cache_hit
+    assert srv.telemetry()["result_cache"] is None
+
+
+# ----------------------- delta migration -------------------------------- #
+def test_delta_invalidates_and_repeat_is_correct(dataset):
+    """After a delta, a repeat must reflect the NEW data — either via a
+    provably-clean migrated entry or by re-execution — and exact repeats
+    on the new version hit again."""
+    srv = _server(dataset)
+    rng = np.random.default_rng(5)
+    q = random_query(dataset.graph, size=4, seed=31)
+    srv.query(q)
+    inserts, deletes = _recombine_delta(dataset, rng)
+    info = srv.apply_delta(inserts, deletes)
+    assert info["mode"] == "incremental"
+    assert srv.dataset.version == 1
+    want = make_engine(srv.dataset, "rdf_h",
+                       impl="ref").execute(q).result_set()
+    r1 = srv.query(q)
+    assert r1.result_set() == want
+    r2 = srv.query(q)
+    assert r2.stats.result_cache_hit and r2.result_set() == want
+
+
+def test_footprint_clean_entry_survives_delta(monkeypatch):
+    """An entry whose candidate intervals provably miss the delta's
+    touched set keeps serving without execution across the version bump;
+    a connection-edge entry never does."""
+    # a sparse graph + exact-label keywords → width-1 intervals, so
+    # plenty of single-edge deltas have a provably-disjoint footprint
+    g = random_graph(n_nodes=800, n_edges=1600, n_preds=6,
+                     n_literals=40, seed=7)
+    ds = Dataset.build(g, variant="rdf_h")
+    srv = _server(ds)
+    q = random_query(g, size=4, seed=31, exact_nodes=True)
+    qc = random_query(g, size=4, seed=32, n_connection=1, d_c=2)
+    srv.query(q)
+    srv.query(qc)
+    from repro.serve import canonicalize
+    _, _, fp = canonicalize(q)
+    pq = srv.plan_cache.peek(srv.dataset_id, fp)
+    iv = [(int(lo), int(hi)) for lo, hi in pq.iv]
+    # find a single-edge delete whose touched set misses every interval
+    subj = np.bincount(g.src, minlength=g.num_nodes)
+    ment = subj + np.bincount(g.dst, minlength=g.num_nodes)
+    safe = np.flatnonzero((subj[g.src] >= 2) & (ment[g.src] >= 3)
+                          & (ment[g.dst] >= 3))
+    chosen = None
+    for i in safe:
+        trial = ds.apply_delta(
+            deletes=[(g.labels[g.src[i]], g.predicates[g.pred[i]],
+                      g.labels[g.dst[i]])])
+        if trial.delta_info["mode"] == "incremental" \
+                and not interval_footprint_hit(iv, trial.touched):
+            chosen = [(g.labels[g.src[i]], g.predicates[g.pred[i]],
+                       g.labels[g.dst[i]])]
+            break
+    assert chosen is not None, "expected a footprint-clean delta"
+    info = srv.apply_delta(deletes=chosen)
+    assert info["mode"] == "incremental"
+    assert info["results_kept"] >= 1
+    _poison_execution(monkeypatch, srv)
+    r = srv.query(q)                      # survived entry, no execution
+    assert r.stats.result_cache_hit
+    with pytest.raises(Exception):        # connection entry was dropped
+        srv.query(qc)
+
+
+def test_plans_revalidated_not_reprepared_after_delta(dataset,
+                                                     monkeypatch):
+    """Unaffected PlanCache entries migrate across the delta: the next
+    request neither misses the cache nor re-enters Engine.prepare."""
+    srv = QueryServer(dataset, impl="ref", calibrate=False)
+    pool = [random_query(dataset.graph, size=4, seed=41 + i)
+            for i in range(3)]
+    for q in pool:
+        srv.query(q)
+    misses0 = srv.plan_cache.snapshot()["misses"]
+    rng = np.random.default_rng(9)
+    inserts, deletes = _recombine_delta(dataset, rng)
+    info = srv.apply_delta(inserts, deletes)
+    assert info["mode"] == "incremental"
+    from repro.serve import canonicalize
+    assert info["plans_kept"] + info["plans_invalidated"] == len(
+        {canonicalize(q)[2] for q in pool})
+    oracle = make_engine(srv.dataset, "rdf_h", impl="ref")
+    want = [oracle.execute(q).result_set() for q in pool]
+
+    def _boom(*a, **k):
+        raise AssertionError("Engine.prepare re-entered for a migrated "
+                             "plan-cache entry")
+    monkeypatch.setattr(srv.engine, "prepare", _boom)
+    for q, w in zip(pool, want):
+        r = srv.query(q)
+        assert r.result_set() == w
+    t = srv.plan_cache.snapshot()
+    assert t["misses"] == misses0          # no post-delta cold misses
+    assert t["revalidations"] >= len(pool)
+
+
+def test_rebuild_delta_drops_all_plans_and_results(dataset):
+    srv = _server(dataset)
+    q = random_query(dataset.graph, size=4, seed=51)
+    srv.query(q)
+    info = srv.apply_delta(
+        inserts=[("Zz/brand-new-node", dataset.graph.predicates[0],
+                  dataset.graph.labels[0])])
+    assert info["mode"] == "rebuild"
+    assert info["plans_dropped"] >= 1 and info["plans_kept"] == 0
+    assert info["results_dropped"] >= 1 and info["results_kept"] == 0
+    want = make_engine(srv.dataset, "rdf_h",
+                       impl="ref").execute(q).result_set()
+    assert srv.query(q).result_set() == want
+
+
+# ----------------------- snapshot versioning ---------------------------- #
+def test_snapshot_rejects_version_mismatch(dataset, tmp_path):
+    srv = _server(dataset)
+    q = random_query(dataset.graph, size=4, seed=61)
+    srv.query(q)
+    path = tmp_path / "v0.snap"
+    manifest = srv.save_snapshot(path)
+    assert manifest["dataset_version"] == 0
+    rng = np.random.default_rng(13)
+    inserts, deletes = _recombine_delta(dataset, rng)
+    srv.apply_delta(inserts, deletes)
+    with pytest.raises(SnapshotError) as ei:
+        srv.restore_snapshot(path)
+    assert ei.value.reason == "version"
+    # same-version server restores fine
+    srv2 = _server(dataset)
+    srv2.restore_snapshot(path)
+    assert srv2.plan_cache.snapshot()["entries"] >= 1

@@ -487,7 +487,7 @@ def test_replay_estimator_replays_then_falls_back():
 # ------------------------- QueryStats.to_dict --------------------------- #
 def test_query_stats_to_dict_schema_pinned():
     expected = {
-        "used_check", "truncated", "cache_hit",
+        "used_check", "truncated", "cache_hit", "result_cache_hit",
         "candidates_before", "candidates_after",
         "prepare_time", "check_time", "match_time", "conn_time",
         "total_time", "join_work", "dtree_work",
